@@ -1,0 +1,24 @@
+"""Paper Fig. 10: II and DSP vs reuse factor R_h on the Zynq 7045 (small AE)."""
+
+from __future__ import annotations
+
+from repro.core.balance import design_at_ii, r_h_for_ii
+from repro.core.ii_model import DSP_TOTAL, GW_SMALL, ZYNQ_7045, uniform_design
+
+
+def run() -> list[tuple]:
+    rows = []
+    print("\n== Fig. 10: II / DSP vs R_h (small AE on Zynq 7045, 900 DSPs) ==")
+    print(f"{'R_h':>4} {'ii':>4} {'II(TS=8)':>9} {'DSP bal':>8} {'fits?':>6}")
+    for r_h in range(1, 11):
+        d = uniform_design(GW_SMALL, r_h, ZYNQ_7045, 8, balanced=True)
+        ii = d.layer_iis()[0]
+        fits = d.fits(DSP_TOTAL["zynq7045"])
+        print(f"{r_h:>4} {ii:>4} {d.ii_sys_cycles():>9} {d.dsp_used():>8} {str(fits):>6}")
+        rows.append((f"fig10.rh{r_h}", 0.0,
+                     f"ii={ii}|dsp={d.dsp_used()}|fits={fits}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

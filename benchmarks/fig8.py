@@ -1,0 +1,28 @@
+"""Paper Fig. 8: Pareto frontier (II vs DSP), naive vs balanced, (Lx,Lh)=(32,32)."""
+
+from __future__ import annotations
+
+from repro.core.balance import dsp_saving_at_iso_ii, pareto_frontier
+from repro.core.ii_model import ZYNQ_7045, LstmLayerDims, LstmModelDims
+
+
+def run() -> list[tuple]:
+    layer = LstmModelDims(layers=(LstmLayerDims(32, 32),))
+    naive = pareto_frontier(layer, ZYNQ_7045, 8, range(1, 11), balanced=False)
+    bal = pareto_frontier(layer, ZYNQ_7045, 8, range(1, 11), balanced=True)
+    print("\n== Fig. 8: (Lx,Lh)=(32,32) frontier, LT_sigma=3 LT_tail=5 ==")
+    print(f"{'R_h':>4} {'II':>4} {'DSP naive':>10} {'DSP balanced':>13} {'saving':>8}")
+    rows = []
+    for n, b in zip(naive, bal):
+        s = 1 - b["dsp"] / n["dsp"]
+        print(f"{n['r_h']:>4} {n['ii']:>4} {n['dsp']:>10} {b['dsp']:>13} {s:>7.1%}")
+        rows.append((f"fig8.rh{n['r_h']}", 0.0,
+                     f"ii={n['ii']}|naive={n['dsp']}|balanced={b['dsp']}"))
+    headline = dsp_saving_at_iso_ii(layer, ZYNQ_7045, 8, r_h=1)
+    print(f"headline saving at R_h=1 (paper: 'up to 42%'): {headline:.1%}")
+    rows.append(("fig8.headline_saving", 0.0, f"{headline:.3f}|paper=0.42"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

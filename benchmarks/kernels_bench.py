@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks (interpret on CPU: correctness-grade timing only)
++ the analytic VMEM/HBM traffic comparison that motivates the fused scan.
+
+The fused lstm_scan keeps (h, c) and W_h in VMEM for the whole sequence:
+HBM traffic per step drops from (read xW, read W_h, read h, write h, write
+gates) to (read xW block, write h block) — the table quantifies it.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lstm import LstmConfig, init_lstm, lstm_forward
+
+
+def traffic_model(batch: int, t: int, lx: int, lh: int) -> dict:
+    """HBM bytes per full sequence, naive scan vs fused kernel (bf16=2B)."""
+    e = 2
+    xw = t * batch * 4 * lh * 4        # fp32 gate stream
+    w_h = lh * 4 * lh * e
+    h_io = t * batch * lh * e
+    naive = xw + t * (w_h + 2 * batch * lh * e) + h_io  # W_h + h/c per step
+    fused = xw + w_h + h_io                              # once, once, once
+    return {"naive": naive, "fused": fused, "saving": 1 - fused / naive}
+
+
+def run() -> list[tuple]:
+    rows = []
+    print("\n== kernels: fused LSTM scan HBM-traffic model (per sequence) ==")
+    for b, t, lx, lh in [(1, 100, 1, 32), (128, 100, 1, 32), (256, 1024, 64, 256)]:
+        m = traffic_model(b, t, lx, lh)
+        print(f"B={b:<4} T={t:<5} H={lh:<4}: naive={m['naive']/1e6:8.2f}MB "
+              f"fused={m['fused']/1e6:8.2f}MB  saving={m['saving']:.1%}")
+        rows.append((f"kernel.traffic.b{b}t{t}h{lh}", 0.0,
+                     f"saving={m['saving']:.3f}"))
+
+    # wall-clock of the three execution paths on this host (small model)
+    cfg = LstmConfig(in_dim=8, hidden=32)
+    params = init_lstm(jax.random.PRNGKey(0), cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (16, 100, 8))
+    for impl in ("naive", "split"):
+        f = jax.jit(lambda p, x, impl=impl: lstm_forward(p, x, cfg, impl=impl)[0])
+        jax.block_until_ready(f(params, xs))
+        t0 = time.perf_counter()
+        for _ in range(30):
+            out = f(params, xs)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 30 * 1e6
+        print(f"lstm_forward[{impl:>6}] (B16,T100,H32) host: {us:8.1f} us")
+        rows.append((f"kernel.lstm_{impl}_us", us, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""The paper's technique at TPU scale: balanced vs naive pipeline stages.
+
+Two experiments:
+
+1. **Stage balance (the paper's II-balancing, TPU cost terms).**  Partition
+   heterogeneous layer stacks into pipeline stages and allocate chips; the
+   min-max solver (core/stage_balance) vs the naive equal split — the same
+   comparison as paper Fig. 4/Table II, with stage step time as the II.
+
+2. **Wavefront wall clock (paper Fig. 7).**  The time-wavefront pipeline vs
+   sequential layer-by-layer execution on this CPU for a stacked-LSTM
+   stream — demonstrating the coarse-grained overlap executes correctly and
+   the tick count follows T/C + L - 1 (vs L*T/C).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lstm import LstmConfig, init_lstm, lstm_forward
+from repro.core.pipeline import pack_uniform, pipeline_lstm_stack, wavefront
+from repro.core.stage_balance import (
+    lstm_layer_cost,
+    plan_pipeline,
+    StageCost,
+)
+
+
+def run() -> list[tuple]:
+    rows = []
+    print("\n== pipeline stage balance: paper II-balancing with TPU costs ==")
+
+    # -- 1a. the GW nominal autoencoder's heterogeneous layers -------------
+    ae_layers = [lstm_layer_cost(lx, lh, batch=1024, timesteps=100)
+                 for lx, lh in [(1, 32), (32, 8), (8, 8), (8, 32)]]
+    for n_stages, chips in [(2, 8), (4, 16)]:
+        naive = plan_pipeline(ae_layers, n_stages, chips, balanced=False)
+        bal = plan_pipeline(ae_layers, n_stages, chips, balanced=True)
+        gain = naive.ii_seconds / bal.ii_seconds
+        print(f"GW-AE {n_stages} stages x {chips} chips: "
+              f"II naive={naive.ii_seconds:.3e}s bal={bal.ii_seconds:.3e}s "
+              f"({gain:.2f}x), imbalance {naive.imbalance:.2f}->{bal.imbalance:.2f}")
+        rows.append((f"balance.gw_ae.s{n_stages}", 0.0,
+                     f"gain={gain:.2f}|imb={bal.imbalance:.2f}"))
+
+    # -- 1b. a hybrid transformer stack (attn-heavy + mlp-heavy mix) --------
+    hetero = [StageCost(flops=f, bytes_hbm=b) for f, b in
+              [(8e12, 2e9), (2e12, 1e9), (2e12, 1e9), (6e12, 3e9),
+               (1e12, 5e8), (9e12, 2e9), (2e12, 1e9), (2e12, 1e9)]]
+    naive = plan_pipeline(hetero, 4, 16, balanced=False)
+    bal = plan_pipeline(hetero, 4, 16, balanced=True)
+    print(f"hetero 8L, 4 stages x 16 chips: II naive={naive.ii_seconds:.3e}"
+          f" bal={bal.ii_seconds:.3e} ({naive.ii_seconds/bal.ii_seconds:.2f}x)"
+          f" bounds={bal.stage_bounds} chips={bal.chips}")
+    rows.append(("balance.hetero8", 0.0,
+                 f"gain={naive.ii_seconds/bal.ii_seconds:.2f}"))
+
+    # -- 2. wavefront wall clock -------------------------------------------
+    dims = [(1, 32), (32, 32), (32, 32), (32, 32)]
+    cfgs = [LstmConfig(in_dim=a, hidden=b) for a, b in dims]
+    keys = jax.random.split(jax.random.PRNGKey(0), len(dims))
+    params = [init_lstm(k, c) for k, c in zip(keys, cfgs)]
+    xs = jax.random.normal(jax.random.PRNGKey(1), (8, 400, 1))
+
+    def sequential(params0, xs):
+        h = xs
+        for p, c in zip(params0, cfgs):
+            h, _ = lstm_forward(p, h, c)
+        return h
+
+    seq_j = jax.jit(sequential)
+    pipe_j = jax.jit(lambda ps, x: pipeline_lstm_stack(ps, cfgs, x, n_chunks=8))
+
+    jax.block_until_ready(seq_j(params, xs))
+    jax.block_until_ready(pipe_j(params, xs))
+
+    def timeit(f, *a, n=20):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = f(*a)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n * 1e6
+
+    t_seq = timeit(seq_j, params, xs)
+    t_pipe = timeit(pipe_j, params, xs)
+    print(f"wavefront (1 host device, schedule check): sequential {t_seq:.0f}us"
+          f" vs wavefront {t_pipe:.0f}us (ticks 8+4-1=11 vs 4*8=32; on one"
+          f" device the wavefront adds masked work — the win appears with"
+          f" stages on separate chips, see tests/test_pipeline.py shard_map)")
+    rows.append(("balance.wavefront_cpu_us", t_pipe, f"seq={t_seq:.0f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

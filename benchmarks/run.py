@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure + roofline table.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+``--fast`` skips the training-based Fig. 9 benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip fig9 training")
+    ap.add_argument("--rundir", default="runs/dryrun")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig8,
+        fig10,
+        kernels_bench,
+        pipeline_balance,
+        roofline_table,
+        table2,
+        table3,
+        table4,
+    )
+
+    rows: list[tuple] = []
+    rows += table2.run()
+    rows += fig8.run()
+    rows += fig10.run()
+    rows += table3.run()
+    rows += table4.run()
+    rows += kernels_bench.run()
+    rows += pipeline_balance.run()
+    rows += roofline_table.run(args.rundir)
+    if not args.fast:
+        from benchmarks import fig9_auc
+
+        rows += fig9_auc.run(steps=300)
+
+    print("\n==== CSV ====")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Table II: the six FPGA designs — analytic model vs published values."""
+
+from __future__ import annotations
+
+from repro.core.balance import TABLE2_PAPER, table2_designs
+
+
+def run() -> list[tuple]:
+    rows = []
+    designs = table2_designs()
+    print("\n== Table II: DSP / ii per design (model vs paper) ==")
+    print(f"{'design':>7} {'R_h':>4} {'R_x':>4} {'DSP model':>10} {'DSP paper':>10} "
+          f"{'err%':>6} {'ii model':>9} {'ii paper':>9}")
+    for name, d in designs.items():
+        ref = TABLE2_PAPER[name]
+        dsp = d.dsp_used()
+        ii = d.layer_iis()[0]
+        err = 100 * (dsp - ref["dsp"]) / ref["dsp"]
+        print(f"{name:>7} {ref['r_h']:>4} {ref['r_x']:>4} {dsp:>10} "
+              f"{ref['dsp']:>10} {err:>5.1f}% {ii:>9} {ref['ii']:>9}")
+        rows.append((f"table2.{name}.dsp", 0.0, f"{dsp}|paper={ref['dsp']}|err={err:.1f}%"))
+    # headline: U1 -> U2 saving at iso-II (paper: 2102 DSPs)
+    save = designs["U1"].dsp_used() - designs["U2"].dsp_used()
+    rows.append(("table2.U1_to_U2_dsp_saving", 0.0, f"{save}|paper=2102"))
+    print(f"U1->U2 DSP saving at iso-II: {save} (paper: 2102)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Table III: batch-1 inference latency — CPU measured here, FPGA/GPU
+quoted from the paper, TPU modelled from the fused-kernel structure.
+
+We measure OUR implementations on this host CPU (the paper's CPU row was an
+Intel E2620 at 39.7 ms; theirs ran TensorFlow, ours is jit-compiled JAX, so
+our CPU row is much faster — the comparison point is the *relative* win of
+the split/fused structure at batch 1, which is the paper's argument).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autoencoder import (
+    AutoencoderConfig,
+    autoencoder_forward,
+    init_autoencoder,
+)
+
+PAPER = {"cpu_E2620_ms": 39.7, "gpu_titanx_ms": 32.1, "fpga_u250_us": 0.40}
+
+
+def _time(f, *args, iters=50) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[tuple]:
+    cfg_n = AutoencoderConfig(hidden=(32, 8, 8, 32), timesteps=100, impl="naive")
+    cfg_s = AutoencoderConfig(hidden=(32, 8, 8, 32), timesteps=100, impl="split")
+    params = init_autoencoder(jax.random.PRNGKey(0), cfg_n)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 100, 1))
+
+    naive = jax.jit(lambda p, x: autoencoder_forward(p, x, cfg_n))
+    split = jax.jit(lambda p, x: autoencoder_forward(p, x, cfg_s))
+
+    t_naive = _time(naive, params, x)
+    t_split = _time(split, params, x)
+
+    print("\n== Table III: batch-1 nominal-AE inference latency ==")
+    print(f"paper CPU (E2620, TF):        {PAPER['cpu_E2620_ms']*1000:>10.1f} us")
+    print(f"paper GPU (TITAN X):          {PAPER['gpu_titanx_ms']*1000:>10.1f} us")
+    print(f"paper FPGA (U250, balanced):  {PAPER['fpga_u250_us']:>10.2f} us")
+    print(f"this host CPU, naive LSTM:    {t_naive:>10.1f} us")
+    print(f"this host CPU, split mvm_x:   {t_split:>10.1f} us "
+          f"({t_naive / t_split:.2f}x vs naive)")
+    return [
+        ("table3.cpu_naive", t_naive, f"paper_cpu_us={PAPER['cpu_E2620_ms']*1000}"),
+        ("table3.cpu_split", t_split, f"speedup_vs_naive={t_naive/t_split:.2f}"),
+        ("table3.paper_fpga", PAPER["fpga_u250_us"], "reference"),
+    ]
+
+
+if __name__ == "__main__":
+    run()

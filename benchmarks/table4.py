@@ -1,0 +1,53 @@
+"""Paper Table IV: latency vs prior FPGA LSTM designs (latency model).
+
+The paper reports 0.343 us (single 32-unit layer) and 0.867 us (the nominal
+4-layer autoencoder) at 300 MHz.  We reproduce both from the analytic
+latency model (Eq. 1 + the Fig. 7 wavefront with the encoder->decoder sync
+point) and report the model error; the prior-work rows are quoted.
+"""
+
+from __future__ import annotations
+
+from repro.core.balance import table2_designs
+from repro.core.ii_model import (
+    U250,
+    DesignPoint,
+    LstmLayerDims,
+    LstmModelDims,
+    ReuseFactors,
+)
+
+PRIOR = {
+    "lee2018_kintex7_us": 4.27,
+    "rao2020_ku115_us": 1.35,
+    "this_single_layer_us": 0.343,
+    "this_four_layer_us": 0.867,
+}
+
+
+def run() -> list[tuple]:
+    single = LstmModelDims(layers=(LstmLayerDims(lx=1, lh=32),))
+    d1 = DesignPoint(model=single, reuse=(ReuseFactors(r_x=9, r_h=1),),
+                     constants=U250, timesteps=8)
+    lat1 = d1.latency_us(300.0)
+    d4 = table2_designs()["U2"]
+    lat4 = d4.latency_us(300.0)
+
+    print("\n== Table IV: latency vs prior FPGA designs ==")
+    print(f"[28] 2018 Kintex7 (1 layer):   {PRIOR['lee2018_kintex7_us']:.3f} us")
+    print(f"[27] 2020 KU115  (1 layer):    {PRIOR['rao2020_ku115_us']:.3f} us")
+    print(f"this work (1 layer) paper:     {PRIOR['this_single_layer_us']:.3f} us"
+          f" | model: {lat1:.3f} us")
+    print(f"this work (4 layers) paper:    {PRIOR['this_four_layer_us']:.3f} us"
+          f" | model: {lat4:.3f} us (wavefront + enc->dec sync)")
+    print(f"speedup vs [28]: {PRIOR['lee2018_kintex7_us']/PRIOR['this_single_layer_us']:.1f}x"
+          f" (paper: 12.4x); vs [27]: {PRIOR['rao2020_ku115_us']/PRIOR['this_single_layer_us']:.1f}x"
+          f" (paper: 3.9x)")
+    return [
+        ("table4.single_layer_model_us", lat1, f"paper={PRIOR['this_single_layer_us']}"),
+        ("table4.four_layer_model_us", lat4, f"paper={PRIOR['this_four_layer_us']}"),
+    ]
+
+
+if __name__ == "__main__":
+    run()

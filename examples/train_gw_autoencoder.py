@@ -1,0 +1,66 @@
+"""End-to-end driver: train the NOMINAL GW autoencoder (paper Sec. V) with
+the full substrate — data pipeline, AdamW, checkpoint/restart, straggler
+monitor — then evaluate AUC and the 16-bit quantization parity claim.
+
+Run:  PYTHONPATH=src python examples/train_gw_autoencoder.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autoencoder import (
+    AutoencoderConfig,
+    init_autoencoder,
+    mse_loss,
+)
+from repro.core.quant import quantize_tree
+from repro.data.gw import GwDataConfig, GwDataset
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--ckpt", default="runs/gw_nominal_ckpt")
+    args = ap.parse_args()
+
+    cfg = AutoencoderConfig(hidden=(32, 8, 8, 32), timesteps=100)
+    ds = GwDataset(GwDataConfig(timesteps=100, seed=0))
+
+    def data():
+        for x in ds.train_stream(args.batch):
+            yield {"x": jnp.asarray(x)}
+
+    trainer = Trainer(
+        loss_fn=lambda p, b: mse_loss(p, b["x"], cfg),
+        init_params_fn=lambda rng: init_autoencoder(rng, cfg),
+        data_iter=data(),
+        cfg=TrainerConfig(
+            total_steps=args.steps,
+            checkpoint_every=max(args.steps // 3, 1),
+            opt=AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                            weight_decay=0.0),
+        ),
+        ckpt_dir=args.ckpt,
+    )
+    result = trainer.run(jax.random.PRNGKey(0))
+    print(f"trained to step {result.step}; loss "
+          f"{result.losses[0]:.4f} -> {result.losses[-1]:.4f}; "
+          f"stragglers flagged: {len(result.straggler_events)}; "
+          f"resumed_from={result.resumed_from}")
+
+    from benchmarks.fig9_auc import evaluate_auc
+
+    auc = evaluate_auc(trainer.params, cfg, ds, n=256)
+    auc_q = evaluate_auc(quantize_tree(trainer.params), cfg, ds, n=256)
+    print(f"AUC fp32: {auc:.3f} | AUC 16-bit fixed: {auc_q:.3f} "
+          f"(delta {auc_q - auc:+.3f}; paper: negligible)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import SHAPES, ArchConfig, InputShape, cell_supported  # noqa: F401
+from repro.configs.registry import ARCHS, all_cells, get_arch  # noqa: F401

@@ -1,0 +1,32 @@
+"""Core of the reproduction: the paper's balanced-II technique + LSTM substrate.
+
+Layers:
+  ii_model / balance   — the paper's analytic model & DSE solver (Eqs. 1-7)
+  stage_balance        — the same min-max optimization with TPU roofline costs
+  lstm / autoencoder   — split-sublayer LSTM + the GW anomaly-detection model
+  pipeline             — coarse-grained time-wavefront pipeline (shard_map)
+  quant                — bf16/fixed quantization + LUT/PWL activations
+"""
+
+from .ii_model import (  # noqa: F401
+    GW_NOMINAL,
+    GW_SMALL,
+    U250,
+    ZYNQ_7045,
+    DesignPoint,
+    HlsConstants,
+    LstmLayerDims,
+    LstmModelDims,
+    ReuseFactors,
+)
+from .balance import solve_min_ii, pareto_frontier, table2_designs  # noqa: F401
+from .lstm import LstmConfig, init_lstm, lstm_forward, zero_state  # noqa: F401
+from .autoencoder import (  # noqa: F401
+    AutoencoderConfig,
+    GW_NOMINAL_CONFIG,
+    GW_SMALL_CONFIG,
+    autoencoder_forward,
+    init_autoencoder,
+    mse_loss,
+    reconstruction_error,
+)

@@ -1,0 +1,152 @@
+"""LSTM autoencoder for gravitational-wave anomaly detection (paper Sec. III-A).
+
+Structure (Moreno et al. / paper Fig. 3):
+
+    encoder : LSTM(in -> h0) -> ... -> LSTM(-> h_latent)   [last layer returns
+                                                            only the final h]
+    bridge  : RepeatVector(T)                               [hard sync point]
+    decoder : LSTM(latent -> ...) -> LSTM(-> h_last)        [return sequences]
+    head    : TimeDistributed Dense(h_last -> in)
+
+Trained unsupervised on detector background; an event is flagged anomalous
+when the reconstruction error spikes.  The encoder->decoder boundary is the
+pipeline sync point modelled by ``ii_model.Segment`` — only the final latent
+crosses, so decoder timestep overlap cannot begin before the encoder drains
+(paper Sec. III-D).
+
+The nominal model is hidden=(32, 8, 8, 32) with a 1-d strain input; the small
+model is hidden=(9, 9).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .lstm import LstmConfig, init_lstm, lstm_forward
+from .quant import EXACT, ActivationSet
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class AutoencoderConfig:
+    input_dim: int = 1
+    hidden: tuple[int, ...] = (32, 8, 8, 32)
+    latent_boundary: int | None = None  # index of first decoder layer
+    timesteps: int = 100                # paper default TS for accuracy studies
+    dtype: Any = jnp.float32
+    cell_dtype: Any = jnp.float32
+    acts: ActivationSet = EXACT
+    impl: str = "split"                 # naive | split | kernel
+
+    @property
+    def boundary(self) -> int:
+        return (
+            self.latent_boundary
+            if self.latent_boundary is not None
+            else len(self.hidden) // 2
+        )
+
+    def layer_cfgs(self) -> list[LstmConfig]:
+        cfgs, lx = [], self.input_dim
+        for i, h in enumerate(self.hidden):
+            # the first decoder layer consumes the repeated latent
+            if i == self.boundary:
+                lx = self.hidden[self.boundary - 1]
+            cfgs.append(
+                LstmConfig(
+                    in_dim=lx, hidden=h, dtype=self.dtype,
+                    cell_dtype=self.cell_dtype, acts=self.acts,
+                )
+            )
+            lx = h
+        return cfgs
+
+
+GW_NOMINAL_CONFIG = AutoencoderConfig(hidden=(32, 8, 8, 32))
+GW_SMALL_CONFIG = AutoencoderConfig(hidden=(9, 9), latent_boundary=1)
+
+
+def init_autoencoder(key: jax.Array, cfg: AutoencoderConfig) -> Params:
+    cfgs = cfg.layer_cfgs()
+    keys = jax.random.split(key, len(cfgs) + 1)
+    params: Params = {
+        f"lstm_{i}": init_lstm(k, c) for i, (k, c) in enumerate(zip(keys, cfgs))
+    }
+    lim = (6.0 / (cfg.hidden[-1] + cfg.input_dim)) ** 0.5
+    params["dense"] = {
+        "w": jax.random.uniform(
+            keys[-1], (cfg.hidden[-1], cfg.input_dim), jnp.float32, -lim, lim
+        ).astype(cfg.dtype),
+        "b": jnp.zeros((cfg.input_dim,), jnp.float32),
+    }
+    return params
+
+
+def autoencoder_forward(
+    params: Params, x: jax.Array, cfg: AutoencoderConfig
+) -> jax.Array:
+    """Reconstruct x. x: (B, T, input_dim) -> (B, T, input_dim)."""
+    cfgs = cfg.layer_cfgs()
+    t = x.shape[1]
+    h_seq = x
+    # ---- encoder ----------------------------------------------------------
+    for i in range(cfg.boundary):
+        h_seq, (h_last, _) = lstm_forward(
+            params[f"lstm_{i}"], h_seq, cfgs[i], impl=cfg.impl
+        )
+    # bottleneck: only the last hidden vector crosses (RepeatVector)
+    latent = h_seq[:, -1, :]
+    h_seq = jnp.broadcast_to(latent[:, None, :], (latent.shape[0], t, latent.shape[1]))
+    # ---- decoder -----------------------------------------------------------
+    for i in range(cfg.boundary, len(cfgs)):
+        h_seq, _ = lstm_forward(params[f"lstm_{i}"], h_seq, cfgs[i], impl=cfg.impl)
+    # ---- TimeDistributed dense head ----------------------------------------
+    out = h_seq.astype(cfg.dtype) @ params["dense"]["w"] + params["dense"]["b"]
+    return out.astype(x.dtype)
+
+
+def reconstruction_error(
+    params: Params, x: jax.Array, cfg: AutoencoderConfig
+) -> jax.Array:
+    """Per-example anomaly score: mean squared reconstruction error. (B,)"""
+    rec = autoencoder_forward(params, x, cfg)
+    err = (rec.astype(jnp.float32) - x.astype(jnp.float32)) ** 2
+    return jnp.mean(err, axis=(1, 2))
+
+
+def mse_loss(params: Params, x: jax.Array, cfg: AutoencoderConfig) -> jax.Array:
+    return jnp.mean(reconstruction_error(params, x, cfg))
+
+
+def auc_score(scores_neg: jnp.ndarray, scores_pos: jnp.ndarray) -> float:
+    """AUC via the Mann-Whitney U statistic (threshold-free, like the paper).
+
+    ``scores_pos`` are anomaly scores on signal (GW) events, ``scores_neg``
+    on background; AUC = P(score_pos > score_neg) + 0.5 P(tie).
+    """
+    import numpy as np
+
+    neg = np.asarray(scores_neg, dtype=np.float64)
+    pos = np.asarray(scores_pos, dtype=np.float64)
+    order = np.concatenate([neg, pos]).argsort(kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(order) + 1)
+    # average ranks for ties
+    allv = np.concatenate([neg, pos])
+    sorted_v = allv[order]
+    i = 0
+    while i < len(sorted_v):
+        j = i
+        while j + 1 < len(sorted_v) and sorted_v[j + 1] == sorted_v[i]:
+            j += 1
+        if j > i:
+            ranks[order[i : j + 1]] = ranks[order[i : j + 1]].mean()
+        i = j + 1
+    r_pos = ranks[len(neg) :].sum()
+    n_pos, n_neg = len(pos), len(neg)
+    return float((r_pos - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))

@@ -1,0 +1,167 @@
+"""Split-sublayer LSTM — the paper's Sec. III-C transform, in JAX.
+
+The paper splits an LSTM layer into (1) ``mvm_x`` — the input projection,
+which has *no* recurrent dependency — and (2) the recurrent sub-layer
+(``mvm_h`` + gate activations + element-wise tail), and pipelines the two.
+On TPU the same split is the difference between
+
+    naive  : scan_t [ x_t @ W_x  +  h_{t-1} @ W_h  -> gates -> tail ]
+    split  : XW = X @ W_x            (ONE big MXU matmul over all timesteps —
+                                      the fully-parallel sub-layer)
+             scan_t [ XW_t + h_{t-1} @ W_h -> gates -> tail ]
+                                     (the dependency-bound sub-layer; tiny
+                                      matmul, ideally a fused Pallas kernel
+                                      with h/c resident in VMEM)
+
+The recurrent matmul is (B,H)x(H,4H); for the GW models H<=32, so the naive
+form wastes the MXU on T separate skinny matmuls and pays HBM traffic for
+gate tensors every step.  The split form is both the paper-faithful structure
+and the TPU-optimal one; ``kernels/lstm_scan`` fuses stage (2).
+
+Cell equations (paper Sec. II), with the paper's wide-state rule: the cell
+state ``c`` is carried in fp32 even when weights/activations are bf16.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .quant import EXACT, ActivationSet
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class LstmConfig:
+    in_dim: int
+    hidden: int
+    dtype: Any = jnp.float32       # weight/activation compute dtype
+    cell_dtype: Any = jnp.float32  # carry dtype for c_t (paper: 32-bit)
+    acts: ActivationSet = EXACT
+
+
+def init_lstm(key: jax.Array, cfg: LstmConfig) -> Params:
+    """Glorot-uniform W, orthogonal-ish recurrent init, forget-bias 1.0.
+
+    Gate order along the 4H axis: [i, f, g, o] (i=input, f=forget,
+    g=modulation, o=output) — fixed convention shared with the Pallas kernel.
+    """
+    kx, kh = jax.random.split(key)
+    lim_x = (6.0 / (cfg.in_dim + 4 * cfg.hidden)) ** 0.5
+    lim_h = (6.0 / (cfg.hidden + 4 * cfg.hidden)) ** 0.5
+    w_x = jax.random.uniform(
+        kx, (cfg.in_dim, 4 * cfg.hidden), jnp.float32, -lim_x, lim_x
+    )
+    w_h = jax.random.uniform(
+        kh, (cfg.hidden, 4 * cfg.hidden), jnp.float32, -lim_h, lim_h
+    )
+    b = jnp.zeros((4 * cfg.hidden,), jnp.float32)
+    b = b.at[cfg.hidden : 2 * cfg.hidden].set(1.0)  # forget-gate bias
+    return {
+        "w_x": w_x.astype(cfg.dtype),
+        "w_h": w_h.astype(cfg.dtype),
+        "b": b,  # paper: bias kept 32-bit
+    }
+
+
+def _gates_to_hc(
+    gates: jax.Array, c_prev: jax.Array, cfg: LstmConfig
+) -> tuple[jax.Array, jax.Array]:
+    """The LSTM tail: activations + element-wise ops. gates: (..., 4H) fp32."""
+    h4 = cfg.hidden
+    i = cfg.acts.sigma(gates[..., 0 * h4 : 1 * h4])
+    f = cfg.acts.sigma(gates[..., 1 * h4 : 2 * h4])
+    g = cfg.acts.tanh(gates[..., 2 * h4 : 3 * h4])
+    o = cfg.acts.sigma(gates[..., 3 * h4 : 4 * h4])
+    # paper: f*c and i*g accumulate in the wide cell dtype
+    c = (f * c_prev.astype(gates.dtype) + i * g).astype(cfg.cell_dtype)
+    h = (o * cfg.acts.tanh(c.astype(gates.dtype))).astype(cfg.dtype)
+    return h, c
+
+
+def lstm_step(
+    params: Params, h_prev: jax.Array, c_prev: jax.Array, x_t: jax.Array,
+    cfg: LstmConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """One reference timestep (both MVMs inline). x_t: (B, Lx)."""
+    gates = (
+        x_t.astype(cfg.dtype) @ params["w_x"]
+        + h_prev.astype(cfg.dtype) @ params["w_h"]
+    ).astype(jnp.float32) + params["b"]
+    return _gates_to_hc(gates, c_prev, cfg)
+
+
+def lstm_forward_naive(
+    params: Params, xs: jax.Array, cfg: LstmConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Unsplit baseline: both MVMs inside the timestep loop. xs: (B, T, Lx)."""
+    batch = xs.shape[0]
+    if state is None:
+        state = zero_state(batch, cfg)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_step(params, h, c, x_t, cfg)
+        return (h, c), h
+
+    (h, c), hs = jax.lax.scan(step, state, jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1), (h, c)
+
+
+def lstm_forward_split(
+    params: Params, xs: jax.Array, cfg: LstmConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Paper-split execution: batched mvm_x, then the recurrent scan.
+
+    Numerically identical to ``lstm_forward_naive`` (associativity of the
+    gate sum is preserved: gates = (xW + hW) + b in fp32 both ways).
+    """
+    batch = xs.shape[0]
+    if state is None:
+        state = zero_state(batch, cfg)
+
+    # --- sub-layer 1: mvm_x over ALL timesteps, one MXU matmul ------------
+    xw = (xs.astype(cfg.dtype) @ params["w_x"]).astype(jnp.float32)  # (B,T,4H)
+
+    # --- sub-layer 2: the dependency-bound recurrent loop ------------------
+    def step(carry, xw_t):
+        h, c = carry
+        gates = (
+            xw_t + (h.astype(cfg.dtype) @ params["w_h"]).astype(jnp.float32)
+            + params["b"]
+        )
+        h, c = _gates_to_hc(gates, c, cfg)
+        return (h, c), h
+
+    (h, c), hs = jax.lax.scan(step, state, jnp.swapaxes(xw, 0, 1))
+    return jnp.swapaxes(hs, 0, 1), (h, c)
+
+
+def lstm_forward(
+    params: Params, xs: jax.Array, cfg: LstmConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,
+    impl: str = "split",
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Dispatch: impl in {naive, split, kernel}."""
+    if impl == "naive":
+        return lstm_forward_naive(params, xs, cfg, state)
+    if impl == "split":
+        return lstm_forward_split(params, xs, cfg, state)
+    if impl == "kernel":
+        from repro.kernels.lstm_scan import ops as kops
+
+        return kops.lstm_forward_kernel(params, xs, cfg, state)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def zero_state(batch: int, cfg: LstmConfig) -> tuple[jax.Array, jax.Array]:
+    return (
+        jnp.zeros((batch, cfg.hidden), cfg.dtype),
+        jnp.zeros((batch, cfg.hidden), cfg.cell_dtype),
+    )

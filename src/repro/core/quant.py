@@ -1,0 +1,171 @@
+"""Quantization + latency-reduced activations (paper Sec. IV-A / V-B).
+
+The paper runs 16-bit fixed-point weights/activations with a 32-bit cell
+state, a BRAM-LUT sigmoid and a piecewise-linear tanh, and reports a
+negligible AUC change (QKeras 16-bit).  TPU-native translation:
+
+* 16-bit fixed    -> bf16 compute (plus an optional int16 fake-quant path
+                     that mimics the fixed-point grid for accuracy studies)
+* 32-bit cell     -> fp32 carry for ``c_t`` inside the scan (wide accumulator)
+* LUT sigmoid     -> ``sigmoid_lut`` (gather from a precomputed table — the
+                     literal structure, used for accuracy parity tests)
+* piecewise tanh  -> ``tanh_pwl`` (VPU-friendly select/FMA chain, no
+                     transcendental)
+
+``ActivationSet`` picks the variant per model config; the AUC benchmark
+(fig9) measures exact-vs-quantized deltas, reproducing the paper's claim.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# fixed-point fake quantization (paper: 16-bit weights/inputs, 32-bit bias/cell)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_jvp, nondiff_argnums=(1, 2))
+def fixed_quant(x: jax.Array, total_bits: int = 16, frac_bits: int = 8) -> jax.Array:
+    """Round to a signed fixed-point grid <total_bits, frac_bits> (fake quant).
+
+    Matches ap_fixed<16,8>-style behaviour: saturating, round-to-nearest.
+    Straight-through estimator under AD (gradient of round treated as 1);
+    implemented with custom_jvp so the forward value is *exactly* the
+    quantized grid point (the ``x + stop_grad(q - x)`` idiom loses the grid
+    under fp32 cancellation for large |x|).
+    """
+    scale = float(2**frac_bits)
+    lo = -(2.0 ** (total_bits - 1)) / scale
+    hi = (2.0 ** (total_bits - 1) - 1) / scale
+    return jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+
+
+@fixed_quant.defjvp
+def _fixed_quant_jvp(total_bits, frac_bits, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return fixed_quant(x, total_bits, frac_bits), dx
+
+
+def quantize_tree(tree, total_bits: int = 16, frac_bits: int = 8):
+    return jax.tree_util.tree_map(
+        partial(fixed_quant, total_bits=total_bits, frac_bits=frac_bits), tree
+    )
+
+
+def to_dtype_tree(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def sigmoid_exact(x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x)
+
+
+def tanh_exact(x: jax.Array) -> jax.Array:
+    return jnp.tanh(x)
+
+
+def make_sigmoid_lut(n_entries: int = 1024, x_max: float = 8.0):
+    """Precompute the BRAM sigmoid table over [-x_max, x_max).
+
+    Built with numpy so the table is a concrete constant even when first
+    requested under a jax trace (a traced global would leak the tracer).
+    """
+    import numpy as np
+
+    xs = np.linspace(-x_max, x_max, n_entries, dtype=np.float32)
+    return np.where(
+        xs >= 0, 1.0 / (1.0 + np.exp(-xs)), np.exp(xs) / (1.0 + np.exp(xs))
+    ).astype(np.float32)
+
+
+_DEFAULT_LUT = make_sigmoid_lut()
+
+
+def sigmoid_lut(
+    x: jax.Array, table: jax.Array | None = None, x_max: float = 8.0
+) -> jax.Array:
+    """LUT sigmoid: nearest-entry gather, saturating outside the range.
+
+    The FPGA stores precomputed values in BRAM; on TPU this is a VMEM gather.
+    Mainly used to verify accuracy parity (tests assert max err ~ 1/n_entries);
+    the deployed low-latency path is ``hard_sigmoid``/``tanh_pwl``.
+    """
+    if table is None:
+        table = jnp.asarray(_DEFAULT_LUT)
+    n = table.shape[0]
+    idx = jnp.clip(
+        jnp.round((x + x_max) * (n - 1) / (2 * x_max)).astype(jnp.int32), 0, n - 1
+    )
+    return jnp.take(table, idx).astype(x.dtype)
+
+
+def hard_sigmoid(x: jax.Array) -> jax.Array:
+    """Piecewise-linear sigmoid (Keras/QKeras hard_sigmoid): clip(x/4+0.5)."""
+    return jnp.clip(x * 0.25 + 0.5, 0.0, 1.0)
+
+
+#: PWL tanh knots: interpolate tanh at 0, 0.5, ..., 3.0; constant beyond.
+_TANH_KNOTS = (0.0, 0.5, 1.0, 1.5, 2.0, 2.5)
+_TANH_SLOPES = (0.92423, 0.58891, 0.28699, 0.11786, 0.04513, 0.01702)
+_TANH_SEG_W = 0.5
+
+
+def tanh_pwl(x: jax.Array) -> jax.Array:
+    """Piecewise-linear tanh [paper refs 21, 22]: 6 segments, no exp.
+
+    Built as a sum of clipped ramps — odd-symmetric, monotone and bounded by
+    construction, max abs error < 0.03 over the reals (property-tested), and
+    lowers to pure select/FMA chains (VPU- and Pallas-kernel-friendly):
+
+        tanh(|x|) ~= sum_i  s_i * clip(|x| - k_i, 0, 0.5)
+    """
+    ax = jnp.abs(x)
+    y = jnp.zeros_like(ax)
+    for k, s in zip(_TANH_KNOTS, _TANH_SLOPES):
+        y = y + s * jnp.clip(ax - k, 0.0, _TANH_SEG_W)
+    return jnp.sign(x) * y
+
+
+def sigmoid_pwl(x: jax.Array) -> jax.Array:
+    """Piecewise-linear sigmoid via the tanh identity: 0.5*tanh_pwl(x/2)+0.5.
+
+    Max abs error < 0.015 — the Pallas-kernel-safe stand-in for the BRAM LUT
+    (a 1024-entry gather cannot be closure-captured inside a kernel; a
+    select/FMA chain is the TPU-idiomatic equivalent of the FPGA LUT).
+    """
+    return 0.5 * tanh_pwl(0.5 * x) + 0.5
+
+
+@dataclass(frozen=True)
+class ActivationSet:
+    """Gate/state activations for an LSTM cell; pick per deployment target."""
+
+    sigma: Callable[[jax.Array], jax.Array]
+    tanh: Callable[[jax.Array], jax.Array]
+    name: str = "exact"
+
+
+EXACT = ActivationSet(sigma=sigmoid_exact, tanh=tanh_exact, name="exact")
+#: The paper's hardware configuration: LUT sigmoid + piecewise-linear tanh.
+PAPER_HW = ActivationSet(sigma=sigmoid_lut, tanh=tanh_pwl, name="paper_hw")
+#: Fastest VPU path: both activations piecewise-linear (kernel-safe).
+HARD = ActivationSet(sigma=hard_sigmoid, tanh=tanh_pwl, name="hard")
+#: paper_hw with the LUT replaced by its PWL twin — safe inside Pallas.
+PAPER_HW_KERNEL = ActivationSet(sigma=sigmoid_pwl, tanh=tanh_pwl, name="paper_hw_kernel")
+
+ACTIVATION_SETS = {a.name: a for a in (EXACT, PAPER_HW, HARD, PAPER_HW_KERNEL)}
+
+
+def kernel_safe(acts: ActivationSet) -> ActivationSet:
+    """The Pallas-safe twin of an activation set (no captured tables)."""
+    return PAPER_HW_KERNEL if acts.name == "paper_hw" else acts

@@ -1,0 +1,192 @@
+"""TPU port of balanced-II: min-max pipeline-stage time under a chip budget.
+
+The paper balances per-layer initiation intervals by reallocating DSP
+multipliers between layers (more parallelism = lower II).  On a TPU mesh the
+resources are chips and the per-stage "II" is the roofline-modelled step time
+
+    T_stage(s, c) = max( flops_s / (c * PEAK_FLOPS),
+                         bytes_s / (c * HBM_BW),
+                         coll_bytes_s / (c * ICI_BW) )
+
+so the same optimization becomes: (1) partition layers into contiguous stages
+and (2) allocate chips per stage, minimizing ``max_s T_stage``.  Both solvers
+are exact (DP + water-filling) and both are property-tested against brute
+force.  ``launch/train.py --pp`` and ``benchmarks/pipeline_balance.py`` use
+them; the wavefront execution itself lives in ``core/pipeline.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+# TPU v5e roofline constants (assignment-specified).
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per link
+
+
+@dataclass(frozen=True)
+class StageCost:
+    """Work of one pipeline stage (totals, before dividing across chips)."""
+
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float = 0.0
+
+    def time_on(self, chips: int) -> float:
+        """Roofline step time on ``chips`` chips (perfect intra-stage scaling)."""
+        if chips < 1:
+            return math.inf
+        return max(
+            self.flops / (chips * PEAK_FLOPS_BF16),
+            self.bytes_hbm / (chips * HBM_BW),
+            self.bytes_collective / (chips * ICI_BW_PER_LINK),
+        )
+
+    def __add__(self, other: "StageCost") -> "StageCost":
+        return StageCost(
+            self.flops + other.flops,
+            self.bytes_hbm + other.bytes_hbm,
+            self.bytes_collective + other.bytes_collective,
+        )
+
+
+ZERO_COST = StageCost(0.0, 0.0, 0.0)
+
+
+def allocate_chips(stages: Sequence[StageCost], total_chips: int) -> list[int]:
+    """Chips per stage minimizing the max stage time (exact water-filling).
+
+    Greedy is optimal here: stage time is non-increasing in chips, so giving
+    the next chip to the current argmax stage can never hurt, and exchange
+    arguments close the proof.  Every stage gets >= 1 chip.
+    """
+    n = len(stages)
+    if total_chips < n:
+        raise ValueError(f"need >= {n} chips for {n} stages, got {total_chips}")
+    alloc = [1] * n
+    for _ in range(total_chips - n):
+        worst = max(range(n), key=lambda s: stages[s].time_on(alloc[s]))
+        alloc[worst] += 1
+    return alloc
+
+
+def pipeline_ii(stages: Sequence[StageCost], alloc: Sequence[int]) -> float:
+    """System II (seconds) of the pipeline = slowest stage (paper Eq. 2)."""
+    return max(s.time_on(c) for s, c in zip(stages, alloc))
+
+
+def partition_layers(
+    layer_costs: Sequence[StageCost],
+    n_stages: int,
+    chips_per_stage: int = 1,
+) -> list[tuple[int, int]]:
+    """Contiguous layer->stage partition minimizing max stage time (exact DP).
+
+    Classic linear-partition dynamic program over prefix sums; returns
+    ``[(start, end), ...)`` half-open layer ranges per stage.
+    """
+    n = len(layer_costs)
+    if not 1 <= n_stages <= n:
+        raise ValueError(f"n_stages must be in [1, {n}], got {n_stages}")
+
+    prefix = [ZERO_COST]
+    for c in layer_costs:
+        prefix.append(prefix[-1] + c)
+
+    def cost(a: int, b: int) -> float:  # time of layers [a, b)
+        seg = StageCost(
+            prefix[b].flops - prefix[a].flops,
+            prefix[b].bytes_hbm - prefix[a].bytes_hbm,
+            prefix[b].bytes_collective - prefix[a].bytes_collective,
+        )
+        return seg.time_on(chips_per_stage)
+
+    INF = math.inf
+    # dp[k][i] = min over partitions of layers[:i] into k stages of max cost
+    dp = [[INF] * (n + 1) for _ in range(n_stages + 1)]
+    cut = [[0] * (n + 1) for _ in range(n_stages + 1)]
+    dp[0][0] = 0.0
+    for k in range(1, n_stages + 1):
+        for i in range(k, n + 1):
+            for j in range(k - 1, i):
+                v = max(dp[k - 1][j], cost(j, i))
+                if v < dp[k][i]:
+                    dp[k][i] = v
+                    cut[k][i] = j
+    # reconstruct
+    bounds, i = [], n
+    for k in range(n_stages, 0, -1):
+        j = cut[k][i]
+        bounds.append((j, i))
+        i = j
+    return list(reversed(bounds))
+
+
+@dataclass(frozen=True)
+class PipelinePlan:
+    """A solved pipeline: stage boundaries + chip allocation + achieved II."""
+
+    stage_bounds: tuple[tuple[int, int], ...]
+    chips: tuple[int, ...]
+    ii_seconds: float
+    stage_times: tuple[float, ...]
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean stage time — 1.0 is a perfectly balanced (seamless) pipeline."""
+        return max(self.stage_times) / (sum(self.stage_times) / len(self.stage_times))
+
+
+def plan_pipeline(
+    layer_costs: Sequence[StageCost],
+    n_stages: int,
+    total_chips: int,
+    balanced: bool = True,
+) -> PipelinePlan:
+    """End-to-end solve: partition layers, allocate chips, report the II.
+
+    ``balanced=False`` reproduces the naive baseline the paper argues
+    against: equal layer count per stage and equal chips per stage.
+    """
+    n = len(layer_costs)
+    if balanced:
+        bounds = partition_layers(layer_costs, n_stages)
+    else:
+        per = math.ceil(n / n_stages)
+        bounds = [(i, min(i + per, n)) for i in range(0, n, per)]
+        n_stages = len(bounds)
+
+    stage_costs = []
+    for a, b in bounds:
+        acc = ZERO_COST
+        for c in layer_costs[a:b]:
+            acc = acc + c
+        stage_costs.append(acc)
+
+    if balanced:
+        alloc = allocate_chips(stage_costs, total_chips)
+    else:
+        base = total_chips // n_stages
+        alloc = [base] * n_stages
+        alloc[-1] += total_chips - base * n_stages
+
+    times = tuple(s.time_on(c) for s, c in zip(stage_costs, alloc))
+    return PipelinePlan(
+        stage_bounds=tuple(bounds),
+        chips=tuple(alloc),
+        ii_seconds=max(times),
+        stage_times=times,
+    )
+
+
+def lstm_layer_cost(
+    lx: int, lh: int, batch: int, timesteps: int, bytes_per_el: int = 2
+) -> StageCost:
+    """Roofline work of one LSTM layer over a full sequence (both sub-layers)."""
+    flops = 2.0 * 4 * (lx + lh) * lh * batch * timesteps + 10.0 * lh * batch * timesteps
+    weight_bytes = 4 * (lx + lh) * lh * bytes_per_el
+    act_bytes = (lx + lh) * batch * timesteps * bytes_per_el * 2
+    return StageCost(flops=flops, bytes_hbm=weight_bytes + act_bytes)

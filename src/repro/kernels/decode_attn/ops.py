@@ -1,0 +1,37 @@
+"""Jit'd wrapper for decode attention: padding + dispatch + jnp fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attn import decode_attn
+from .ref import decode_attn_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attn_op(
+    q: jax.Array,        # (B, Hq, D)
+    k: jax.Array,        # (B, S, Hkv, D)
+    v: jax.Array,        # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,) int32
+    *,
+    block_s: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    s_len = k.shape[1]
+    block_s = min(block_s, max(s_len, 1))
+    s_pad = (s_len + block_s - 1) // block_s * block_s
+    if s_pad != s_len:  # masked by `lengths`, so zero-padding is exact
+        pad = ((0, 0), (0, s_pad - s_len), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return decode_attn(q, k, v, lengths, block_s=block_s, interpret=interpret)

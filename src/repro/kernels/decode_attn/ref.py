@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for single-query GQA attention with length masking."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q, k, v, lengths):
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D); lengths: (B,). -> (B, Hq, D)"""
+    batch, hq, d = q.shape
+    s_len, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=2).astype(jnp.float32)  # (B, S, Hq, D)
+    v = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) / d**0.5
+    mask = jnp.arange(s_len)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", w, v).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .lstm_scan import lstm_scan  # noqa: F401
+from .ops import lstm_forward_kernel, lstm_scan_op  # noqa: F401
+from .ref import lstm_scan_ref  # noqa: F401

@@ -1,0 +1,131 @@
+"""Jit'd wrapper around the fused LSTM scan: padding, layout, dispatch.
+
+Public entry points:
+
+* ``lstm_scan_op(xw, w_h, h0, c0)`` — batch-major convenience wrapper with
+  gate-aware padding to TPU tile sizes (H -> multiple of 128 lanes, B ->
+  multiple of the batch block).
+* ``lstm_forward_kernel(params, xs, cfg, state)`` — drop-in backend for
+  ``repro.core.lstm.lstm_forward(..., impl="kernel")``: runs the paper's
+  ``mvm_x`` sub-layer as one big XLA matmul, then the fused recurrent scan.
+
+Padding is *gate-aware*: the 4H axis is four [i|f|g|o] segments, so padding
+H must pad each segment independently ((H,4,H) reshape), never the tail of
+the concatenated axis.  Zero-padded W_h rows kill any garbage in padded h
+lanes, so padded state never contaminates real lanes (tested).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import ActivationSet, EXACT, kernel_safe
+
+from .lstm_scan import lstm_scan
+
+#: TPU tiling targets (fp32 sublane x lane = 8 x 128).
+LANES = 128
+SUBLANES = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_gates(x: jax.Array, hidden: int, hidden_p: int) -> jax.Array:
+    """Pad the trailing 4H axis gate-segment-wise to 4*hidden_p."""
+    if hidden == hidden_p:
+        return x
+    lead = x.shape[:-1]
+    x = x.reshape(*lead, 4, hidden)
+    x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, 0), (0, hidden_p - hidden)])
+    return x.reshape(*lead, 4 * hidden_p)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "acts", "interpret"),
+)
+def lstm_scan_op(
+    xw: jax.Array,    # (B, T, 4H) fp32
+    w_h: jax.Array,   # (H, 4H)
+    h0: jax.Array,    # (B, H)
+    c0: jax.Array,    # (B, H)
+    *,
+    block_b: int | None = None,
+    acts: ActivationSet = EXACT,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (hs: (B, T, H), h_final: (B, H), c_final: (B, H) fp32)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    batch, t_len, h4 = xw.shape
+    hidden = h4 // 4
+
+    # ---- pick tile-legal padded dims -------------------------------------
+    hidden_p = _round_up(hidden, LANES) if not interpret else hidden
+    if block_b is None:
+        # default: one batch block if small, else blocks of 256 rows
+        block_b = batch if batch <= 256 else 256
+    batch_p = _round_up(batch, block_b)
+    if not interpret:
+        batch_p = _round_up(batch_p, SUBLANES)
+        block_b = min(block_b, batch_p)
+        while batch_p % block_b:
+            block_b //= 2
+
+    # ---- pad (gate-aware on the 4H axis) ---------------------------------
+    xw_p = pad_gates(xw, hidden, hidden_p)
+    xw_p = jnp.pad(xw_p, ((0, batch_p - batch), (0, 0), (0, 0)))
+    w_h_p = pad_gates(
+        jnp.pad(w_h, ((0, hidden_p - hidden), (0, 0))), hidden, hidden_p
+    )
+    h0_p = jnp.pad(h0, ((0, batch_p - batch), (0, hidden_p - hidden)))
+    c0_p = jnp.pad(c0, ((0, batch_p - batch), (0, hidden_p - hidden)))
+
+    # ---- time-major for the sequential grid dim ---------------------------
+    xw_tm = jnp.swapaxes(xw_p, 0, 1)  # (T, Bp, 4Hp)
+
+    acts_k = kernel_safe(acts)
+    hs, h_f, c_f = lstm_scan(
+        xw_tm.astype(jnp.float32),
+        w_h_p,
+        h0_p,
+        c0_p.astype(jnp.float32),
+        block_b=block_b,
+        sigma=acts_k.sigma,
+        tanh=acts_k.tanh,
+        interpret=interpret,
+    )
+    hs = jnp.swapaxes(hs, 0, 1)[:batch, :, :hidden]
+    return hs, h_f[:batch, :hidden], c_f[:batch, :hidden]
+
+
+def lstm_forward_kernel(
+    params: dict[str, Any],
+    xs: jax.Array,  # (B, T, Lx)
+    cfg,
+    state: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Backend for core.lstm.lstm_forward(impl="kernel").
+
+    Sub-layer 1 (paper mvm_x): one MXU matmul over all timesteps, plus bias.
+    Sub-layer 2: the fused Pallas scan above.
+    """
+    from repro.core.lstm import zero_state
+
+    batch = xs.shape[0]
+    if state is None:
+        state = zero_state(batch, cfg)
+    h0, c0 = state
+    xw = (xs.astype(cfg.dtype) @ params["w_x"]).astype(jnp.float32) + params["b"]
+    hs, h_f, c_f = lstm_scan_op(xw, params["w_h"], h0, c0, acts=cfg.acts)
+    return hs, (h_f.astype(cfg.dtype), c_f.astype(cfg.cell_dtype))

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused LSTM scan kernel (same gate order [i,f,g,o])."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_scan_ref(
+    xw: jax.Array,   # (T, B, 4H) fp32 (mvm_x output + bias)
+    w_h: jax.Array,  # (H, 4H)
+    h0: jax.Array,   # (B, H)
+    c0: jax.Array,   # (B, H) fp32
+    *,
+    sigma: Callable = jax.nn.sigmoid,
+    tanh: Callable = jnp.tanh,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    hidden = w_h.shape[0]
+
+    def step(carry, xw_t):
+        h, c = carry
+        gates = xw_t + (h @ w_h).astype(jnp.float32)
+        i = sigma(gates[:, 0 * hidden : 1 * hidden])
+        f = sigma(gates[:, 1 * hidden : 2 * hidden])
+        g = tanh(gates[:, 2 * hidden : 3 * hidden])
+        o = sigma(gates[:, 3 * hidden : 4 * hidden])
+        c_new = f * c + i * g
+        h_new = (o * tanh(c_new)).astype(h.dtype)
+        return (h_new, c_new), h_new
+
+    (h_f, c_f), hs = jax.lax.scan(step, (h0, c0.astype(jnp.float32)), xw)
+    return hs, h_f, c_f

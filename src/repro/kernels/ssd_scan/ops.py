@@ -1,0 +1,93 @@
+"""Jit'd wrapper for the SSD scan: head folding, chunk padding, dispatch.
+
+``ssd_scan_op`` takes model-layout tensors (batch, time, heads, ...) and
+maps them onto the kernel's (batch*heads, time, ...) grid; time is padded to
+a chunk multiple with zero ``dt`` (a zero step is an exact no-op on the
+state: exp(0)*S + 0 = S), so padding never perturbs real steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(
+    x: jax.Array,      # (B, T, H, P)
+    dt: jax.Array,     # (B, T, H)
+    a: jax.Array,      # (H,) negative decay rates
+    b: jax.Array,      # (B, T, G, N)   G = kv-style groups (G divides H)
+    c: jax.Array,      # (B, T, G, N)
+    s0: jax.Array | None = None,  # (B, H, P, N)
+    *,
+    chunk: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y: (B, T, H, P), s_final: (B, H, P, N) fp32)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    batch, t_len, heads, p = x.shape
+    groups, n = b.shape[2], b.shape[3]
+    assert heads % groups == 0, (heads, groups)
+    rep = heads // groups
+
+    chunk = min(chunk, max(t_len, 1))
+    t_pad = (t_len + chunk - 1) // chunk * chunk
+
+    alpha = dt * a[None, None, :]  # (B, T, H)
+
+    def fold(v, expand_groups: bool):
+        if expand_groups:  # (B,T,G,N) -> (B,T,H,N)
+            v = jnp.repeat(v, rep, axis=2)
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t_len)) + ((0, 0),) * (v.ndim - 2))
+        v = jnp.moveaxis(v, 2, 1)  # (B,H,T,...)
+        return v.reshape(batch * heads, t_pad, *v.shape[3:])
+
+    x_f = fold(x, False)
+    dt_f = fold(dt[..., None], False)[..., 0]
+    al_f = fold(alpha[..., None], False)[..., 0]
+    b_f = fold(b, True)
+    c_f = fold(c, True)
+    if s0 is None:
+        s0 = jnp.zeros((batch, heads, p, n), jnp.float32)
+    s0_f = s0.reshape(batch * heads, p, n)
+
+    y, s_f = ssd_scan(x_f, dt_f, al_f, b_f, c_f, s0_f, chunk=chunk,
+                      interpret=interpret)
+    y = y.reshape(batch, heads, t_pad, p)[:, :, :t_len]
+    return jnp.moveaxis(y, 1, 2), s_f.reshape(batch, heads, p, n)
+
+
+def ssd_decode_step(
+    x: jax.Array,      # (B, H, P) one token
+    dt: jax.Array,     # (B, H)
+    a: jax.Array,      # (H,)
+    b: jax.Array,      # (B, G, N)
+    c: jax.Array,      # (B, G, N)
+    s: jax.Array,      # (B, H, P, N) running state
+) -> tuple[jax.Array, jax.Array]:
+    """Single-step recurrence for decode (pure jnp — one step has no scan).
+
+    This is the SSM analogue of the transformer KV-cache append: O(1) state
+    update per token, which is why the SSM archs run the long_500k cell.
+    """
+    heads, groups = x.shape[1], b.shape[1]
+    rep = heads // groups
+    b_h = jnp.repeat(b, rep, axis=1)  # (B, H, N)
+    c_h = jnp.repeat(c, rep, axis=1)
+    alpha = dt * a[None, :]  # (B, H)
+    s_new = (
+        jnp.exp(alpha)[:, :, None, None] * s
+        + dt[:, :, None, None] * x[:, :, :, None] * b_h[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, c_h)
+    return y.astype(x.dtype), s_new

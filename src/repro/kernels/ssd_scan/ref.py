@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD scan: the literal per-timestep recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # (BH, T, P)
+    dt: jax.Array,     # (BH, T)
+    alpha: jax.Array,  # (BH, T)
+    b: jax.Array,      # (BH, T, N)
+    c: jax.Array,      # (BH, T, N)
+    s0: jax.Array,     # (BH, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """S_t = exp(alpha_t) S_{t-1} + dt_t (x_t outer B_t);  y_t = S_t . C_t"""
+
+    def step(s, inp):
+        x_t, dt_t, a_t, b_t, c_t = inp  # (BH,P) (BH,) (BH,) (BH,N) (BH,N)
+        s = (
+            jnp.exp(a_t)[:, None, None] * s
+            + dt_t[:, None, None] * x_t[:, :, None] * b_t[:, None, :]
+        )
+        y_t = jnp.einsum("bpn,bn->bp", s, c_t)
+        return s, y_t
+
+    xs = (
+        jnp.swapaxes(x, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(dt, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(alpha, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(b, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(c, 0, 1).astype(jnp.float32),
+    )
+    s_f, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.swapaxes(ys, 0, 1).astype(x.dtype), s_f

@@ -1,0 +1,235 @@
+"""Parameter / input / cache sharding rules for every (arch x shape x mesh).
+
+Two rule sets:
+
+* ``train`` — 2-D sharding: the "model" axis carries tensor/expert
+  parallelism and the "data" axis additionally shards parameter + optimizer
+  state storage (FSDP / ZeRO-3): with layer-stacked params iterated by
+  ``lax.scan``, GSPMD all-gathers one layer at a time, so resident state is
+  fully sharded while the per-layer working set is one layer's weights.
+  FSDP stays on the intra-pod "data" axis; only gradient all-reduces cross
+  the "pod" axis (hierarchical reduction).
+
+* ``serve`` — 1-D: weights sharded over "model" only (no optimizer state to
+  amortize; per-layer gathers would sit on the decode latency path).
+
+Decode caches are **sequence-sharded** over "model" (and over "data" too
+when batch==1, i.e. long_500k): each chip holds a contiguous KV slice and
+computes partial attention; GSPMD turns the softmax reduction into tiny
+(B, Hq) collectives — cluster-scale flash-decoding.  This is the same
+decomposition as the paper's mvm_x/recurrent split: the per-chunk score
+work is dependency-free and parallel, only the tiny softmax state is
+sequential/global.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import data_axes
+
+_STACKED = ("layers", "enc_layers", "dec_layers")
+
+# (regex on "/"-joined path) -> spec name
+_TRAIN_RULES = [
+    (r"moe/w_(gate|up)$", ("model", "data", None)),      # (E, d, ff)
+    (r"moe/w_down$", ("model", None, "data")),           # (E, ff, d)
+    (r"moe/router$", (None, None)),
+    (r"moe/shared/w_(gate|up)$", ("data", "model")),
+    (r"moe/shared/w_down$", ("model", "data")),
+    (r"(wq|wk|wv|w_gate|w_up)$", ("data", "model")),     # (d, out)
+    (r"(wo|w_down)$", ("model", "data")),                # (in, d)
+    (r"(in_proj)$", ("data", "model")),
+    (r"(out_proj)$", ("model", "data")),
+    (r"conv_w$", ("model", None)),
+    (r"embed$", ("model", "data")),                      # (V, d)
+    (r"lm_head$", ("data", "model")),
+    (r"dense/w$", (None, None)),
+]
+
+_SERVE_RULES = [
+    # experts 2-D sharded even in serve: 132B MoE weights do not fit at
+    # model-axis-only sharding (264 GB / 16 = 16.5 GB/dev); candidates are
+    # tried in order until every dim divides (qwen2-moe's 60 experts fall
+    # through to (d, ff) sharding)
+    (r"moe/w_(gate|up)$", [("model", None, "data"), (None, "data", "model")]),
+    (r"moe/w_down$", [("model", "data", None), (None, "model", "data")]),
+    (r"moe/router$", (None, None)),
+    (r"moe/shared/w_(gate|up)$", (None, "model")),
+    (r"moe/shared/w_down$", ("model", None)),
+    (r"(wq|wk|wv|w_gate|w_up)$", (None, "model")),
+    (r"(wo|w_down)$", ("model", None)),
+    (r"(in_proj)$", (None, "model")),
+    (r"(out_proj)$", ("model", None)),
+    (r"conv_w$", ("model", None)),
+    (r"embed$", ("model", None)),
+    (r"lm_head$", (None, "model")),
+    (r"dense/w$", (None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _sanitize(mesh, spec: tuple, shape: tuple) -> P:
+    """Drop mesh axes from dims they don't divide evenly (jit in_shardings
+    require exact divisibility; e.g. granite's vocab 49155 % 16 != 0 —
+    such dims are replicated instead)."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        if axes is not None and dim % _axis_size(mesh, axes) != 0:
+            axes = None
+        out.append(axes)
+    return P(*out)
+
+
+def _spec_for(path_s: str, leaf, rules, mesh=None) -> P:
+    stacked = any(s in path_s for s in _STACKED)
+    for pat, axes in rules:
+        if not re.search(pat, path_s):
+            continue
+        candidates = axes if isinstance(axes, list) else [axes]
+        chosen = None
+        for cand in candidates:
+            spec = (None, *cand) if stacked else tuple(cand)
+            if len(spec) != leaf.ndim:
+                continue
+            if mesh is None or all(
+                a is None or dim % _axis_size(mesh, a) == 0
+                for dim, a in zip(leaf.shape, spec)
+            ):
+                chosen = spec
+                break
+        if chosen is None:  # fall back: first candidate, sanitized per-dim
+            spec = (None, *candidates[0]) if stacked else tuple(candidates[0])
+            if len(spec) != leaf.ndim:
+                return P()
+            chosen = spec
+        if mesh is not None:
+            return _sanitize(mesh, chosen, leaf.shape)
+        return P(*chosen)
+    return P()  # norms, biases, scalars: replicated
+
+
+def _strip_model(axes):
+    if isinstance(axes, list):
+        return [_strip_model(a) for a in axes]
+    return tuple(None if a == "model" else a for a in axes)
+
+
+#: pure data-parallel rules: FSDP over "data", no tensor parallelism — the
+#: right posture for small models (a 130M model tensor-parallel over 16
+#: chips is all resharding and no compute; the paper makes the same point
+#: about monolithic engines vs. small layers).
+_DP_RULES = [(pat, _strip_model(axes)) for pat, axes in _TRAIN_RULES]
+
+
+def param_shardings(mesh, params_abs: Any, mode: str = "train"):
+    """Pytree of NamedShardings matching the (abstract) parameter pytree.
+
+    mode: "train" (2-D FSDP) | "serve" (1-D, latency-first) | "serve_2d"
+    (2-D weight sharding without optimizer state) | "dp" (no TP; small
+    models use the model axis as extra data parallelism).
+    """
+    rules = {"serve": _SERVE_RULES, "dp": _DP_RULES}.get(mode, _TRAIN_RULES)
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, _spec_for(_path_str(path), leaf, rules, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, params_abs)
+
+
+def opt_shardings(mesh, opt_abs: Any, p_shard: Any, mode: str = "train"):
+    """m/v/err mirror the parameter shardings; step is replicated."""
+    rules = _DP_RULES if mode == "dp" else _TRAIN_RULES
+
+    def build(path, leaf):
+        ps = _path_str(path)
+        if ps.startswith(("m/", "v/", "err/")):
+            sub = ps.split("/", 1)[1]
+            return NamedSharding(mesh, _spec_for(sub, leaf, rules, mesh))
+        return NamedSharding(mesh, P())  # step
+
+    return jax.tree_util.tree_map_with_path(build, opt_abs)
+
+
+def batch_shardings(mesh, batch_abs: Any, shape: InputShape,
+                    extra_axes: tuple = ()):
+    """Inputs: batch over the data axes (replicated when batch == 1).
+
+    ``extra_axes``: additional mesh axes folded into the batch sharding
+    (the "dp_all" posture shards batch over data AND model).
+    """
+    da = (*data_axes(mesh), *extra_axes)
+    bspec = da if shape.global_batch % _prod(mesh, da) == 0 else None
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(bspec, *(None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_abs)
+
+
+def cache_shardings(mesh, cache_abs: Any, cfg: ArchConfig, shape: InputShape):
+    """Decode caches: sequence-sharded KV; SSM state sharded over heads."""
+    da = data_axes(mesh)
+    b = shape.global_batch
+    batch_ok = b % _prod(mesh, da) == 0
+    bspec = da if batch_ok else None
+    # when the batch cannot use the data axes (long_500k b=1), fold them
+    # into the sequence sharding instead
+    seq_axes = ("model",) if batch_ok else (*da, "model")
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0 or ps.endswith("pos"):
+            return NamedSharding(mesh, P())
+        if re.search(r"(^|/)(k|v|xk|xv)$", ps):
+            # (L, B, S, Hkv, hd): shard S
+            return NamedSharding(
+                mesh, _sanitize(mesh, (None, bspec, seq_axes, None, None), leaf.shape)
+            )
+        if ps.endswith("ssd"):
+            # (L, B, H, P, N): shard SSD heads over model
+            return NamedSharding(
+                mesh, _sanitize(mesh, (None, bspec, "model", None, None), leaf.shape)
+            )
+        if ps.endswith("conv"):
+            return NamedSharding(
+                mesh, _sanitize(mesh, (None, bspec, None, "model"), leaf.shape)
+            )
+        return NamedSharding(mesh, P(*(None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abs)
+
+
+def _prod(mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out

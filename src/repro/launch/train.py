@@ -1,0 +1,71 @@
+"""Training launcher: --arch <id> on the available mesh.
+
+On a real cluster this binary runs under the usual multi-host bootstrap
+(jax.distributed.initialize from the env); in this container it runs the
+reduced config on host devices.  The full-mesh lowering path is exercised
+by launch/dryrun.py (512 placeholder devices).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 50 --reduced [--pp 0] [--compress-grads]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.lm import LmDataConfig, lm_stream
+from repro.models.api import get_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = get_model(cfg)
+
+    data_cfg = LmDataConfig(
+        vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.batch
+    )
+    opt = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps,
+                      compress_grads=args.compress_grads)
+    trainer = Trainer(
+        loss_fn=lambda p, b: api.loss_fn(p, b, cfg),
+        init_params_fn=lambda rng: api.init_params(rng, cfg),
+        data_iter=(
+            {k: jnp.asarray(v) for k, v in b.items()} for b in lm_stream(data_cfg)
+        ),
+        cfg=TrainerConfig(
+            total_steps=args.steps,
+            checkpoint_every=max(args.steps // 2, 1),
+            microbatches=args.microbatches or cfg.train_microbatches,
+            opt=opt,
+        ),
+        ckpt_dir=args.ckpt or f"runs/train_{args.arch}",
+    )
+    result = trainer.run(jax.random.PRNGKey(0))
+    print(f"{args.arch}: step {result.step} "
+          f"loss {result.losses[0]:.3f} -> {result.losses[-1]:.3f} "
+          f"stragglers={len(result.straggler_events)} "
+          f"resumed_from={result.resumed_from}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Encoder–decoder backbone (seamless-m4t-large-v2).
+
+The audio frontend is a stub per the assignment: ``input_specs`` delivers
+precomputed frame embeddings (B, S_enc, d) straight to the encoder.  The
+encoder is bidirectional self-attention; the decoder is causal self-attn +
+cross-attn over the encoder output + SwiGLU MLP.
+
+The encoder -> decoder boundary is structurally the same hard sync point as
+the paper's autoencoder latent bottleneck (Sec. III-D): nothing in the
+decoder can start before the encoder finishes, which is exactly how the
+pipeline planner (core/stage_balance) treats it — two segments, no
+timestep overlap across the boundary.
+
+Decode-shape semantics (assignment: "one new token with a KV cache of
+seq_len"): the decoder self-attention cache has seq_len slots; cross K/V
+are precomputed once from the encoder output (ENC_LEN_DECODE frames).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.flash_attention import flash_attention
+from repro.models.layers import NO_SHARD, ShardCtx
+
+#: encoder frames fed to cross-attention in decode shapes (~30 s of speech).
+ENC_LEN_DECODE = 4096
+
+
+def init_enc_layer(key, cfg: ArchConfig) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": L.init_attention(ka, cfg),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_dec_layer(key, cfg: ArchConfig) -> dict:
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "self_attn": L.init_attention(ka, cfg),
+        "cross_attn": L.init_attention(kx, cfg, cross=True),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(
+        jax.random.split(kenc, cfg.n_enc_layers)
+    )
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(
+        jax.random.split(kdec, cfg.n_layers)
+    )
+    return {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "ln_enc": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, frames: jax.Array, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD,
+           remat: bool = True) -> jax.Array:
+    """frames: (B, S_enc, d) precomputed frontend embeddings -> (B, S_enc, d)."""
+    b, s, _ = frames.shape
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def body(x, lp):
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._proj_qkv(lp["attn"], xn, xn, cfg)
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        if s > T._FLASH_THRESHOLD:
+            out = flash_attention(q, k, v, False, None, 0)
+        else:
+            out = L.sdpa(q, k, v, causal=False)
+        x = x + out.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        return L.constrain_residual(
+            x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx), ctx)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(
+        lambda x, lp: (body(x, lp), None), frames.astype(cfg.dtype),
+        params["enc_layers"],
+    )
+    return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder (training / prefill path)
+# ---------------------------------------------------------------------------
+
+def _dec_layer(x, lp, enc_out, cfg: ArchConfig, rope, ctx: ShardCtx):
+    b, s, _ = x.shape
+    xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L._proj_qkv(lp["self_attn"], xn, xn, cfg)
+    cos, sin = rope
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    if s > T._FLASH_THRESHOLD:
+        out = flash_attention(q, k, v, True, None, 0)
+    else:
+        out = L.sdpa(q, k, v, causal=True)
+    x = x + out.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["self_attn"]["wo"]
+    xn = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    x = x + L.attention(lp["cross_attn"], xn, cfg, rope=None, causal=False,
+                        x_kv=enc_out, ctx=ctx)
+    return L.constrain_residual(
+        x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx), ctx)
+
+
+def forward(params, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD, remat=True):
+    """batch: {"frontend_embeds": (B,S_enc,d), "tokens": (B,S_dec)} -> logits."""
+    enc_out = encode(params, batch["frontend_embeds"], cfg, ctx, remat)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    s = x.shape[1]
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+    body = functools.partial(_dec_layer, enc_out=enc_out, cfg=cfg, rope=rope, ctx=ctx)
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(lambda x, lp: (body(x, lp), None), x, params["dec_layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    return L.softmax_xent(forward(params, batch, cfg, ctx), batch["labels"], cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        # cross-attention K/V precomputed from the encoder output
+        "xk": jnp.zeros((cfg.n_layers, batch, ENC_LEN_DECODE, cfg.n_kv_heads, hd), dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, ENC_LEN_DECODE, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len=None, ctx: ShardCtx = NO_SHARD):
+    enc_out = encode(params, batch["frontend_embeds"], cfg, ctx, remat=False)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s, _ = x.shape
+    max_len = max(max_len or s, s)
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def scan_fn(x, lp):
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._proj_qkv(lp["self_attn"], xn, xn, cfg)
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        if s > T._FLASH_THRESHOLD:
+            out = flash_attention(q, k, v, True, None, 0)
+        else:
+            out = L.sdpa(q, k, v, causal=True)
+        x = x + out.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["self_attn"]["wo"]
+        xn = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        xq, xk, xv = L._proj_qkv(lp["cross_attn"], xn, enc_out, cfg)
+        xout = L.sdpa(xq, xk, xv, causal=False)
+        x = x + xout.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["cross_attn"]["wo"]
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        k_pad = jnp.pad(k, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+        return x, (k_pad.astype(cfg.dtype), v_pad.astype(cfg.dtype),
+                   xk.astype(cfg.dtype), xv.astype(cfg.dtype))
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(scan_fn, x, params["dec_layers"])
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"], {
+        "k": ks, "v": vs, "xk": xks, "xv": xvs, "pos": jnp.asarray(s, jnp.int32),
+    }
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    pos = cache["pos"]
+
+    def scan_fn(x, inp):
+        lp, ck, cv, xk, xv = inp
+        b = x.shape[0]
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, ck, cv = L.attention_decode(
+            lp["self_attn"], xn, ck, cv, pos, cfg, use_kernel=False
+        )
+        x = x + out
+        xn = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        xq = (xn @ lp["cross_attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+        xout = L.sdpa(xq, xk, xv, causal=False)
+        x = x + xout.reshape(b, 1, cfg.n_heads * cfg.hd) @ lp["cross_attn"]["wo"]
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        scan_fn, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+    )
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"], {
+        "k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"], "pos": pos + 1,
+    }

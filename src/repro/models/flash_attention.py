@@ -1,0 +1,232 @@
+"""Blocked (flash) attention in pure jnp with a custom VJP — GQA-aware.
+
+Why this exists: the 32k-prefill and 4k-train cells cannot materialize the
+(S x S) score matrix (32k^2 fp32 per head is ~4 GB/head); attention must be
+computed in (q_block x kv_block) tiles with an online softmax, and the
+backward pass must *recompute* tiles instead of saving them.  JAX's default
+AD through a scan would stash every tile as a residual (O(S^2) again), so
+the backward is written by hand (standard FlashAttention-2 recurrences).
+
+This is the XLA-level twin of ``kernels/decode_attn`` (which handles the
+single-query decode case in Pallas); prefill/train use this function, and
+GSPMD shards it over batch/heads without further help.  Collective-free by
+construction — sequence never crosses shards.
+
+Layout: q (B, Sq, Hq, D), k/v (B, Sk, Hkv, D), GQA groups G = Hq/Hkv are
+computed via a reshape of q — K/V are never repeated in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _data_zero(x: jax.Array) -> jax.Array:
+    """An int32 zero that is data-dependent (not a trace-time constant).
+
+    Used to seed block counters so position masks cannot be hoisted out of
+    differentiated scans as loop-invariant constants (which would
+    materialize every (q_block, kv_block) mask tile at once).
+    """
+    return jax.lax.stop_gradient(x.ravel()[0] * 0).astype(jnp.int32)
+
+
+def _block_mask(qi, kj, qb, kb, sq, sk, causal, window, q_offset):
+    """(qb, kb) boolean mask for tile (qi, kj)."""
+    q_pos = qi * qb + jnp.arange(qb) + q_offset
+    k_pos = kj * kb + jnp.arange(kb)
+    m = jnp.ones((qb, kb), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    # padded tails
+    m &= (q_pos[:, None] < sq + q_offset) & (k_pos[None, :] < sk)
+    return m
+
+
+def _fwd_inner(q, k, v, causal, window, q_offset, qb, kb, sq, sk):
+    """Returns (out, lse). Shapes: q (B,nq,qb,Hkv,G,D), k/v (B,nk,kb,Hkv,D)."""
+    b, nq, _, hkv, g, d = q.shape
+    nk = k.shape[1]
+    scale = 1.0 / d**0.5
+
+    # NOTE: block indices are threaded through loop CARRIES seeded with a
+    # data-dependent zero.  Masks depend only on positions, so when a layer
+    # scan is differentiated, JAX hoists them out of the (backward) scan as
+    # loop-invariant constants and materializes the FULL (nq x nk x tile)
+    # bool stack — gigabytes at 32k sequence (verified empirically; see
+    # EXPERIMENTS.md §Perf iteration 0).  Seeding the counter with
+    # stop_gradient(q[0]*0) makes the chain data-dependent, so each tile's
+    # mask is recomputed per iteration (one iota+compare) and never stacked.
+    def per_qblock(qi, q_i):
+        # q_i: (B, qb, Hkv, G, D)
+        def kv_step(carry, _):
+            m_run, l_run, acc, j = carry
+            k_j = jax.lax.dynamic_index_in_dim(k, j, axis=1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(v, j, axis=1, keepdims=False)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_i.astype(jnp.float32),
+                k_j.astype(jnp.float32),
+            ) * scale
+            mask = _block_mask(qi, j, qb, kb, sq, sk, causal, window, q_offset)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = corr * l_run + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_j.astype(jnp.float32))
+            acc = corr[..., None] * acc + pv
+            return (m_new, l_new, acc, j + 1), None
+
+        m0 = jnp.full((b, hkv, g, qb), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qb, d), jnp.float32)
+        (m_f, l_f, acc, _), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0, _data_zero(q)), None, length=nk
+        )
+        l_safe = jnp.maximum(l_f, 1e-30)
+        out_i = acc / l_safe[..., None]              # (B,Hkv,G,qb,D)
+        lse_i = m_f + jnp.log(l_safe)                # (B,Hkv,G,qb)
+        return jnp.moveaxis(out_i, 3, 1), lse_i      # (B,qb,Hkv,G,D)
+
+    def q_step(qi, q_i):
+        out_i, lse_i = per_qblock(qi, q_i)
+        return qi + 1, (out_i, lse_i)
+
+    _, (outs, lses) = jax.lax.scan(
+        q_step, _data_zero(q), jnp.moveaxis(q, 1, 0)
+    )
+    return jnp.moveaxis(outs, 0, 1), jnp.moveaxis(lses, 0, 1)  # (B,nq,...)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, q_block, kv_block)
+    return out
+
+
+def _pad_blocks(x, axis, block):
+    s = x.shape[axis]
+    pad = (-s) % block
+    if pad:
+        cfgpad = [(0, 0)] * x.ndim
+        cfgpad[axis] = (0, pad)
+        x = jnp.pad(x, cfgpad)
+    return x, s
+
+
+def _prep(q, k, v, q_block, kv_block):
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q, _ = _pad_blocks(q, 1, q_block)
+    k, _ = _pad_blocks(k, 1, kv_block)
+    v, _ = _pad_blocks(v, 1, kv_block)
+    nq, nk = q.shape[1] // q_block, k.shape[1] // kv_block
+    qb = q.reshape(b, nq, q_block, hkv, g, d)
+    kb = k.reshape(b, nk, kv_block, hkv, d)
+    vb = v.reshape(b, nk, kv_block, hkv, d)
+    return qb, kb, vb, (b, sq, sk, hq, hkv, g, d, nq, nk)
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, q_block, kv_block):
+    qb_, kb_, vb_, (b, sq, sk, hq, hkv, g, d, nq, nk) = _prep(
+        q, k, v, q_block, kv_block
+    )
+    out_b, lse_b = _fwd_inner(
+        qb_, kb_, vb_, causal, window, q_offset, q_block, kv_block, sq, sk
+    )
+    out = out_b.reshape(b, nq * q_block, hkv, g, d)[:, :sq]
+    out = out.reshape(b, sq, hq, d).astype(q.dtype)
+    return out, (q, k, v, out, lse_b)
+
+
+def _flash_bwd(causal, window, q_offset, q_block, kv_block, res, dout):
+    q, k, v, out, lse_b = res
+    qb_, kb_, vb_, (b, sq, sk, hq, hkv, g, d, nq, nk) = _prep(
+        q, k, v, q_block, kv_block
+    )
+    do_, _ = _pad_blocks(dout.astype(jnp.float32), 1, q_block)
+    do_b = do_.reshape(b, nq, q_block, hkv, g, d)
+    o_, _ = _pad_blocks(out.astype(jnp.float32), 1, q_block)
+    o_b = o_.reshape(b, nq, q_block, hkv, g, d)
+    # D_i = rowsum(dO * O)
+    delta = jnp.einsum("bnqhgd,bnqhgd->bnhgq", do_b, o_b)  # (B,nq,Hkv,G,qb)
+    scale = 1.0 / d**0.5
+
+    def per_qblock(carry, inp):
+        dk_acc, dv_acc, qi = carry
+        q_i, do_i, lse_i, delta_i = inp
+
+        def kv_step(carry_j, _):
+            dq_i, dk_a, dv_a, j = carry_j
+            k_j = jax.lax.dynamic_index_in_dim(kb_, j, axis=1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb_, j, axis=1, keepdims=False)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_i.astype(jnp.float32),
+                k_j.astype(jnp.float32),
+            ) * scale
+            mask = _block_mask(
+                qi, j, q_block, kv_block, sq, sk, causal, window, q_offset
+            )
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])                    # (B,H,G,qb,kb)
+            dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p, do_i)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i, v_j.astype(jnp.float32))
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_j.astype(jnp.float32))
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_i.astype(jnp.float32))
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, jax.lax.dynamic_index_in_dim(dk_a, j, 1, False) + dk_j, j, 1
+            )
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, jax.lax.dynamic_index_in_dim(dv_a, j, 1, False) + dv_j, j, 1
+            )
+            return (dq_i, dk_a, dv_a, j + 1), None
+
+        dq0 = jnp.zeros((b, q_block, hkv, g, d), jnp.float32)
+        (dq_i, dk_acc, dv_acc, _), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc, _data_zero(q_i)),
+            None, length=nk,
+        )
+        return (dk_acc, dv_acc, qi + 1), dq_i
+
+    dk0 = jnp.zeros_like(kb_, dtype=jnp.float32)
+    dv0 = jnp.zeros_like(vb_, dtype=jnp.float32)
+    (dk_b, dv_b, _), dq_b = jax.lax.scan(
+        per_qblock,
+        (dk0, dv0, _data_zero(q)),
+        (
+            jnp.moveaxis(qb_, 1, 0),
+            jnp.moveaxis(do_b, 1, 0),
+            jnp.moveaxis(lse_b, 1, 0),
+            jnp.moveaxis(delta, 1, 0),
+        ),
+    )
+    dq = jnp.moveaxis(dq_b, 0, 1).reshape(b, nq * q_block, hkv, g, d)[:, :sq]
+    dq = dq.reshape(b, sq, hq, d).astype(q.dtype)
+    dk = dk_b.reshape(b, -1, hkv, d)[:, :sk].astype(k.dtype)
+    dv = dv_b.reshape(b, -1, hkv, d)[:, :sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,187 @@
+"""Hymba-style hybrid blocks: parallel attention + SSM heads (hymba-1.5b).
+
+Each layer runs a GQA attention branch and a Mamba-2 SSM branch *in
+parallel* on the same normed input; branch outputs are per-branch
+RMS-normed and averaged (Hymba's fused-head formulation, simplified to
+equal branch weights — noted in DESIGN.md), then a SwiGLU MLP follows.
+
+Attention is sliding-window (cfg.sliding_window) in every layer — Hymba's
+three global-attention layers are approximated by the window (deviation
+recorded in DESIGN.md §Arch-applicability).  Window attention + O(1) SSM
+state keeps decode memory bounded, so hymba runs the long_500k cell with a
+ring-buffer KV cache of window size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.layers import NO_SHARD, ShardCtx
+
+
+def init_layer(key, cfg: ArchConfig) -> dict:
+    ka, ks, km = jax.random.split(key, 3)
+    return {
+        "attn": L.init_attention(ka, cfg),
+        "ssm": S.init_ssm_block(ks, cfg, hybrid_branch=True),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm_attn": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm_ssm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kl, cfg.n_layers)
+    )
+    return {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+
+
+def _fused_branches(lp, xn, cfg: ArchConfig, rope, ctx: ShardCtx):
+    attn_out = T._attn_full(lp["attn"], xn, cfg, rope, ctx)
+    ssm_out, _ = S.ssm_block(lp["ssm"], xn, cfg, hybrid_branch=True)
+    return 0.5 * (
+        L.rms_norm(attn_out, lp["norm_attn"], cfg.norm_eps)
+        + L.rms_norm(ssm_out, lp["norm_ssm"], cfg.norm_eps)
+    )
+
+
+def forward(params, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD, remat=True):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    s = x.shape[1]
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def body(x, lp):
+        x = x + _fused_branches(lp, L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, rope, ctx)
+        return L.constrain_residual(
+            x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx), ctx)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(lambda x, lp: (body(x, lp), None), x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    return L.softmax_xent(forward(params, batch, cfg, ctx), batch["labels"], cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving: ring-buffer window KV cache + SSM state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Window-bounded attention cache (ring buffer) + SSM state.
+
+    The KV ring holds only ``min(window, max_len)`` slots — decode memory is
+    O(window), independent of sequence length (the long_500k enabler).
+    """
+    dtype = dtype or cfg.dtype
+    w = min(cfg.sliding_window or max_len, max_len)
+    one = S.init_ssm_state(cfg, batch, hybrid_branch=True)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+        "state": jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)), one
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len=None, ctx: ShardCtx = NO_SHARD):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s, _ = x.shape
+    max_len = max(max_len or s, s)
+    w = min(cfg.sliding_window or max_len, max_len)  # ring size == cache size
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def scan_fn(x, lp):
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._proj_qkv(lp["attn"], xn, xn, cfg)
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        from repro.models.flash_attention import flash_attention
+
+        if s > T._FLASH_THRESHOLD:
+            a_out = flash_attention(q, k, v, True, cfg.sliding_window, 0)
+        else:
+            a_out = L.sdpa(q, k, v, causal=True, window=cfg.sliding_window)
+        a_out = a_out.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        s_out, st = S.ssm_block(lp["ssm"], xn, cfg, hybrid_branch=True)
+        x = x + 0.5 * (
+            L.rms_norm(a_out, lp["norm_attn"], cfg.norm_eps)
+            + L.rms_norm(s_out, lp["norm_ssm"], cfg.norm_eps)
+        )
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        # ring-buffer layout: slot(pos) = pos % w; the last min(w, s) prompt
+        # positions land at their slots
+        keep = min(w, s)
+        idx = (jnp.arange(s - keep, s)) % w
+        k_ring = jnp.zeros((b, w, cfg.n_kv_heads, cfg.hd), cfg.dtype).at[:, idx].set(
+            k[:, -keep:].astype(cfg.dtype)
+        )
+        v_ring = jnp.zeros((b, w, cfg.n_kv_heads, cfg.hd), cfg.dtype).at[:, idx].set(
+            v[:, -keep:].astype(cfg.dtype)
+        )
+        return x, (k_ring, v_ring, st)
+
+    x, (ks, vs, states) = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"], {
+        "k": ks, "v": vs, "state": states, "pos": jnp.asarray(s, jnp.int32),
+    }
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    pos = cache["pos"]
+    w = cache["k"].shape[2]
+    slot = pos % w
+
+    def scan_fn(x, inp):
+        lp, ck, cv, st = inp
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        b = xn.shape[0]
+        q, k, v = L._proj_qkv(lp["attn"], xn, xn, cfg)
+        cos, sin = L.rope_tables(pos[None], cfg.hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+        # all slots valid once pos+1 >= w; rope was applied at write time, and
+        # softmax is order-invariant, so ring order is harmless
+        a_out = L.sdpa(q, ck, cv, causal=False, kv_len=jnp.minimum(pos + 1, w))
+        a_out = a_out.reshape(b, 1, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        s_out, st = S.ssm_block_decode(lp["ssm"], xn, st, cfg, hybrid_branch=True)
+        x = x + 0.5 * (
+            L.rms_norm(a_out, lp["norm_attn"], cfg.norm_eps)
+            + L.rms_norm(s_out, lp["norm_ssm"], cfg.norm_eps)
+        )
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        return x, (ck, cv, st)
+
+    x, (ks, vs, states) = jax.lax.scan(
+        scan_fn, x, (params["layers"], cache["k"], cache["v"], cache["state"])
+    )
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"], {
+        "k": ks, "v": vs, "state": states, "pos": pos + 1,
+    }

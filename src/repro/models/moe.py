@@ -1,0 +1,228 @@
+"""Mixture-of-Experts transformer (dbrx-132b, qwen2-moe-a2.7b).
+
+Expert FFNs use the capacity-based einsum dispatch (GShard/Switch lineage):
+tokens are grouped (one group per batch row), each group's tokens are
+assigned top-k experts with a per-expert capacity ``C = ceil(S*k/E * cf)``,
+and dispatch/combine are one-hot einsums — the layout that shards cleanly
+with expert parallelism (E over the "model" axis, groups over "data").
+Overflowed tokens are dropped (standard capacity-factor semantics) and the
+router carries the usual load-balance auxiliary loss.
+
+qwen2-moe additionally has *shared* experts that see every token — folded
+into one dense SwiGLU of width ``n_shared * d_ff`` running alongside the
+routed experts.
+
+Attention / embeddings / serving reuse the dense transformer pieces; only
+the FFN differs.  Per-layer loads are *heterogeneous at runtime* (router-
+dependent), which is exactly the unbalanced-stage regime the paper's
+balanced-II technique targets — see core/stage_balance.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.layers import NO_SHARD, ShardCtx
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_moe_ffn(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    e, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale = (1.0 / d) ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * scale).astype(
+            jnp.float32  # router always fp32 (routing stability)
+        ),
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * scale).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d), jnp.float32) * (1.0 / ff) ** 0.5).astype(cfg.dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, cfg.n_shared_experts * ff, cfg.dtype)
+    return p
+
+
+def init_layer(key, cfg: ArchConfig) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": L.init_attention(ka, cfg),
+        "moe": init_moe_ffn(km, cfg),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kl, cfg.n_layers)
+    )
+    return {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# routed FFN
+# ---------------------------------------------------------------------------
+
+def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = -(-tokens_per_group * cfg.top_k * cfg.moe_capacity_factor // cfg.n_experts)
+    return max(int(c), 1)
+
+
+def moe_ffn(
+    p: dict, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (G, S, d) -> (out (G, S, d), aux_loss scalar).
+
+    G is the dispatch-group axis (batch rows); sharded over "data".  The
+    expert axis of the einsums shards over "model" (expert parallelism).
+    """
+    g, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ p["router"])        # (G,S,E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                # (G,S,k)
+
+    # position of each (token, choice) in its expert's capacity buffer:
+    # flatten choices in (s, k) priority order, cumulative-count per expert.
+    choice_e = jax.nn.one_hot(top_i, e, dtype=jnp.int32)  # (G,S,k,E)
+    flat = choice_e.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                    # (G,S*k,E)
+    pos = (pos * flat).sum(-1).reshape(g, s, k)           # (G,S,k) slot index
+    expert_of = top_i
+    keep = pos < c                                        # dropped on overflow
+
+    # combine[g,s,e,c] = prob of the kept (s -> e, slot c) assignment
+    combine = jnp.zeros((g, s, e, c), jnp.float32)
+    for j in range(k):  # k is small and static (4)
+        oh_e = jax.nn.one_hot(expert_of[:, :, j], e, dtype=jnp.float32)
+        oh_c = jax.nn.one_hot(pos[:, :, j], c, dtype=jnp.float32)
+        w = top_p[:, :, j] * keep[:, :, j]
+        combine = combine + jnp.einsum("gs,gse,gsc->gsec", w, oh_e, oh_c)
+    dispatch = (combine > 0).astype(cfg.dtype)            # (G,S,E,C)
+
+    # ---- expert computation (E shards over "model") -----------------------
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, x.astype(cfg.dtype))
+    xe = ctx.constrain(xe, jax.sharding.PartitionSpec(ctx.batch_spec, ctx.model_axis, None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(cfg.dtype), ye)
+
+    # ---- shared (always-on) experts ----------------------------------------
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], x, ctx)
+
+    # ---- load-balance auxiliary loss (Switch) -------------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i[:, :, 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# model: forward / loss / serving
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(carry, lp, cfg: ArchConfig, rope, ctx: ShardCtx):
+    x, aux = carry
+    x = x + T._attn_full(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, rope, ctx)
+    h, a = moe_ffn(lp["moe"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+    return (L.constrain_residual(x + h, ctx), aux + a)
+
+
+def forward(
+    params, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD, remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    x = T.embed_inputs(params, batch, cfg)
+    s = x.shape[1]
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+    body = functools.partial(_layer_fwd, cfg=cfg, rope=rope, ctx=ctx)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, lp):
+        return body(carry, lp), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"], aux / cfg.n_layers
+
+
+AUX_COEF = 1e-2
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    logits, aux = forward(params, batch, cfg, ctx)
+    return L.softmax_xent(logits, batch["labels"], cfg.vocab) + AUX_COEF * aux
+
+
+init_cache = T.init_cache  # identical attention cache layout
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len=None, ctx: ShardCtx = NO_SHARD):
+    x = T.embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    max_len = max(max_len or s, s)
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def scan_fn(x, lp):
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, kk, v = L._proj_qkv(lp["attn"], xn, xn, cfg)
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        kk = L.apply_rope(kk, cos, sin)
+        from repro.models.flash_attention import flash_attention
+
+        if s > T._FLASH_THRESHOLD:
+            out = flash_attention(q, kk, v, True, None, 0)
+        else:
+            out = L.sdpa(q, kk, v, causal=True)
+        x = x + out.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        h, _ = moe_ffn(lp["moe"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+        x = x + h
+        k_pad = jnp.pad(kk, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+        return x, (k_pad.astype(cfg.dtype), v_pad.astype(cfg.dtype))
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"], {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    pos = cache["pos"]
+
+    def scan_fn(x, inp):
+        lp, ck, cv = inp
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, ck, cv = L.attention_decode(
+            lp["attn"], xn, ck, cv, pos, cfg, use_kernel=False
+        )
+        x = x + out
+        h, _ = moe_ffn(lp["moe"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+        return x + h, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"], {"k": ks, "v": vs, "pos": pos + 1}

@@ -1,0 +1,198 @@
+"""Dense GQA decoder-only transformer (llama-style) + VLM-backbone variant.
+
+Covers assigned archs: yi-9b, qwen1.5-4b (QKV bias), granite-3-2b,
+smollm-360m, llava-next-34b (vision frontend stub: precomputed patch
+embeddings are spliced in front of the token embeddings, per the assignment's
+"modality frontend is a STUB" rule).
+
+Layer parameters are *stacked* along a leading L axis and iterated with
+``lax.scan`` — compile time stays flat in depth (60-layer llava lowers as one
+loop), and remat wraps the body.  Attention uses the blocked flash
+implementation for any sequence longer than ``_FLASH_THRESHOLD`` so the
+(S x S) score tensor never materializes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.flash_attention import flash_attention
+from repro.models.layers import NO_SHARD, ShardCtx
+
+_FLASH_THRESHOLD = 1024  # use flash attention above this sequence length
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": L.init_attention(ka, cfg),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.padded_vocab, cfg.dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_full(p, x, cfg: ArchConfig, rope, ctx: ShardCtx):
+    b, s, _ = x.shape
+    q, k, v = L._proj_qkv(p, x, x, cfg)
+    cos, sin = rope
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    q = ctx.constrain(q, jax.sharding.PartitionSpec(ctx.batch_spec, None, ctx.model_axis, None))
+    if s > _FLASH_THRESHOLD:
+        out = flash_attention(q, k, v, True, cfg.sliding_window, 0)
+    else:
+        out = L.sdpa(q, k, v, causal=True, window=cfg.sliding_window)
+    return out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def _layer_fwd(x, lp, cfg: ArchConfig, rope, ctx: ShardCtx):
+    x = x + _attn_full(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, rope, ctx)
+    h = L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+    # carried residual stream sharded over "model" (see ShardCtx.residual):
+    # the remat stack is the dominant train-memory term (L, B, S, d) and
+    # must not be replicated across the model axis (llava: 56 GB/dev if it
+    # is).  GSPMD inserts the per-layer reshards around the matmuls.
+    return L.constrain_residual(x + h, ctx)
+
+
+def embed_inputs(params, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Token embeddings, with frontend embeddings spliced in front (VLM)."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.frontend is not None and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(x.dtype)  # (B, P, d)
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def forward(
+    params: dict, batch: dict, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD,
+    remat: bool = True,
+) -> jax.Array:
+    """Full-sequence causal LM forward -> logits (B, S, V)."""
+    x = embed_inputs(params, batch, cfg)
+    s = x.shape[1]
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    body = functools.partial(_layer_fwd, cfg=cfg, rope=rope, ctx=ctx)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, lp):
+        return body(x, lp), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    logits = forward(params, batch, cfg, ctx)
+    labels = batch["labels"]
+    if cfg.frontend is not None and "frontend_embeds" in batch:
+        # frontend positions carry no next-token loss; score text tail only
+        logits = logits[:, -labels.shape[1]:]
+    return L.softmax_xent(logits, labels, cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(
+    params: dict, batch: dict, cfg: ArchConfig, max_len: int | None = None,
+    ctx: ShardCtx = NO_SHARD,
+) -> tuple[jax.Array, dict]:
+    """Process the whole prompt; returns (last-token logits, filled cache)."""
+    x = embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    max_len = max(max_len or s, s)
+    rope = L.rope_tables(jnp.arange(s), cfg.hd, cfg.rope_theta)
+
+    def scan_fn(x, lp):
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._proj_qkv(lp["attn"], xn, xn, cfg)
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        if s > _FLASH_THRESHOLD:
+            out = flash_attention(q, k, v, True, cfg.sliding_window, 0)
+        else:
+            out = L.sdpa(q, k, v, causal=True, window=cfg.sliding_window)
+        out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        x = x + out
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        k_pad = jnp.pad(k, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+        return x, (k_pad.astype(cfg.dtype), v_pad.astype(cfg.dtype))
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(
+    params: dict, cache: dict, batch: dict, cfg: ArchConfig,
+    ctx: ShardCtx = NO_SHARD,
+) -> tuple[jax.Array, dict]:
+    """One new token against the cache. batch["tokens"]: (B, 1)."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B, 1, d)
+    pos = cache["pos"]
+
+    def scan_fn(x, inp):
+        lp, ck, cv = inp
+        xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, ck, cv = L.attention_decode(
+            lp["attn"], xn, ck, cv, pos, cfg,
+            window=cfg.sliding_window, use_kernel=False,
+        )
+        x = x + out
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

@@ -1,0 +1,62 @@
+"""Shared train-step builder: loss + grad (+ microbatch accumulation) + AdamW.
+
+Gradient accumulation serves two purposes here:
+  * memory: the remat residual stack scales with the per-device microbatch,
+    so deep/wide models (llava-next-34b) fit the 16 GB/chip budget by
+    splitting the global batch into sequential microbatches (the stacks are
+    the dominant train-memory term; see EXPERIMENTS.md §Dry-run);
+  * communication: gradients are accumulated locally in fp32 and the
+    data-parallel reduction happens ONCE at the step boundary (GSPMD moves
+    the all-reduce outside the accumulation loop), which is the standard
+    overlap/amortization trick at multi-pod scale.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(
+    loss_fn: Callable,          # (params, batch) -> scalar loss
+    opt_cfg: AdamWConfig,
+    microbatches: int = 1,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (loss, params, opt)."""
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(
+                    microbatches, x.shape[0] // microbatches, *x.shape[1:]
+                ),
+                batch,
+            )
+
+            def acc(carry, mb):
+                loss_sum, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (loss_sum + l, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), mbs
+            )
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        new_params, new_opt = adamw_update(params, grads, opt_state, opt_cfg)
+        return loss, new_params, new_opt
+
+    return train_step

@@ -1,0 +1,55 @@
+"""End-to-end GW anomaly detection: AUC + quantization parity (paper Fig. 9).
+
+Slow-ish (trains a small AE for ~200 steps on CPU); asserts the paper's two
+empirical claims on the synthetic substrate:
+  1. the LSTM autoencoder separates signal from background (AUC > 0.8),
+  2. 16-bit quantization + hardware activations change AUC negligibly.
+"""
+
+import dataclasses
+
+import pytest
+
+from benchmarks.fig9_auc import evaluate_auc, train_autoencoder
+from repro.configs.gw import GW_MODELS
+from repro.core.quant import PAPER_HW, quantize_tree
+from repro.data.gw import GwDataConfig, GwDataset
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = GW_MODELS["gw_small"]
+    params, losses, ds = train_autoencoder(cfg, steps=200, batch=32)
+    return cfg, params, losses, ds
+
+
+class TestGwEndToEnd:
+    def test_auc_separates(self, trained):
+        cfg, params, losses, ds = trained
+        auc = evaluate_auc(params, cfg, ds, n=192)
+        assert auc > 0.80, f"AUC too low: {auc}"
+
+    def test_loss_decreases(self, trained):
+        _, _, losses, _ = trained
+        assert losses[-1] < losses[0]
+
+    def test_quantization_parity(self, trained):
+        """Paper Sec. V-B: 16-bit has negligible effect on AUC."""
+        cfg, params, _, ds = trained
+        auc = evaluate_auc(params, cfg, ds, n=192)
+        auc_q = evaluate_auc(quantize_tree(params), cfg, ds, n=192)
+        cfg_hw = dataclasses.replace(cfg, acts=PAPER_HW)
+        auc_hw = evaluate_auc(quantize_tree(params), cfg_hw, ds, n=192)
+        assert abs(auc_q - auc) < 0.05
+        assert abs(auc_hw - auc) < 0.08
+
+    def test_stream_engine_fpr_calibration(self, trained):
+        cfg, params, _, ds = trained
+        from repro.serve.engine import AnomalyStreamEngine
+
+        eng = AnomalyStreamEngine(params, cfg)
+        eng.calibrate(ds.background(512), fpr=0.05)
+        fpr = eng.flag(ds.background(256)).mean()
+        tpr = eng.flag(ds.events(256)).mean()
+        assert fpr < 0.15          # near the 5% target
+        assert tpr > 3 * max(fpr, 0.02)  # detects far above false-alarm rate

@@ -1,0 +1,163 @@
+"""Validate the analytic II/DSP model against the paper's own numbers.
+
+Table II is the paper's ground truth: six designs (Z1-Z3 on Zynq 7045, U1-U3
+on U250) with measured DSP usage and timestep-loop IIs.  Eq. (3) deviates from
+the measured DSP by <= ~4 % because Vivado folds multiplications-by-simple-
+constants into adders (documented in the paper); ii matches exactly except U3
+(paper: extra routing cycles at high utilization).
+"""
+
+import pytest
+
+from repro.core.balance import TABLE2_PAPER, table2_designs
+from repro.core.ii_model import (
+    DSP_TOTAL,
+    GW_NOMINAL,
+    GW_SMALL,
+    U250,
+    ZYNQ_7045,
+    DesignPoint,
+    HlsConstants,
+    LstmLayerDims,
+    LstmModelDims,
+    ReuseFactors,
+    balanced_r_x,
+    dsp_lstm_layer,
+    ii_layer,
+    ii_mvmx_sublayer,
+    ii_recurrent_sublayer,
+    uniform_design,
+)
+
+
+class TestModelDims:
+    def test_gw_small_structure(self):
+        # 2 LSTM layers of 9 hidden units, 1-d strain input, dense head
+        assert [(d.lx, d.lh) for d in GW_SMALL.layers] == [(1, 9), (9, 9)]
+        assert GW_SMALL.dense.n_in == 9
+        assert GW_SMALL.segment_starts == (0, 1)
+
+    def test_gw_nominal_structure(self):
+        # paper Sec. V-C: four LSTM layers with hidden units 32, 8, 8, 32
+        assert [(d.lx, d.lh) for d in GW_NOMINAL.layers] == [
+            (1, 32), (32, 8), (8, 8), (8, 32),
+        ]
+        assert GW_NOMINAL.segment_starts == (0, 2)  # encoder->decoder sync
+
+
+class TestEquations:
+    def test_eq3_single_layer(self):
+        # Eq. (3) literal: 4*Lx*Lh/Rx + 4*Lh^2/Rh + 4*Lh
+        d = LstmLayerDims(lx=32, lh=32)
+        assert dsp_lstm_layer(d, ReuseFactors(r_x=1, r_h=1)) == 4096 + 4096 + 128
+        assert dsp_lstm_layer(d, ReuseFactors(r_x=2, r_h=4)) == 2048 + 1024 + 128
+
+    def test_eq7_balance(self):
+        c = HlsConstants(lt_mult=1, lt_sigma=3, lt_tail=5)
+        assert balanced_r_x(1, c) == 9  # matches Z3/U2's R_x in Table II
+
+    def test_balanced_rx_preserves_layer_ii(self):
+        c = ZYNQ_7045
+        for r_h in range(1, 12):
+            base = ReuseFactors(r_x=r_h, r_h=r_h)
+            bal = ReuseFactors(r_x=balanced_r_x(r_h, c), r_h=r_h)
+            assert ii_layer(bal, c) == ii_layer(base, c)
+            # and the mvm_x sub-layer exactly fills its shadow (Eq. 6)
+            assert ii_mvmx_sublayer(bal, c) == ii_recurrent_sublayer(bal, c)
+
+    def test_rx_beyond_balance_raises_ii(self):
+        c = ZYNQ_7045
+        bal = balanced_r_x(1, c)
+        assert ii_layer(ReuseFactors(r_x=bal + 1, r_h=1), c) > ii_layer(
+            ReuseFactors(r_x=bal, r_h=1), c
+        )
+
+
+class TestTable2:
+    """The six Table II designs, model vs paper."""
+
+    @pytest.mark.parametrize("name", list(TABLE2_PAPER))
+    def test_dsp_within_tool_noise(self, name):
+        model_dsp = table2_designs()[name].dsp_used()
+        paper_dsp = TABLE2_PAPER[name]["dsp"]
+        rel = abs(model_dsp - paper_dsp) / paper_dsp
+        assert rel < 0.05, f"{name}: model {model_dsp} vs paper {paper_dsp}"
+
+    @pytest.mark.parametrize("name", ["Z1", "Z2", "Z3", "U1", "U2"])
+    def test_ii_exact(self, name):
+        d = table2_designs()[name]
+        assert d.layer_iis()[0] == TABLE2_PAPER[name]["ii"]
+
+    def test_u3_ii_model_vs_paper(self):
+        # Paper: post-synthesis ii=13; Eq. (5) predicts 15 (the paper itself
+        # notes Eq. 5 is approximate).  Guard the model's value so a change
+        # in constants is caught.
+        d = table2_designs()["U3"]
+        assert d.layer_iis()[0] == 15
+
+    def test_z1_infeasible_z3_feasible(self):
+        # The Table II story: full unroll exceeds the Zynq (118 %); balancing
+        # brings it back under budget at the *same* II.
+        designs = table2_designs()
+        assert not designs["Z1"].fits(DSP_TOTAL["zynq7045"])
+        assert designs["Z3"].fits(DSP_TOTAL["zynq7045"])
+        assert designs["Z3"].layer_iis() == designs["Z1"].layer_iis()
+
+    def test_u2_saves_2102_dsps_at_iso_ii(self):
+        # "the DSPs of the design U2 can be reduced by 2102 while achieving
+        # the same design IIs" — our Eq.-3 model gives a close saving.
+        designs = table2_designs()
+        saving = designs["U1"].dsp_used() - designs["U2"].dsp_used()
+        assert designs["U1"].layer_iis() == designs["U2"].layer_iis()
+        assert abs(saving - 2102) / 2102 < 0.05
+
+    def test_u3_much_smaller(self):
+        # U3 consumes 3.3x / 4.1x fewer DSPs than U2 / U1 (paper Sec. V-C)
+        d = table2_designs()
+        assert d["U2"].dsp_used() / d["U3"].dsp_used() == pytest.approx(3.3, rel=0.1)
+        assert d["U1"].dsp_used() / d["U3"].dsp_used() == pytest.approx(4.1, rel=0.1)
+
+
+class TestLatencyModel:
+    def test_eq1_layer_ii(self):
+        d = table2_designs()["U1"]
+        assert d.ii_sys_cycles() == 12 * 8  # Table II: II_layer = 96
+
+    def test_table4_single_layer_latency(self):
+        # Table IV: single 32-unit LSTM layer on U250 @300 MHz -> 0.343 us
+        single = LstmModelDims(layers=(LstmLayerDims(lx=1, lh=32),))
+        d = DesignPoint(
+            model=single, reuse=(ReuseFactors(r_x=9, r_h=1),),
+            constants=U250, timesteps=8,
+        )
+        assert d.latency_us(300.0) == pytest.approx(0.343, rel=0.10)
+
+    def test_table4_four_layer_latency(self):
+        # Table IV: the nominal 4-layer autoencoder -> 0.867 us.  The
+        # wavefront model (Fig. 7) with the encoder->decoder sync point gives
+        # ~0.72 us; the measured number includes the dense head + interface
+        # cycles, so allow a generous band and require the *ordering*:
+        # strictly more than 2x single-layer (two sequential segments) but
+        # far less than 4x (intra-segment overlap works).
+        d = table2_designs()["U2"]
+        lat = d.latency_us(300.0)
+        assert 2 * 0.343 < lat < 0.9
+
+    def test_segment_sync_increases_latency(self):
+        # an autoencoder (hard boundary) must be slower than the same stack
+        # with free wavefront overlap
+        free = LstmModelDims(layers=GW_NOMINAL.layers, dense=GW_NOMINAL.dense,
+                             segment_starts=(0,))
+        rf = (ReuseFactors(r_x=9, r_h=1),) * 4
+        ae = DesignPoint(model=GW_NOMINAL, reuse=rf, constants=U250, timesteps=8)
+        ov = DesignPoint(model=free, reuse=rf, constants=U250, timesteps=8)
+        assert ae.latency_cycles() > ov.latency_cycles()
+
+
+class TestUniformDesigns:
+    def test_balanced_flag(self):
+        d = uniform_design(GW_SMALL, 1, ZYNQ_7045, 8, balanced=True)
+        assert d.is_balanced()
+        n = uniform_design(GW_SMALL, 1, ZYNQ_7045, 8, balanced=False)
+        assert n.is_balanced()  # r_x = r_h = 1 still has equal layer IIs
+        assert d.dsp_used() < n.dsp_used()

@@ -1,0 +1,201 @@
+"""Equivalence + quantization tests for the split-sublayer LSTM and the AE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.autoencoder import (
+    AutoencoderConfig,
+    autoencoder_forward,
+    init_autoencoder,
+    mse_loss,
+    reconstruction_error,
+)
+from repro.core.lstm import (
+    LstmConfig,
+    init_lstm,
+    lstm_forward,
+    lstm_forward_naive,
+    lstm_forward_split,
+    lstm_step,
+    zero_state,
+)
+from repro.core import quant
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_io(key, batch, t, lx):
+    return jax.random.normal(key, (batch, t, lx), jnp.float32)
+
+
+class TestSplitEquivalence:
+    """The paper's mvm_x/recurrent split must be a pure re-association."""
+
+    @pytest.mark.parametrize("lx,lh,t,b", [(1, 9, 8, 4), (32, 32, 16, 2),
+                                           (8, 32, 100, 3), (5, 7, 11, 13)])
+    def test_split_equals_naive_fp32(self, lx, lh, t, b):
+        key = jax.random.PRNGKey(lx * 1000 + lh)
+        cfg = LstmConfig(in_dim=lx, hidden=lh)
+        params = init_lstm(key, cfg)
+        xs = _rand_io(jax.random.fold_in(key, 1), b, t, lx)
+        hs_n, (h_n, c_n) = lstm_forward_naive(params, xs, cfg)
+        hs_s, (h_s, c_s) = lstm_forward_split(params, xs, cfg)
+        np.testing.assert_allclose(hs_n, hs_s, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(c_n, c_s, rtol=1e-6, atol=1e-6)
+
+    def test_scan_matches_manual_steps(self):
+        cfg = LstmConfig(in_dim=3, hidden=5)
+        key = jax.random.PRNGKey(0)
+        params = init_lstm(key, cfg)
+        xs = _rand_io(jax.random.fold_in(key, 1), 2, 6, 3)
+        h, c = zero_state(2, cfg)
+        outs = []
+        for t in range(6):
+            h, c = lstm_step(params, h, c, xs[:, t], cfg)
+            outs.append(h)
+        manual = jnp.stack(outs, axis=1)
+        hs, _ = lstm_forward_split(params, xs, cfg)
+        np.testing.assert_allclose(manual, hs, rtol=1e-6, atol=1e-6)
+
+    def test_bf16_weights_fp32_cell(self):
+        """Paper quantization: 16-bit weights, 32-bit cell state."""
+        cfg = LstmConfig(in_dim=8, hidden=16, dtype=jnp.bfloat16)
+        key = jax.random.PRNGKey(7)
+        params = init_lstm(key, cfg)
+        assert params["w_x"].dtype == jnp.bfloat16
+        assert params["b"].dtype == jnp.float32
+        xs = _rand_io(jax.random.fold_in(key, 1), 4, 10, 8).astype(jnp.bfloat16)
+        hs, (h, c) = lstm_forward_split(params, xs, cfg)
+        assert hs.dtype == jnp.bfloat16 and c.dtype == jnp.float32
+        # close to the fp32 reference
+        cfg32 = LstmConfig(in_dim=8, hidden=16)
+        p32 = jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), params)
+        hs32, _ = lstm_forward_split(p32, xs.astype(jnp.float32), cfg32)
+        np.testing.assert_allclose(
+            hs.astype(jnp.float32), hs32, atol=0.05, rtol=0.1
+        )
+
+    def test_initial_state_threading(self):
+        """Feeding the final state back must equal one long sequence."""
+        cfg = LstmConfig(in_dim=4, hidden=6)
+        key = jax.random.PRNGKey(3)
+        params = init_lstm(key, cfg)
+        xs = _rand_io(jax.random.fold_in(key, 1), 2, 12, 4)
+        full, (h_f, c_f) = lstm_forward_split(params, xs, cfg)
+        h1, st1 = lstm_forward_split(params, xs[:, :7], cfg)
+        h2, (h_2, c_2) = lstm_forward_split(params, xs[:, 7:], cfg, state=st1)
+        np.testing.assert_allclose(full, jnp.concatenate([h1, h2], 1),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(c_f, c_2, rtol=1e-6, atol=1e-6)
+
+
+class TestActivations:
+    @given(st.floats(-20, 20))
+    @settings(max_examples=200, deadline=None)
+    def test_tanh_pwl_bounded_and_close(self, x):
+        y = float(quant.tanh_pwl(jnp.float32(x)))
+        assert -1.0 <= y <= 1.0
+        assert abs(y - np.tanh(x)) < 0.03
+
+    @given(st.floats(-50, 50))
+    @settings(max_examples=100, deadline=None)
+    def test_hard_sigmoid_bounded(self, x):
+        y = float(quant.hard_sigmoid(jnp.float32(x)))
+        assert 0.0 <= y <= 1.0
+
+    def test_tanh_pwl_monotone(self):
+        xs = jnp.linspace(-6, 6, 4001)
+        ys = quant.tanh_pwl(xs)
+        assert bool(jnp.all(jnp.diff(ys) >= -1e-7))
+
+    def test_sigmoid_lut_accuracy(self):
+        xs = jnp.linspace(-7.5, 7.5, 2000)
+        err = jnp.abs(quant.sigmoid_lut(xs) - jax.nn.sigmoid(xs))
+        assert float(err.max()) < 5e-3  # 1024-entry BRAM table resolution
+
+    def test_sigmoid_lut_saturates(self):
+        assert float(quant.sigmoid_lut(jnp.float32(100.0))) == pytest.approx(1.0, abs=1e-3)
+        assert float(quant.sigmoid_lut(jnp.float32(-100.0))) == pytest.approx(0.0, abs=1e-3)
+
+    @given(st.floats(-2, 2), st.integers(4, 16))
+    @settings(max_examples=100, deadline=None)
+    def test_fixed_quant_error_bound(self, x, frac_bits):
+        q = float(quant.fixed_quant(jnp.float32(x), 16, frac_bits))
+        lo = -(2.0**15) / 2.0**frac_bits  # two's-complement: asymmetric range
+        hi = (2.0**15 - 1) / 2.0**frac_bits
+        if lo <= x <= hi:  # inside representable range: half-ULP rounding
+            assert abs(q - x) <= 2.0 ** (-frac_bits) / 2 + 1e-6
+        else:  # saturation clamps to the range edge
+            assert lo - 1e-6 <= q <= hi + 1e-6
+
+    def test_fixed_quant_saturates(self):
+        assert float(quant.fixed_quant(jnp.float32(1e6), 16, 8)) == pytest.approx(
+            (2**15 - 1) / 256
+        )
+        assert float(quant.fixed_quant(jnp.float32(-1e6), 16, 8)) == -128.0
+
+    def test_fixed_quant_straight_through_grad(self):
+        g = jax.grad(lambda x: quant.fixed_quant(x).sum())(jnp.ones((4,)))
+        np.testing.assert_allclose(g, 1.0)
+
+
+class TestAutoencoder:
+    def test_shapes_nominal(self):
+        cfg = AutoencoderConfig(hidden=(32, 8, 8, 32), timesteps=100)
+        params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+        x = jnp.ones((3, 100, 1))
+        out = autoencoder_forward(params, x, cfg)
+        assert out.shape == (3, 100, 1)
+        assert not bool(jnp.any(jnp.isnan(out)))
+
+    def test_shapes_small(self):
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, timesteps=8)
+        params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+        out = autoencoder_forward(params, jnp.ones((2, 8, 1)), cfg)
+        assert out.shape == (2, 8, 1)
+
+    def test_impls_agree(self):
+        cfg_s = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, impl="split")
+        cfg_n = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, impl="naive")
+        params = init_autoencoder(jax.random.PRNGKey(1), cfg_s)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 20, 1))
+        np.testing.assert_allclose(
+            autoencoder_forward(params, x, cfg_s),
+            autoencoder_forward(params, x, cfg_n),
+            rtol=1e-6, atol=1e-6,
+        )
+
+    def test_bottleneck_is_hard_boundary(self):
+        """Changing early-timestep input must reach the decoder only through
+        the final latent: perturbing x at t=0 changes reconstruction, but the
+        decoder sees it solely via the repeated latent (shape check via jvp
+        sparsity is overkill; assert forward changes)."""
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1)
+        params = init_autoencoder(jax.random.PRNGKey(1), cfg)
+        x = jnp.zeros((1, 10, 1))
+        base = autoencoder_forward(params, x, cfg)
+        pert = autoencoder_forward(params, x.at[0, 0, 0].set(1.0), cfg)
+        assert float(jnp.abs(base - pert).max()) > 0
+
+    def test_loss_grads_finite(self):
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1)
+        params = init_autoencoder(jax.random.PRNGKey(1), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 1))
+        loss, grads = jax.value_and_grad(mse_loss)(params, x, cfg)
+        assert jnp.isfinite(loss)
+        for leaf in jax.tree_util.tree_leaves(grads):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+    def test_auc_metric(self):
+        from repro.core.autoencoder import auc_score
+
+        assert auc_score(np.zeros(100), np.ones(100)) == 1.0
+        assert auc_score(np.ones(100), np.zeros(100)) == 0.0
+        rng = np.random.default_rng(0)
+        a = rng.normal(0, 1, 2000)
+        assert abs(auc_score(a, rng.normal(0, 1, 2000)) - 0.5) < 0.05
+        assert auc_score(a, rng.normal(2.0, 1, 2000)) > 0.9

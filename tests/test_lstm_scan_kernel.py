@@ -1,0 +1,155 @@
+"""Pallas lstm_scan kernel vs pure-jnp oracle (interpret=True on CPU).
+
+Shape/dtype sweep per the assignment: every kernel is validated against its
+ref.py oracle across hidden sizes, batch sizes, sequence lengths, batch
+blockings, activations, and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lstm import LstmConfig, init_lstm, lstm_forward, lstm_forward_split
+from repro.core.quant import EXACT, HARD, PAPER_HW
+from repro.kernels.lstm_scan import lstm_scan_op, lstm_scan_ref
+from repro.kernels.lstm_scan.ops import pad_gates
+
+
+def _mk(key, b, t, h, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xw = jax.random.normal(k1, (b, t, 4 * h), jnp.float32)
+    w_h = (jax.random.normal(k2, (h, 4 * h), jnp.float32) * 0.3).astype(dtype)
+    h0 = jax.random.normal(k3, (b, h), dtype)
+    c0 = jax.random.normal(k4, (b, h), jnp.float32)
+    return xw, w_h, h0, c0
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("h", [4, 9, 32, 128])
+    @pytest.mark.parametrize("b,t", [(1, 1), (3, 8), (8, 33), (16, 100)])
+    def test_shape_sweep_fp32(self, h, b, t):
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(h * 100 + b), b, t, h)
+        hs_k, hf_k, cf_k = lstm_scan_op(xw, w_h, h0, c0, interpret=True)
+        hs_r, hf_r, cf_r = lstm_scan_ref(
+            jnp.swapaxes(xw, 0, 1), w_h, h0, c0
+        )
+        np.testing.assert_allclose(hs_k, jnp.swapaxes(hs_r, 0, 1), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(hf_k, hf_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(cf_k, cf_r, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("acts", [EXACT, PAPER_HW, HARD], ids=lambda a: a.name)
+    def test_activation_variants(self, acts):
+        from repro.core.quant import kernel_safe
+
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(0), 4, 12, 16)
+        hs_k, _, _ = lstm_scan_op(xw, w_h, h0, c0, acts=acts, interpret=True)
+        ak = kernel_safe(acts)  # the kernel swaps the LUT for its PWL twin
+        hs_r, _, _ = lstm_scan_ref(
+            jnp.swapaxes(xw, 0, 1), w_h, h0, c0, sigma=ak.sigma, tanh=ak.tanh
+        )
+        np.testing.assert_allclose(hs_k, jnp.swapaxes(hs_r, 0, 1), rtol=1e-5, atol=1e-5)
+
+    def test_paper_hw_lut_vs_kernel_pwl_close(self):
+        """LUT-sigmoid oracle vs the kernel's PWL twin: bounded divergence."""
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(9), 4, 12, 16)
+        hs_k, _, _ = lstm_scan_op(xw, w_h, h0, c0, acts=PAPER_HW, interpret=True)
+        hs_r, _, _ = lstm_scan_ref(
+            jnp.swapaxes(xw, 0, 1), w_h, h0, c0,
+            sigma=PAPER_HW.sigma, tanh=PAPER_HW.tanh,
+        )
+        assert float(jnp.abs(hs_k - jnp.swapaxes(hs_r, 0, 1)).max()) < 0.15
+
+    def test_bf16_weights_fp32_state(self):
+        """Paper quantization inside the kernel: bf16 h, fp32 c carry."""
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(1), 4, 16, 32, dtype=jnp.bfloat16)
+        hs_k, hf_k, cf_k = lstm_scan_op(xw, w_h, h0, c0, interpret=True)
+        assert hs_k.dtype == jnp.bfloat16 and cf_k.dtype == jnp.float32
+        hs_r, _, cf_r = lstm_scan_ref(jnp.swapaxes(xw, 0, 1), w_h, h0, c0)
+        np.testing.assert_allclose(
+            hs_k.astype(jnp.float32),
+            jnp.swapaxes(hs_r, 0, 1).astype(jnp.float32),
+            rtol=0.05, atol=0.05,
+        )
+        np.testing.assert_allclose(cf_k, cf_r, rtol=0.05, atol=0.05)
+
+    @pytest.mark.parametrize("block_b", [1, 2, 4, 8])
+    def test_batch_blocking_invariance(self, block_b):
+        """Result must not depend on the batch blocking (parallel grid dim)."""
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(2), 8, 10, 8)
+        base, _, _ = lstm_scan_op(xw, w_h, h0, c0, block_b=8, interpret=True)
+        got, _, _ = lstm_scan_op(xw, w_h, h0, c0, block_b=block_b, interpret=True)
+        np.testing.assert_allclose(base, got, rtol=1e-6, atol=1e-6)
+
+    def test_batch_padding_isolation(self):
+        """Padding rows must not perturb real rows (b=3 padded to block 4)."""
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(3), 3, 7, 8)
+        got, _, _ = lstm_scan_op(xw, w_h, h0, c0, block_b=4, interpret=True)
+        ref, _, _ = lstm_scan_op(xw, w_h, h0, c0, block_b=1, interpret=True)
+        np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+
+    @given(
+        b=st.integers(1, 6), t=st.integers(1, 12), h=st.integers(1, 24),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_random_shapes(self, b, t, h, seed):
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(seed), b, t, h)
+        hs_k, hf_k, cf_k = lstm_scan_op(xw, w_h, h0, c0, interpret=True)
+        hs_r, hf_r, cf_r = lstm_scan_ref(jnp.swapaxes(xw, 0, 1), w_h, h0, c0)
+        np.testing.assert_allclose(hs_k, jnp.swapaxes(hs_r, 0, 1), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(cf_k, cf_r, rtol=1e-5, atol=1e-5)
+
+
+class TestGatePadding:
+    def test_pad_gates_segmentwise(self):
+        x = jnp.arange(8, dtype=jnp.float32).reshape(1, 8)  # H=2, 4 gates
+        out = pad_gates(x, 2, 3)
+        assert out.shape == (1, 12)
+        np.testing.assert_array_equal(
+            out[0], jnp.array([0, 1, 0, 2, 3, 0, 4, 5, 0, 6, 7, 0], jnp.float32)
+        )
+
+    def test_hidden_padding_exactness(self):
+        """Gate-aware H padding (9 -> 16) must be exact, not approximate."""
+        xw, w_h, h0, c0 = _mk(jax.random.PRNGKey(4), 2, 5, 9)
+        hp = 16
+        xw_p = pad_gates(xw, 9, hp)
+        w_h_p = pad_gates(jnp.pad(w_h, ((0, hp - 9), (0, 0))), 9, hp)
+        h0_p = jnp.pad(h0, ((0, 0), (0, hp - 9)))
+        c0_p = jnp.pad(c0, ((0, 0), (0, hp - 9)))
+        hs_p, _, _ = lstm_scan_op(xw_p, w_h_p, h0_p, c0_p, interpret=True)
+        hs, _, _ = lstm_scan_op(xw, w_h, h0, c0, interpret=True)
+        np.testing.assert_allclose(hs_p[:, :, :9], hs, rtol=1e-6, atol=1e-6)
+
+
+class TestForwardIntegration:
+    """impl='kernel' must match impl='split'/'naive' through the public API."""
+
+    @pytest.mark.parametrize("lx,lh,t,b", [(1, 9, 8, 2), (32, 32, 16, 4)])
+    def test_lstm_forward_kernel_impl(self, lx, lh, t, b):
+        key = jax.random.PRNGKey(5)
+        cfg = LstmConfig(in_dim=lx, hidden=lh)
+        params = init_lstm(key, cfg)
+        xs = jax.random.normal(jax.random.fold_in(key, 1), (b, t, lx))
+        hs_s, (h_s, c_s) = lstm_forward_split(params, xs, cfg)
+        hs_k, (h_k, c_k) = lstm_forward(params, xs, cfg, impl="kernel")
+        np.testing.assert_allclose(hs_s, hs_k, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c_s, c_k, rtol=1e-5, atol=1e-5)
+
+    def test_autoencoder_kernel_impl(self):
+        from repro.core.autoencoder import (
+            AutoencoderConfig, autoencoder_forward, init_autoencoder,
+        )
+
+        cfg_k = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, impl="kernel")
+        cfg_s = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, impl="split")
+        params = init_autoencoder(jax.random.PRNGKey(6), cfg_k)
+        x = jax.random.normal(jax.random.PRNGKey(7), (3, 12, 1))
+        np.testing.assert_allclose(
+            autoencoder_forward(params, x, cfg_k),
+            autoencoder_forward(params, x, cfg_s),
+            rtol=1e-5, atol=1e-5,
+        )

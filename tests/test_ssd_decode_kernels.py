@@ -1,0 +1,149 @@
+"""ssd_scan + decode_attn kernels vs their jnp oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_attn import decode_attn_op, decode_attn_ref
+from repro.kernels.ssd_scan import ssd_decode_step, ssd_scan_op, ssd_scan_ref
+
+
+def _ssd_inputs(key, b, t, h, g, p, n):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)) - 1.0)
+    a = -jax.nn.softplus(jax.random.normal(ks[2], (h,)))  # negative decay
+    bm = jax.random.normal(ks[3], (b, t, g, n), jnp.float32) * 0.5
+    cm = jax.random.normal(ks[4], (b, t, g, n), jnp.float32) * 0.5
+    return x, dt, a, bm, cm
+
+
+def _fold_ref(x, dt, a, bm, cm, s0=None):
+    """Run the oracle in the kernel's folded (B*H) layout."""
+    b, t, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    bm_h = jnp.repeat(bm, rep, axis=2)
+    cm_h = jnp.repeat(cm, rep, axis=2)
+
+    def fold(v):
+        return jnp.moveaxis(v, 2, 1).reshape(b * h, t, *v.shape[3:])
+
+    alpha = dt * a[None, None, :]
+    if s0 is None:
+        s0 = jnp.zeros((b * h, p, n), jnp.float32)
+    y, s_f = ssd_scan_ref(
+        fold(x), fold(dt[..., None])[..., 0], fold(alpha[..., None])[..., 0],
+        fold(bm_h), fold(cm_h), s0,
+    )
+    return (
+        jnp.moveaxis(y.reshape(b, h, t, p), 1, 2),
+        s_f.reshape(b, h, p, n),
+    )
+
+
+class TestSsdScan:
+    @pytest.mark.parametrize("t,chunk", [(8, 4), (16, 16), (12, 5), (64, 16)])
+    def test_chunking_matches_naive_recurrence(self, t, chunk):
+        x, dt, a, bm, cm = _ssd_inputs(jax.random.PRNGKey(t), 2, t, 4, 2, 8, 16)
+        y_k, s_k = ssd_scan_op(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+        y_r, s_r = _fold_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s_k, s_r, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("h,g", [(4, 4), (4, 2), (6, 1)])
+    def test_group_broadcast(self, h, g):
+        x, dt, a, bm, cm = _ssd_inputs(jax.random.PRNGKey(h), 1, 8, h, g, 4, 8)
+        y_k, _ = ssd_scan_op(x, dt, a, bm, cm, chunk=4, interpret=True)
+        y_r, _ = _fold_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+
+    def test_time_padding_is_noop(self):
+        """T not a chunk multiple: zero-dt padding must not move the state."""
+        x, dt, a, bm, cm = _ssd_inputs(jax.random.PRNGKey(0), 1, 10, 2, 2, 4, 8)
+        y_k, s_k = ssd_scan_op(x, dt, a, bm, cm, chunk=8, interpret=True)
+        y_r, s_r = _fold_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s_k, s_r, rtol=2e-4, atol=2e-4)
+
+    @given(
+        t=st.integers(1, 20), chunk=st.integers(1, 8), seed=st.integers(0, 100),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_chunk_invariance(self, t, chunk, seed):
+        x, dt, a, bm, cm = _ssd_inputs(jax.random.PRNGKey(seed), 1, t, 2, 2, 4, 4)
+        y_k, s_k = ssd_scan_op(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+        y_r, s_r = _fold_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(y_k, y_r, rtol=5e-4, atol=5e-4)
+
+    def test_decode_step_consistent_with_scan(self):
+        """T sequential decode steps == one scan over T tokens."""
+        x, dt, a, bm, cm = _ssd_inputs(jax.random.PRNGKey(3), 2, 6, 4, 2, 4, 8)
+        y_scan, s_scan = ssd_scan_op(x, dt, a, bm, cm, chunk=2, interpret=True)
+        s = jnp.zeros((2, 4, 4, 8), jnp.float32)
+        ys = []
+        for t in range(6):
+            y_t, s = ssd_decode_step(
+                x[:, t], dt[:, t], a, bm[:, t], cm[:, t], s
+            )
+            ys.append(y_t)
+        y_dec = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(y_scan, y_dec, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s_scan, s, rtol=2e-4, atol=2e-4)
+
+
+class TestDecodeAttn:
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (14, 2)])
+    @pytest.mark.parametrize("s,block_s", [(16, 16), (64, 16), (100, 32)])
+    def test_vs_ref(self, hq, hkv, s, block_s):
+        key = jax.random.PRNGKey(hq * 100 + s)
+        ks = jax.random.split(key, 4)
+        b, d = 3, 16
+        q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+        lengths = jnp.array([s, s // 2, 1], jnp.int32)
+        out = decode_attn_op(q, k, v, lengths, block_s=block_s, interpret=True)
+        ref = decode_attn_ref(q, k, v, lengths)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (2, 4, 32), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (2, 40, 2, 32), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (2, 40, 2, 32), jnp.bfloat16)
+        lengths = jnp.array([40, 17], jnp.int32)
+        out = decode_attn_op(q, k, v, lengths, block_s=16, interpret=True)
+        ref = decode_attn_ref(q, k, v, lengths)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32), rtol=0.03, atol=0.03
+        )
+
+    def test_block_invariance(self):
+        key = jax.random.PRNGKey(5)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 4, 8), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 64, 4, 8), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 64, 4, 8), jnp.float32)
+        lengths = jnp.array([50], jnp.int32)
+        a = decode_attn_op(q, k, v, lengths, block_s=8, interpret=True)
+        b = decode_attn_op(q, k, v, lengths, block_s=64, interpret=True)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    @given(s=st.integers(1, 70), length=st.integers(1, 70), seed=st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_property_lengths(self, s, length, seed):
+        length = min(length, s)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (1, 2, 8), jnp.float32)
+        k = jax.random.normal(ks[1], (1, s, 2, 8), jnp.float32)
+        v = jax.random.normal(ks[2], (1, s, 2, 8), jnp.float32)
+        lengths = jnp.array([length], jnp.int32)
+        out = decode_attn_op(q, k, v, lengths, block_s=16, interpret=True)
+        ref = decode_attn_ref(q, k, v, lengths)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
