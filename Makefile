@@ -1,0 +1,22 @@
+# Tier-1 verification + benchmark entry points.  Everything runs on CPU
+# (Pallas kernels in interpret mode); on a TPU host the same commands use
+# the compiled kernels automatically.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-kernels bench
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+# skip the slow end-to-end training test
+test-fast:
+	$(PYTHON) -m pytest -x -q --deselect tests/test_gw_e2e.py
+
+# kernel + pipeline rows only, with the machine-readable perf artifact
+bench-kernels:
+	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance --json BENCH_kernels.json
+
+bench:
+	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

@@ -1,18 +1,28 @@
 """Kernel micro-benchmarks (interpret on CPU: correctness-grade timing only)
-+ the analytic VMEM/HBM traffic comparison that motivates the fused scan.
++ the analytic VMEM/HBM traffic comparison that motivates the fused scan
+and the fused multi-layer stack.
 
 The fused lstm_scan keeps (h, c) and W_h in VMEM for the whole sequence:
 HBM traffic per step drops from (read xW, read W_h, read h, write h, write
-gates) to (read xW block, write h block) — the table quantifies it.
+gates) to (read xW block, write h block).  The fused *stack* goes further:
+per-layer kernels still round-trip every layer's (T, B, H) hidden sequence
+through HBM between layers; the wavefront stack hands h layer-to-layer in
+VMEM, so only layer 0's xW streams in and the last layer's hs streams out.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.autoencoder import (
+    AutoencoderConfig,
+    autoencoder_forward,
+    init_autoencoder,
+)
 from repro.core.lstm import LstmConfig, init_lstm, lstm_forward
 
 
@@ -27,6 +37,27 @@ def traffic_model(batch: int, t: int, lx: int, lh: int) -> dict:
     return {"naive": naive, "fused": fused, "saving": 1 - fused / naive}
 
 
+def stack_traffic_model(batch: int, t: int, n_layers: int, w: int) -> dict:
+    """HBM bytes per sequence for an L-layer packed stack (width W, bf16=2B):
+    per-layer fused kernels vs the single wavefront kernel."""
+    e = 2
+    weights = n_layers * 2 * w * 4 * w * e       # W_x + W_h, read once either way
+    xw0 = t * batch * 4 * w * 4                  # layer-0 fp32 gate stream
+    hs_out = t * batch * w * e                   # last layer's hidden sequence
+    inter = (n_layers - 1) * 2 * t * batch * w * e  # h write + read per boundary
+    # per-layer also materializes every inner layer's (T, B, 4W) fp32 gate
+    # stream in HBM (XLA matmul writes it, the next pallas_call reads it);
+    # the fused kernel computes those projections in-kernel from VMEM
+    inter_xw = (n_layers - 1) * 2 * t * batch * 4 * w * 4
+    per_layer = weights + xw0 + hs_out + inter + inter_xw
+    fused = weights + xw0 + hs_out
+    return {
+        "per_layer": per_layer,
+        "fused": fused,
+        "saving": 1 - fused / per_layer,
+    }
+
+
 def run() -> list[tuple]:
     rows = []
     print("\n== kernels: fused LSTM scan HBM-traffic model (per sequence) ==")
@@ -35,6 +66,15 @@ def run() -> list[tuple]:
         print(f"B={b:<4} T={t:<5} H={lh:<4}: naive={m['naive']/1e6:8.2f}MB "
               f"fused={m['fused']/1e6:8.2f}MB  saving={m['saving']:.1%}")
         rows.append((f"kernel.traffic.b{b}t{t}h{lh}", 0.0,
+                     f"saving={m['saving']:.3f}"))
+
+    print("\n== kernels: fused STACK HBM-traffic model (per sequence) ==")
+    for b, t, l, w in [(1, 100, 4, 32), (256, 100, 4, 32), (256, 100, 2, 128)]:
+        m = stack_traffic_model(b, t, l, w)
+        print(f"B={b:<4} T={t:<4} L={l} W={w:<4}: "
+              f"per-layer={m['per_layer']/1e6:8.2f}MB "
+              f"fused={m['fused']/1e6:8.2f}MB  saving={m['saving']:.1%}")
+        rows.append((f"kernel.stack_traffic.b{b}l{l}w{w}", 0.0,
                      f"saving={m['saving']:.3f}"))
 
     # wall-clock of the three execution paths on this host (small model)
@@ -51,6 +91,34 @@ def run() -> list[tuple]:
         us = (time.perf_counter() - t0) / 30 * 1e6
         print(f"lstm_forward[{impl:>6}] (B16,T100,H32) host: {us:8.1f} us")
         rows.append((f"kernel.lstm_{impl}_us", us, ""))
+
+    # ---- the nominal GW autoencoder, all four backends -------------------
+    # naive/split are pure-XLA scans; kernel = per-layer Pallas scans (each
+    # layer's hidden sequence round-trips HBM); fused_stack = one wavefront
+    # kernel per segment.  Acceptance: fused_stack strictly below kernel.
+    print("\n== kernels: GW nominal autoencoder (32,8,8,32) B=256 T=100 ==")
+    ae_cfg = AutoencoderConfig(hidden=(32, 8, 8, 32), timesteps=100)
+    ae_params = init_autoencoder(jax.random.PRNGKey(2), ae_cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, 100, 1))
+    ae_us = {}
+    for impl in ("naive", "split", "kernel", "fused_stack"):
+        c = dataclasses.replace(ae_cfg, impl=impl)
+        f = jax.jit(lambda p, x, c=c: autoencoder_forward(p, x, c))
+        jax.block_until_ready(f(ae_params, x))
+        n_iter = 5
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            out = f(ae_params, x)
+        jax.block_until_ready(out)
+        ae_us[impl] = us = (time.perf_counter() - t0) / n_iter * 1e6
+        print(f"gw_nominal_ae[{impl:>11}] (B256,T100): {us:10.0f} us")
+        rows.append((f"kernel.gw_ae_{impl}_us", us, ""))
+    speedup = ae_us["kernel"] / ae_us["fused_stack"]
+    ok = ae_us["fused_stack"] < ae_us["kernel"]
+    print(f"fused-stack vs per-layer-kernel: {speedup:.2f}x "
+          f"({'OK' if ok else 'REGRESSION'})")
+    rows.append(("kernel.gw_ae_fused_vs_perlayer", 0.0,
+                 f"speedup={speedup:.2f}|ok={int(ok)}"))
     return rows
 
 

@@ -20,7 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.lstm import LstmConfig, init_lstm, lstm_forward
+from repro.core.lstm import LstmConfig, init_lstm, lstm_forward, lstm_stack_forward
 from repro.core.pipeline import pack_uniform, pipeline_lstm_stack, wavefront
 from repro.core.stage_balance import (
     lstm_layer_cost,
@@ -91,6 +91,26 @@ def run() -> list[tuple]:
           f" device the wavefront adds masked work — the win appears with"
           f" stages on separate chips, see tests/test_pipeline.py shard_map)")
     rows.append(("balance.wavefront_cpu_us", t_pipe, f"seq={t_seq:.0f}us"))
+
+    # -- 3. fused-stack kernel: the wavefront *inside one Pallas call* ------
+    # Same schedule as (2) at timestep granularity (C=1): grid T + L - 1,
+    # hand-off in VMEM.  Compared against the XLA-level executions above
+    # and the per-layer kernel path (L pallas_calls, HBM between layers).
+    fused_j = jax.jit(
+        lambda ps, x: lstm_stack_forward(ps, x, cfgs, impl="fused_stack")[0]
+    )
+    perlayer_j = jax.jit(
+        lambda ps, x: lstm_stack_forward(ps, x, cfgs, impl="kernel")[0]
+    )
+    jax.block_until_ready(fused_j(params, xs))
+    jax.block_until_ready(perlayer_j(params, xs))
+    t_fused = timeit(fused_j, params, xs, n=5)
+    t_pl = timeit(perlayer_j, params, xs, n=5)
+    print(f"fused-stack kernel (4L, B8, T400): {t_fused:.0f}us vs "
+          f"per-layer kernel {t_pl:.0f}us "
+          f"(grid {400 + 4 - 1} vs 4x{400} steps; interpret-mode timings "
+          f"track grid size, on TPU the win is the removed HBM round-trips)")
+    rows.append(("balance.fused_stack_us", t_fused, f"per_layer={t_pl:.0f}us"))
     return rows
 
 

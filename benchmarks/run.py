@@ -1,12 +1,16 @@
 """Benchmark harness — one module per paper table/figure + roofline table.
 
 Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
-``--fast`` skips the training-based Fig. 9 benchmark.
+``--fast`` skips the training-based Fig. 9 benchmark.  ``--json OUT``
+additionally writes the rows as a machine-readable name -> us_per_call
+mapping (e.g. BENCH_kernels.json) so the perf trajectory is comparable
+across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -14,6 +18,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip fig9 training")
     ap.add_argument("--rundir", default="runs/dryrun")
+    ap.add_argument(
+        "--json", metavar="OUT", default=None,
+        help="write results as JSON {name: {us_per_call, derived}} to OUT",
+    )
+    ap.add_argument(
+        "--only", metavar="MODULES", default=None,
+        help="comma-separated benchmark subset, e.g. "
+             "--only kernels_bench,pipeline_balance",
+    )
     args = ap.parse_args()
 
     from benchmarks import (
@@ -27,24 +40,49 @@ def main() -> None:
         table4,
     )
 
-    rows: list[tuple] = []
-    rows += table2.run()
-    rows += fig8.run()
-    rows += fig10.run()
-    rows += table3.run()
-    rows += table4.run()
-    rows += kernels_bench.run()
-    rows += pipeline_balance.run()
-    rows += roofline_table.run(args.rundir)
-    if not args.fast:
-        from benchmarks import fig9_auc
+    runners = {
+        "table2": table2.run,
+        "fig8": fig8.run,
+        "fig10": fig10.run,
+        "table3": table3.run,
+        "table4": table4.run,
+        "kernels_bench": kernels_bench.run,
+        "pipeline_balance": pipeline_balance.run,
+        "roofline_table": lambda: roofline_table.run(args.rundir),
+    }
+    if args.only:
+        selected = [m.strip() for m in args.only.split(",") if m.strip()]
+        unknown = set(selected) - set(runners) - {"fig9_auc"}
+        if unknown:
+            ap.error(f"unknown benchmark module(s): {sorted(unknown)}; "
+                     f"choose from {sorted(runners) + ['fig9_auc']}")
+    else:
+        selected = list(runners)
+        if not args.fast:
+            selected.append("fig9_auc")
 
-        rows += fig9_auc.run(steps=300)
+    rows: list[tuple] = []
+    for name in selected:
+        if name == "fig9_auc":
+            from benchmarks import fig9_auc
+
+            rows += fig9_auc.run(steps=300)
+        else:
+            rows += runners[name]()
 
     print("\n==== CSV ====")
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+
+    if args.json:
+        payload = {
+            name: {"us_per_call": round(us, 3), "derived": derived}
+            for name, us, derived in rows
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"\nwrote {len(payload)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -182,8 +182,10 @@ def analyze_hlo(text: str) -> HloAnalysis:
                 sym[(cname, m.group(1))] = m.group(2)
 
     # ---- dots ----------------------------------------------------------------
+    # operands may be printed typed ("dot(f32[16,16]{1,0} %lhs, ...)") or
+    # bare ("dot(%lhs, ...)") depending on the XLA version's printer
     dot_re = re.compile(
-        r"%?([\w\.\-]+)\s*=\s*" + _TYPE + r"\s+dot\(%?([\w\.\-]+),"
+        r"%?([\w\.\-]+)\s*=\s*" + _TYPE + r"\s+dot\((?:" + _TYPE + r"\s+)?%?([\w\.\-]+),"
     )
     conv_re = re.compile(r"%?[\w\.\-]+\s*=\s*" + _TYPE + r"\s+convolution\(")
     for cname, lines in comps.items():
@@ -198,7 +200,8 @@ def analyze_hlo(text: str) -> HloAnalysis:
                     continue
                 res_elems = math.prod(res_shapes[0][1]) if res_shapes[0][1] else 1
                 cdm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-                lhs_shapes = _parse_shapes(sym.get((cname, dm.group(3)), ""))
+                lhs_type = dm.group(3) or sym.get((cname, dm.group(4)), "")
+                lhs_shapes = _parse_shapes(lhs_type)
                 k = 1
                 if cdm and lhs_shapes:
                     for dd in (int(x) for x in cdm.group(1).split(",") if x):
@@ -271,3 +274,15 @@ def analyze_hlo(text: str) -> HloAnalysis:
             out.collective_bytes[opcode] += m_c * size * factor
             out.collective_count += 1
     return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a per-device list of dicts, newer returns one dict;
+    either may be empty/None for some backends.  Always returns a dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

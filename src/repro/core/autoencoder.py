@@ -26,7 +26,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from .lstm import LstmConfig, init_lstm, lstm_forward
+from .lstm import LstmConfig, init_lstm, lstm_stack_forward
 from .quant import EXACT, ActivationSet
 
 Params = dict[str, Any]
@@ -41,7 +41,7 @@ class AutoencoderConfig:
     dtype: Any = jnp.float32
     cell_dtype: Any = jnp.float32
     acts: ActivationSet = EXACT
-    impl: str = "split"                 # naive | split | kernel
+    impl: str = "split"                 # naive | split | kernel | fused_stack
 
     @property
     def boundary(self) -> int:
@@ -93,18 +93,22 @@ def autoencoder_forward(
     """Reconstruct x. x: (B, T, input_dim) -> (B, T, input_dim)."""
     cfgs = cfg.layer_cfgs()
     t = x.shape[1]
-    h_seq = x
-    # ---- encoder ----------------------------------------------------------
-    for i in range(cfg.boundary):
-        h_seq, (h_last, _) = lstm_forward(
-            params[f"lstm_{i}"], h_seq, cfgs[i], impl=cfg.impl
-        )
+    n = len(cfgs)
+    plist = [params[f"lstm_{i}"] for i in range(n)]
+    # The encoder->decoder bottleneck is the ii_model.Segment sync boundary:
+    # only the final latent crosses, so each segment runs (and, under
+    # impl="fused_stack", wavefront-fuses) independently.
+    # ---- encoder segment ---------------------------------------------------
+    h_seq, _ = lstm_stack_forward(
+        plist[: cfg.boundary], x, cfgs[: cfg.boundary], impl=cfg.impl
+    )
     # bottleneck: only the last hidden vector crosses (RepeatVector)
     latent = h_seq[:, -1, :]
     h_seq = jnp.broadcast_to(latent[:, None, :], (latent.shape[0], t, latent.shape[1]))
-    # ---- decoder -----------------------------------------------------------
-    for i in range(cfg.boundary, len(cfgs)):
-        h_seq, _ = lstm_forward(params[f"lstm_{i}"], h_seq, cfgs[i], impl=cfg.impl)
+    # ---- decoder segment ---------------------------------------------------
+    h_seq, _ = lstm_stack_forward(
+        plist[cfg.boundary :], h_seq, cfgs[cfg.boundary :], impl=cfg.impl
+    )
     # ---- TimeDistributed dense head ----------------------------------------
     out = h_seq.astype(cfg.dtype) @ params["dense"]["w"] + params["dense"]["b"]
     return out.astype(x.dtype)

@@ -160,6 +160,37 @@ def lstm_forward(
     raise ValueError(f"unknown impl {impl!r}")
 
 
+def lstm_stack_forward(
+    params_list: list[Params], xs: jax.Array, cfgs: list[LstmConfig],
+    states: list[tuple[jax.Array, jax.Array]] | None = None,
+    impl: str = "split",
+) -> tuple[jax.Array, list[tuple[jax.Array, jax.Array]]]:
+    """Run L cascaded LSTM layers (one pipeline segment, no sync boundary).
+
+    Dispatch: impl in {naive, split, kernel, fused_stack}.  The first three
+    execute layer-by-layer, each layer a full pass over the sequence (its
+    hidden sequence round-trips HBM before the next layer starts).
+    ``fused_stack`` runs the whole segment as a single Pallas wavefront
+    kernel (paper Fig. 7): layer l+1 consumes h_t one kernel step after
+    layer l emits it, and no intermediate hidden sequence leaves the chip.
+
+    Returns (last layer's hidden sequence (B, T, hidden[-1]),
+    per-layer (h_final, c_final) — layer-by-layer semantics either way).
+    """
+    if not cfgs:  # empty segment (e.g. latent_boundary=0): identity
+        return xs, []
+    if impl == "fused_stack":
+        from repro.kernels.lstm_stack import ops as kops
+
+        return kops.lstm_stack_forward_fused(params_list, xs, cfgs, states)
+    h_seq, finals = xs, []
+    for i, (p, cfg) in enumerate(zip(params_list, cfgs)):
+        state = None if states is None else states[i]
+        h_seq, final = lstm_forward(p, h_seq, cfg, state, impl=impl)
+        finals.append(final)
+    return h_seq, finals
+
+
 def zero_state(batch: int, cfg: LstmConfig) -> tuple[jax.Array, jax.Array]:
     return (
         jnp.zeros((batch, cfg.hidden), cfg.dtype),

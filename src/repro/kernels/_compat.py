@@ -1,0 +1,19 @@
+"""Version-compat shims for the Pallas TPU API surface the kernels use.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` around
+0.4.3x/0.5; support both so the kernels import on whichever the container
+bakes in.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either jax naming."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

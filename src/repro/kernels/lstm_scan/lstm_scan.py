@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import compiler_params
+
 
 def _lstm_scan_kernel(
     xw_ref,    # (Bb, 4H)  fp32 block at (t, b)
@@ -141,7 +143,7 @@ def lstm_scan(
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch_shapes,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -40,6 +40,31 @@ def _on_cpu() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def choose_blocking(
+    batch: int, block_b: int | None = None, interpret: bool = False
+) -> tuple[int, int]:
+    """Pick a tile-legal (batch_p, block_b) for the scan's parallel grid dim.
+
+    Invariants on device (regression-tested): block_b >= SUBLANES,
+    batch_p % block_b == 0 and batch_p >= batch.  Odd/small batches round
+    *batch_p up* to a block multiple rather than shrinking block_b below the
+    sublane tile — a block narrower than SUBLANES is not a legal fp32 tile
+    and previously slipped through via the ``block_b //= 2`` fixup.
+    In interpret mode there is no tile constraint: keep shapes exact.
+    """
+    if block_b is None:
+        block_b = batch if batch <= 256 else 256
+    if interpret:
+        return _round_up(batch, block_b), block_b
+    batch_p = _round_up(_round_up(batch, block_b), SUBLANES)
+    block_b = min(block_b, batch_p)
+    while batch_p % block_b and block_b > SUBLANES:
+        block_b //= 2
+    block_b = max(block_b, SUBLANES)
+    batch_p = _round_up(batch_p, block_b)
+    return batch_p, block_b
+
+
 def pad_gates(x: jax.Array, hidden: int, hidden_p: int) -> jax.Array:
     """Pad the trailing 4H axis gate-segment-wise to 4*hidden_p."""
     if hidden == hidden_p:
@@ -72,15 +97,7 @@ def lstm_scan_op(
 
     # ---- pick tile-legal padded dims -------------------------------------
     hidden_p = _round_up(hidden, LANES) if not interpret else hidden
-    if block_b is None:
-        # default: one batch block if small, else blocks of 256 rows
-        block_b = batch if batch <= 256 else 256
-    batch_p = _round_up(batch, block_b)
-    if not interpret:
-        batch_p = _round_up(batch_p, SUBLANES)
-        block_b = min(block_b, batch_p)
-        while batch_p % block_b:
-            block_b //= 2
+    batch_p, block_b = choose_blocking(batch, block_b, interpret=interpret)
 
     # ---- pad (gate-aware on the 4H axis) ---------------------------------
     xw_p = pad_gates(xw, hidden, hidden_p)

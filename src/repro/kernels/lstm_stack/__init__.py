@@ -1,0 +1,3 @@
+from .lstm_stack import lstm_stack  # noqa: F401
+from .ops import lstm_stack_forward_fused, lstm_stack_op  # noqa: F401
+from .ref import lstm_stack_ref  # noqa: F401

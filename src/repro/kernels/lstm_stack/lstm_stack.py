@@ -1,0 +1,206 @@
+"""Fused multi-layer wavefront LSTM stack — one Pallas call for L layers.
+
+This is the paper's Sec. III-B/III-D coarse-grained pipeline (Fig. 7)
+collapsed into a single TPU kernel: the grid's sequential axis is the
+*wavefront step* ``s in [0, T + L - 1)``, and at step ``s`` layer ``l``
+processes its timestep ``t = s - l`` (when ``0 <= t < T``).  Layer ``l+1``
+therefore consumes ``h_l[t]`` exactly one grid step after layer ``l`` emits
+it — the hand-off is a read of layer ``l``'s VMEM state slot, never an HBM
+round-trip.  Compare with per-layer execution (kernels/lstm_scan called L
+times), where every layer writes its full ``(T, B, H)`` hidden sequence to
+HBM and the next layer reads it back, plus per-layer pad/transpose glue.
+
+TPU translation of the paper's structures:
+
+* all L layers' ``W_h`` *and* ``W_x`` are **VMEM-resident** for the whole
+  call (BlockSpec index maps constant in ``s``) — the analogue of every
+  FPGA layer-unit holding its weights in fabric simultaneously;
+* per-layer ``h``/``c`` live in **VMEM scratch with a leading stage axis**
+  ``(L, Bb, W)``, carried across grid steps — nothing recurrent ever
+  leaves the chip;
+* the layer loop is unrolled **in reverse** inside the kernel body, so
+  layer ``l`` reads ``h_scr[l-1]`` *before* layer ``l-1`` overwrites it
+  this step: the one-step-delayed hand-off falls out of program order with
+  no double buffer;
+* only layer 0's input projection ``xW`` (the paper's ``mvm_x``, one big
+  MXU matmul done outside) streams in, one ``(Bb, 4W)`` block per step,
+  and only the **last** layer's hidden sequence streams out, one
+  ``(Bb, W)`` block per step.  Inner layers' projections are computed
+  in-kernel from the handed-off ``h`` (their "mvm_x" rides the MXU against
+  VMEM-resident weights, matching the paper's per-layer MVM units).
+
+The stack must be homogeneous-packed (``core/pipeline.pack_lstm_stack``):
+every layer padded to a common width W.  Zero padding is exact — padded
+``W_x``/``W_h`` rows are zero, so padded lanes of a zero-initialized state
+stay identically zero and never contaminate real lanes (tested).
+
+Grid = (batch_blocks, T + L - 1); batch is "parallel", the wavefront axis
+is "arbitrary" (scratch carries state between consecutive steps).
+
+VMEM budget (fp32, W = padded width, Bb = batch block):
+    weights 2*L*W*4W*4 + bias L*4W*4 + state 2*L*Bb*W*4 + streams ~Bb*4W*4*2
+For the GW nominal model (L=2 per segment, W=128, Bb=256) that is ~1.3 MB —
+far below the ~16 MB/core budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import compiler_params
+
+
+def _lstm_stack_kernel(
+    xw_ref,    # (Bb, 4W)     layer-0 gate stream, block at (t=s, b)
+    wx_ref,    # (L, W, 4W)   VMEM-resident input projections (slot 0 unused)
+    wh_ref,    # (L, W, 4W)   VMEM-resident recurrent weights
+    b_ref,     # (L, 1, 4W)   fp32 biases (slot 0 folded into the xw stream)
+    h0_ref,    # (L, Bb, W)   initial hidden per layer
+    c0_ref,    # (L, Bb, W)   initial cell per layer (fp32)
+    hs_ref,    # out: (Bb, W) last layer's hidden, block at (t=s-L+1, b)
+    hf_ref,    # out: (L, Bb, W) final hidden per layer
+    cf_ref,    # out: (L, Bb, W) final cell per layer (fp32)
+    h_scr,     # VMEM scratch (L, Bb, W) compute dtype
+    c_scr,     # VMEM scratch (L, Bb, W) fp32
+    *,
+    n_layers: int,
+    t_len: int,
+    width: int,
+    sigma: Callable,
+    tanh: Callable,
+):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+        c_scr[...] = c0_ref[...].astype(jnp.float32)
+
+    # Reverse layer order: at step s, layer l must consume h_{l-1}[t = s-l],
+    # which is what h_scr[l-1] still holds from step s-1.  Iterating l
+    # descending reads it before layer l-1's update this step clobbers it.
+    for layer in reversed(range(n_layers)):
+
+        @pl.when((s >= layer) & (s < layer + t_len))
+        def _step(layer=layer):
+            if layer == 0:
+                gx = xw_ref[...]  # streamed mvm_x (+bias), computed outside
+            else:
+                gx = (
+                    jnp.dot(
+                        h_scr[layer - 1],
+                        wx_ref[layer],
+                        preferred_element_type=jnp.float32,
+                    )
+                    + b_ref[layer]
+                )
+            gates = gx + jnp.dot(
+                h_scr[layer], wh_ref[layer], preferred_element_type=jnp.float32
+            )
+            i = sigma(gates[:, 0 * width : 1 * width])
+            f = sigma(gates[:, 1 * width : 2 * width])
+            g = tanh(gates[:, 2 * width : 3 * width])
+            o = sigma(gates[:, 3 * width : 4 * width])
+            c = f * c_scr[layer] + i * g      # fp32 tail (paper: 32-bit cell)
+            h = (o * tanh(c)).astype(h_scr.dtype)
+            c_scr[layer] = c
+            h_scr[layer] = h
+            if layer == n_layers - 1:
+                hs_ref[...] = h.astype(hs_ref.dtype)
+
+        @pl.when(s == layer + t_len - 1)
+        def _finalize(layer=layer):
+            hf_ref[layer] = h_scr[layer].astype(hf_ref.dtype)
+            cf_ref[layer] = c_scr[layer]
+
+
+def lstm_stack(
+    xw0: jax.Array,    # (T, B, 4W) fp32 — layer 0 mvm_x output + bias, time-major
+    w_x: jax.Array,    # (L, W, 4W) packed input projections
+    w_h: jax.Array,    # (L, W, 4W) packed recurrent weights
+    b: jax.Array,      # (L, 4W) fp32 packed biases
+    h0: jax.Array,     # (L, B, W)
+    c0: jax.Array,     # (L, B, W) fp32
+    *,
+    block_b: int | None = None,
+    sigma: Callable = jax.nn.sigmoid,
+    tanh: Callable = jnp.tanh,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Run the fused L-layer wavefront. Shapes pre-padded by ops.py (W a lane
+    multiple, B a block multiple on device).  Returns
+    (hs_last: (T, B, W), h_final: (L, B, W), c_final fp32: (L, B, W)).
+    """
+    t_len, batch, w4 = xw0.shape
+    width = w4 // 4
+    n_layers = w_h.shape[0]
+    assert w_h.shape == (n_layers, width, w4), (w_h.shape, width)
+    assert w_x.shape == (n_layers, width, w4), (w_x.shape, width)
+    if block_b is None:
+        block_b = batch
+    assert batch % block_b == 0, (batch, block_b)
+    n_b = batch // block_b
+    n_s = t_len + n_layers - 1
+
+    kernel = functools.partial(
+        _lstm_stack_kernel,
+        n_layers=n_layers,
+        t_len=t_len,
+        width=width,
+        sigma=sigma,
+        tanh=tanh,
+    )
+    grid = (n_b, n_s)
+    t_last = t_len - 1
+    lag = n_layers - 1
+
+    out_shape = [
+        jax.ShapeDtypeStruct((t_len, batch, width), h0.dtype),      # hs_last
+        jax.ShapeDtypeStruct((n_layers, batch, width), h0.dtype),   # h_final
+        jax.ShapeDtypeStruct((n_layers, batch, width), jnp.float32),  # c_final
+    ]
+    in_specs = [
+        # layer-0 gate stream: clamp past-the-end reads (masked in-kernel)
+        pl.BlockSpec(
+            (None, block_b, w4), lambda b, s: (jnp.minimum(s, t_last), b, 0)
+        ),
+        pl.BlockSpec((n_layers, width, w4), lambda b, s: (0, 0, 0)),
+        pl.BlockSpec((n_layers, width, w4), lambda b, s: (0, 0, 0)),
+        pl.BlockSpec((n_layers, 1, w4), lambda b, s: (0, 0, 0)),
+        pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),
+        pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),
+    ]
+    out_specs = [
+        # the last layer emits timestep t = s - (L-1); the clamped index
+        # revisits block 0 during the fill steps, which never write, so the
+        # block is only flushed once valid data landed in it
+        pl.BlockSpec(
+            (None, block_b, width),
+            lambda b, s: (jnp.clip(s - lag, 0, t_last), b, 0),
+        ),
+        pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),
+        pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((n_layers, block_b, width), h0.dtype),
+        pltpu.VMEM((n_layers, block_b, width), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="lstm_stack_wavefront",
+    )(xw0, w_x, w_h, b.reshape(n_layers, 1, w4), h0, c0)

@@ -1,0 +1,148 @@
+"""Jit'd wrapper around the fused stack wavefront: pack, pad, dispatch.
+
+Public entry points:
+
+* ``lstm_stack_op(xs, stacked, h0, c0)`` — batch-major convenience wrapper
+  over an already homogeneous-packed stack (``core/pipeline.pack_lstm_stack``
+  output), handling batch padding/blocking and the layer-0 ``mvm_x`` matmul.
+* ``lstm_stack_forward_fused(params_list, xs, cfgs, states)`` — drop-in
+  backend for ``core.lstm.lstm_stack_forward(..., impl="fused_stack")``:
+  packs a heterogeneous stack (e.g. the GW autoencoder's (32, 8, 8, 32))
+  straight to the lane-padded common width, runs ONE kernel for the whole
+  segment, and slices per-layer real widths back out.
+
+Contrast with per-layer ``impl="kernel"``: padding + batch/time transposes
+happen once per *segment* instead of once per *layer*, and no intermediate
+``(T, B, H)`` hidden sequence ever touches HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import ActivationSet, EXACT, kernel_safe
+from repro.kernels.lstm_scan.ops import (
+    LANES,
+    _on_cpu,
+    _round_up,
+    choose_blocking,
+)
+
+from .lstm_stack import lstm_stack
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "acts", "interpret"))
+def lstm_stack_op(
+    xs: jax.Array,       # (B, T, W) layer-0 input, pre-padded to the pack width
+    stacked: dict,       # {"w_x": (L, W, 4W), "w_h": (L, W, 4W), "b": (L, 4W)}
+    h0: jax.Array,       # (L, B, W)
+    c0: jax.Array,       # (L, B, W)
+    *,
+    block_b: int | None = None,
+    acts: ActivationSet = EXACT,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (hs_last: (B, T, W), h_final: (L, B, W), c_final fp32)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    batch, t_len, width = xs.shape
+    assert stacked["w_h"].shape[1] == width, (stacked["w_h"].shape, width)
+
+    batch_p, block_b = choose_blocking(batch, block_b, interpret=interpret)
+
+    pad_b = ((0, batch_p - batch), (0, 0), (0, 0))
+    xs_p = jnp.pad(xs, pad_b)
+    h0_p = jnp.pad(h0, ((0, 0), (0, batch_p - batch), (0, 0)))
+    c0_p = jnp.pad(c0, ((0, 0), (0, batch_p - batch), (0, 0)))
+
+    # sub-layer 1 for layer 0 (paper mvm_x): ONE big MXU matmul + bias,
+    # then time-major for the sequential wavefront axis
+    xw0 = (xs_p @ stacked["w_x"][0]).astype(jnp.float32) + stacked["b"][0]
+    xw0 = jnp.swapaxes(xw0, 0, 1)  # (T, Bp, 4W)
+
+    acts_k = kernel_safe(acts)
+    hs, h_f, c_f = lstm_stack(
+        xw0,
+        stacked["w_x"],
+        stacked["w_h"],
+        stacked["b"].astype(jnp.float32),
+        h0_p,
+        c0_p.astype(jnp.float32),
+        block_b=block_b,
+        sigma=acts_k.sigma,
+        tanh=acts_k.tanh,
+        interpret=interpret,
+    )
+    hs = jnp.swapaxes(hs, 0, 1)[:batch]
+    return hs, h_f[:, :batch], c_f[:, :batch]
+
+
+def lstm_stack_forward_fused(
+    params_list: Sequence[dict[str, Any]],
+    xs: jax.Array,  # (B, T, in_dim of layer 0)
+    cfgs: Sequence,  # list[LstmConfig], one per layer
+    states: Sequence[tuple[jax.Array, jax.Array]] | None = None,
+) -> tuple[jax.Array, list[tuple[jax.Array, jax.Array]]]:
+    """Backend for core.lstm.lstm_stack_forward(impl="fused_stack").
+
+    Packs the (possibly heterogeneous) stack to one lane-padded width and
+    executes the whole segment as a single wavefront kernel.  Returns
+    (hs of the LAST layer: (B, T, hidden[-1]), per-layer (h_f, c_f) finals).
+    """
+    from repro.core.pipeline import pack_lstm_stack
+
+    cfg0 = cfgs[0]
+    # one kernel executes every layer: activations and dtypes must be
+    # stack-wide (a mixed-precision stack would silently compute every
+    # layer in cfgs[0].dtype otherwise)
+    assert all(c.acts.name == cfg0.acts.name for c in cfgs), (
+        "fused_stack requires homogeneous activations across the segment"
+    )
+    assert all(
+        c.dtype == cfg0.dtype and c.cell_dtype == cfg0.cell_dtype for c in cfgs
+    ), "fused_stack requires homogeneous dtypes across the segment"
+    in_dims = [c.in_dim for c in cfgs]
+    hidden = [c.hidden for c in cfgs]
+    n_layers = len(cfgs)
+    batch = xs.shape[0]
+
+    interpret = _on_cpu()
+    width = max(max(in_dims), max(hidden))
+    width_p = width if interpret else _round_up(width, LANES)
+    stacked, _, _ = pack_lstm_stack(
+        list(params_list), in_dims, hidden, d_target=width_p, h_target=width_p
+    )
+
+    def pad_state(arr, real, dtype):
+        return jnp.pad(
+            arr.astype(dtype), ((0, 0), (0, width_p - real))
+        )
+
+    if states is None:
+        h0 = jnp.zeros((n_layers, batch, width_p), cfg0.dtype)
+        c0 = jnp.zeros((n_layers, batch, width_p), jnp.float32)
+    else:
+        h0 = jnp.stack(
+            [pad_state(h, c.hidden, cfg0.dtype) for (h, _), c in zip(states, cfgs)]
+        )
+        c0 = jnp.stack(
+            [pad_state(cc, c.hidden, jnp.float32) for (_, cc), c in zip(states, cfgs)]
+        )
+
+    xs_p = jnp.pad(
+        xs.astype(cfg0.dtype), ((0, 0), (0, 0), (0, width_p - xs.shape[-1]))
+    )
+    hs, h_f, c_f = lstm_stack_op(xs_p, stacked, h0, c0, acts=cfg0.acts)
+
+    finals = [
+        (
+            h_f[l, :, : cfgs[l].hidden].astype(cfgs[l].dtype),
+            c_f[l, :, : cfgs[l].hidden].astype(cfgs[l].cell_dtype),
+        )
+        for l in range(n_layers)
+    ]
+    return hs[..., : hidden[-1]], finals

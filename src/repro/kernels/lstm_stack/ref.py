@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused stack: sequential layer-by-layer execution.
+
+Same packed shapes and gate order [i,f,g,o] as the kernel; each layer runs a
+full ``lax.scan`` over time before the next starts — the exact schedule the
+wavefront kernel reorders (but must not renumber: tests assert equality).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_stack_ref(
+    xw0: jax.Array,   # (T, B, 4W) fp32 — layer 0 mvm_x output + bias
+    w_x: jax.Array,   # (L, W, 4W)
+    w_h: jax.Array,   # (L, W, 4W)
+    b: jax.Array,     # (L, 4W) fp32
+    h0: jax.Array,    # (L, B, W)
+    c0: jax.Array,    # (L, B, W) fp32
+    *,
+    sigma: Callable = jax.nn.sigmoid,
+    tanh: Callable = jnp.tanh,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    n_layers, width = w_h.shape[0], w_h.shape[1]
+
+    def layer_scan(xw, wh, h_init, c_init):
+        def step(carry, xw_t):
+            h, c = carry
+            gates = xw_t + (h @ wh).astype(jnp.float32)
+            i = sigma(gates[:, 0 * width : 1 * width])
+            f = sigma(gates[:, 1 * width : 2 * width])
+            g = tanh(gates[:, 2 * width : 3 * width])
+            o = sigma(gates[:, 3 * width : 4 * width])
+            c_new = f * c + i * g
+            h_new = (o * tanh(c_new)).astype(h.dtype)
+            return (h_new, c_new), h_new
+
+        (h_f, c_f), hs = jax.lax.scan(
+            step, (h_init, c_init.astype(jnp.float32)), xw
+        )
+        return hs, h_f, c_f
+
+    hs, h_fs, c_fs = None, [], []
+    xw = xw0
+    for layer in range(n_layers):
+        if layer > 0:
+            xw = (hs @ w_x[layer]).astype(jnp.float32) + b[layer]
+        hs, h_f, c_f = layer_scan(xw, w_h[layer], h0[layer], c0[layer])
+        h_fs.append(h_f)
+        c_fs.append(c_f)
+    return hs, jnp.stack(h_fs), jnp.stack(c_fs)

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.analysis.hlo import analyze_hlo
+from repro.analysis.hlo import analyze_hlo, cost_analysis_dict
 from repro.configs import ARCHS, SHAPES, cell_supported, get_arch
 from repro.launch.mesh import data_axes, make_production_mesh
 from repro.launch.sharding import (
@@ -213,7 +213,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_analysis_dict(compiled)
         text = compiled.as_text()
         hlo = analyze_hlo(text)
 

@@ -13,7 +13,7 @@ engine covers both:
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +31,22 @@ class AnomalyStreamEngine:
     params: dict
     cfg: AutoencoderConfig
     threshold: float = float("inf")
+    #: inference backend for the jit'd score path; None keeps cfg.impl.
+    #: Serving defaults to the fused wavefront stack — the whole encoder
+    #: (and decoder) runs as one Pallas call, no per-layer HBM round-trips.
+    #: The upgrade is skipped when cfg.acts is not kernel-exact (e.g.
+    #: PAPER_HW's LUT sigmoid would be swapped for its PWL twin in-kernel),
+    #: so scores stay consistent with thresholds calibrated on cfg.impl;
+    #: set cfg.impl="fused_stack" directly to opt in regardless.
+    impl: str | None = "fused_stack"
 
     def __post_init__(self):
+        from repro.core.quant import kernel_safe
+
+        if self.impl is not None and self.impl != self.cfg.impl:
+            kernel_impl = self.impl in ("kernel", "fused_stack")
+            if not kernel_impl or kernel_safe(self.cfg.acts) is self.cfg.acts:
+                self.cfg = replace(self.cfg, impl=self.impl)
         self._score = jax.jit(
             lambda p, x: reconstruction_error(p, x, self.cfg)
         )

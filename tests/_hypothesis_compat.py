@@ -1,0 +1,128 @@
+"""Offline stand-in for ``hypothesis`` so the tier-1 suite always collects.
+
+Test modules import through this shim::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+When the real library is installed it wins (full shrinking/search); otherwise
+``@given`` degrades to a deterministic fixed-example sweep: each strategy is
+sampled with a seeded PRNG so every run exercises the same small example set.
+No shrinking, no database — just enough coverage to keep property tests
+meaningful in a hermetic container.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable
+
+#: Examples run per @given test (a fixed sweep, not a search).
+_DEFAULT_EXAMPLES = 5
+
+
+class _Strategy:
+    """A draw function wrapped so strategies compose like hypothesis's."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], label: str = "?"):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"_Strategy({self._label})"
+
+
+class _StrategiesModule:
+    """The subset of ``hypothesis.strategies`` the suite uses."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: rng.randint(min_value, max_value),
+            f"integers({min_value},{max_value})",
+        )
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_: Any) -> _Strategy:
+        return _Strategy(
+            lambda rng: rng.uniform(min_value, max_value),
+            f"floats({min_value},{max_value})",
+        )
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: rng.choice(pool), "sampled_from")
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw, f"lists({min_size},{max_size})")
+
+    @staticmethod
+    def builds(target: Callable, *args: _Strategy, **kwargs: _Strategy) -> _Strategy:
+        def draw(rng: random.Random):
+            a = [s.draw(rng) for s in args]
+            kw = {k: s.draw(rng) for k, s in kwargs.items()}
+            return target(*a, **kw)
+
+        return _Strategy(draw, f"builds({getattr(target, '__name__', target)})")
+
+
+st = _StrategiesModule()
+
+
+def settings(max_examples: int | None = None, **_: Any):
+    """Record max_examples on the test; all other knobs are ignored."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test over a deterministic fixed sweep of drawn examples."""
+
+    def deco(fn):
+        inner = fn
+        cap = getattr(fn, "_compat_max_examples", None) or _DEFAULT_EXAMPLES
+        n_examples = min(cap, _DEFAULT_EXAMPLES)
+
+        @functools.wraps(inner)
+        def wrapper(*call_args, **call_kwargs):
+            # seed on the test name: stable across runs, distinct across tests
+            rng = random.Random(inner.__qualname__)
+            for _ in range(n_examples):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                inner(*call_args, *drawn, **call_kwargs, **drawn_kw)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (like hypothesis does): expose only e.g. ``self``
+        sig = inspect.signature(inner)
+        keep = [p for p in sig.parameters.values() if p.name not in kw_strategies]
+        if arg_strategies:
+            keep = keep[: len(keep) - len(arg_strategies)]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper._compat_max_examples = n_examples
+        return wrapper
+
+    return deco

@@ -3,8 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: fixed-example stand-ins
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import balance
 from repro.core.ii_model import (

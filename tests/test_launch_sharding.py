@@ -78,7 +78,9 @@ class TestHloAnalyzer:
             comp = jax.jit(f).lower(x, ws).compile()
             a = analyze_hlo(comp.as_text())
             flops[L] = a.dot_flops
-            raw = comp.cost_analysis()["flops"]
+            from repro.analysis.hlo import cost_analysis_dict
+
+            raw = cost_analysis_dict(comp)["flops"]
             assert a.dot_flops > raw  # scan-corrected > raw for L > 1
         assert flops[8] == pytest.approx(4 * flops[2], rel=0.05)
         assert flops[8] == pytest.approx(8 * 2 * d**3, rel=0.05)
@@ -141,10 +143,18 @@ class TestDryrunSmoke:
         """The full launch path (rules -> jit -> compile -> EXECUTE) on 8
         placeholder devices with a reduced config — the in-suite twin of
         launch/dryrun.py."""
+        import os
+
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+        # keep platform selection: without e.g. JAX_PLATFORMS=cpu the
+        # subprocess probes for accelerator plugins and can stall or hang
+        for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "TMPDIR"):
+            if var in os.environ:
+                env[var] = os.environ[var]
         r = subprocess.run(
             [sys.executable, "-c", _DRYRUN_SMOKE],
             capture_output=True, text=True, timeout=600,
-            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+            env=env,
             cwd="/root/repo",
         )
         assert "DRYRUN_SMOKE_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])

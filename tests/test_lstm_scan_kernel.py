@@ -9,8 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: fixed-example stand-ins
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.lstm import LstmConfig, init_lstm, lstm_forward, lstm_forward_split
 from repro.core.quant import EXACT, HARD, PAPER_HW
@@ -101,6 +104,37 @@ class TestKernelVsRef:
         hs_r, hf_r, cf_r = lstm_scan_ref(jnp.swapaxes(xw, 0, 1), w_h, h0, c0)
         np.testing.assert_allclose(hs_k, jnp.swapaxes(hs_r, 0, 1), rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(cf_k, cf_r, rtol=1e-5, atol=1e-5)
+
+
+class TestChooseBlocking:
+    """Regression: odd/small batches must never shrink block_b below the
+    sublane tile — batch_p rounds UP to a block multiple instead."""
+
+    @given(batch=st.integers(1, 1000))
+    @settings(max_examples=100, deadline=None)
+    def test_invariants_default_block(self, batch):
+        from repro.kernels.lstm_scan.ops import SUBLANES, choose_blocking
+
+        batch_p, block_b = choose_blocking(batch)
+        assert block_b >= SUBLANES
+        assert batch_p % block_b == 0
+        assert batch_p >= batch
+        assert batch_p % SUBLANES == 0
+
+    @pytest.mark.parametrize("batch", [1, 3, 5, 7, 11, 13, 300, 999])
+    @pytest.mark.parametrize("block_b", [None, 8, 64, 256])
+    def test_odd_batches_explicit_blocks(self, batch, block_b):
+        from repro.kernels.lstm_scan.ops import SUBLANES, choose_blocking
+
+        batch_p, bb = choose_blocking(batch, block_b)
+        assert bb >= SUBLANES and batch_p % bb == 0 and batch_p >= batch
+
+    def test_previous_failure_mode(self):
+        """batch=3 used to yield block_b=1 via the //=2 fixup."""
+        from repro.kernels.lstm_scan.ops import choose_blocking
+
+        batch_p, block_b = choose_blocking(3)
+        assert (batch_p, block_b) == (8, 8)
 
 
 class TestGatePadding:

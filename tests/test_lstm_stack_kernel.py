@@ -1,0 +1,202 @@
+"""Fused multi-layer wavefront stack vs sequential execution (interpret mode).
+
+The wavefront only reorders when each (layer, timestep) cell is computed —
+the dependency structure is untouched — so results must match sequential
+layer-by-layer execution to float tolerance, including on the heterogeneous
+GW autoencoder widths (32, 8, 8, 32) with zero-pad packing, non-zero initial
+state, and across the encoder->decoder sync boundary.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: fixed-example stand-ins
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.lstm import (
+    LstmConfig,
+    init_lstm,
+    lstm_forward,
+    lstm_stack_forward,
+)
+from repro.core.quant import EXACT, HARD, PAPER_HW
+from repro.kernels.lstm_stack import lstm_stack, lstm_stack_op, lstm_stack_ref
+
+
+def _mk_stack(key, dims):
+    cfgs = [LstmConfig(in_dim=lx, hidden=lh) for lx, lh in dims]
+    keys = jax.random.split(key, len(dims))
+    return [init_lstm(k, c) for k, c in zip(keys, cfgs)], cfgs
+
+
+def _sequential(params_list, cfgs, xs, states=None):
+    h, finals = xs, []
+    for i, (p, c) in enumerate(zip(params_list, cfgs)):
+        state = None if states is None else states[i]
+        h, f = lstm_forward(p, h, c, state)
+        finals.append(f)
+    return h, finals
+
+
+def _mk_packed(key, n_layers, b, t, w):
+    ks = jax.random.split(key, 6)
+    return (
+        jax.random.normal(ks[0], (t, b, 4 * w)),
+        jax.random.normal(ks[1], (n_layers, w, 4 * w)) * 0.3,
+        jax.random.normal(ks[2], (n_layers, w, 4 * w)) * 0.3,
+        jax.random.normal(ks[3], (n_layers, 4 * w)) * 0.1,
+        jax.random.normal(ks[4], (n_layers, b, w)) * 0.5,
+        jax.random.normal(ks[5], (n_layers, b, w)) * 0.5,
+    )
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n_layers", [1, 2, 4])
+    @pytest.mark.parametrize("b,t,w", [(1, 1, 4), (3, 9, 8), (8, 20, 16)])
+    def test_packed_shape_sweep(self, n_layers, b, t, w):
+        args = _mk_packed(jax.random.PRNGKey(n_layers * 100 + b), n_layers, b, t, w)
+        hs_k, hf_k, cf_k = lstm_stack(*args, interpret=True)
+        hs_r, hf_r, cf_r = lstm_stack_ref(*args)
+        np.testing.assert_allclose(hs_k, hs_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(hf_k, hf_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(cf_k, cf_r, rtol=1e-5, atol=1e-5)
+
+    @given(
+        n_layers=st.integers(1, 4), b=st.integers(1, 5), t=st.integers(1, 12),
+        w=st.sampled_from([4, 8, 12]), seed=st.integers(0, 999),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_property_random_shapes(self, n_layers, b, t, w, seed):
+        args = _mk_packed(jax.random.PRNGKey(seed), n_layers, b, t, w)
+        hs_k, _, cf_k = lstm_stack(*args, interpret=True)
+        hs_r, _, cf_r = lstm_stack_ref(*args)
+        np.testing.assert_allclose(hs_k, hs_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(cf_k, cf_r, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("block_b", [1, 2, 4, 8])
+    def test_batch_blocking_invariance(self, block_b):
+        """Result must not depend on the parallel batch blocking."""
+        args = _mk_packed(jax.random.PRNGKey(7), 3, 8, 10, 8)
+        base, _, _ = lstm_stack(*args, block_b=8, interpret=True)
+        got, _, _ = lstm_stack(*args, block_b=block_b, interpret=True)
+        np.testing.assert_allclose(base, got, rtol=1e-6, atol=1e-6)
+
+
+class TestHeterogeneousStack:
+    """Zero-pad packing of the real GW widths through the public API."""
+
+    GW_NOMINAL_DIMS = [(1, 32), (32, 8), (8, 8), (8, 32)]
+
+    def test_gw_nominal_widths_zero_state(self):
+        params, cfgs = _mk_stack(jax.random.PRNGKey(0), self.GW_NOMINAL_DIMS)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (3, 20, 1))
+        ref, finals_ref = _sequential(params, cfgs, xs)
+        out, finals = lstm_stack_forward(params, xs, cfgs, impl="fused_stack")
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+        for (hf, cf), (hr, cr) in zip(finals, finals_ref):
+            assert hf.shape == hr.shape and cf.shape == cr.shape
+            np.testing.assert_allclose(hf, hr, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(cf, cr, rtol=1e-5, atol=1e-5)
+
+    def test_gw_nominal_widths_nonzero_state(self):
+        """Non-zero per-layer initial (h, c) must round-trip exactly."""
+        params, cfgs = _mk_stack(jax.random.PRNGKey(2), self.GW_NOMINAL_DIMS)
+        b = 4
+        key = jax.random.PRNGKey(3)
+        states = []
+        for i, c in enumerate(cfgs):
+            kh, kc = jax.random.split(jax.random.fold_in(key, i))
+            states.append((
+                jax.random.normal(kh, (b, c.hidden)) * 0.5,
+                jax.random.normal(kc, (b, c.hidden)) * 0.5,
+            ))
+        xs = jax.random.normal(jax.random.fold_in(key, 99), (b, 12, 1))
+        ref, _ = _sequential(params, cfgs, xs, states)
+        out, _ = lstm_stack_forward(
+            params, xs, cfgs, states=states, impl="fused_stack"
+        )
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("acts", [EXACT, PAPER_HW, HARD], ids=lambda a: a.name)
+    def test_activation_variants(self, acts):
+        """The fused path uses the kernel-safe activation twins, like
+        impl='kernel' does — compare against the same twin run sequentially."""
+        from repro.core.quant import kernel_safe
+
+        dims = [(2, 6), (6, 4)]
+        cfgs = [
+            LstmConfig(in_dim=lx, hidden=lh, acts=kernel_safe(acts))
+            for lx, lh in dims
+        ]
+        keys = jax.random.split(jax.random.PRNGKey(5), len(dims))
+        params = [init_lstm(k, c) for k, c in zip(keys, cfgs)]
+        xs = jax.random.normal(jax.random.PRNGKey(6), (2, 9, 2))
+        ref, _ = _sequential(params, cfgs, xs)
+        out, _ = lstm_stack_forward(params, xs, cfgs, impl="fused_stack")
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+class TestAutoencoderBoundary:
+    """Encoder->decoder latent bottleneck: fused segments, hard sync point."""
+
+    @pytest.mark.parametrize(
+        "hidden,lb", [((32, 8, 8, 32), None), ((9, 9), 1)],
+        ids=["gw_nominal", "gw_small"],
+    )
+    def test_fused_matches_split(self, hidden, lb):
+        from repro.core.autoencoder import (
+            AutoencoderConfig, autoencoder_forward, init_autoencoder,
+        )
+
+        cfg_s = AutoencoderConfig(hidden=hidden, latent_boundary=lb, impl="split")
+        cfg_f = dataclasses.replace(cfg_s, impl="fused_stack")
+        params = init_autoencoder(jax.random.PRNGKey(8), cfg_s)
+        x = jax.random.normal(jax.random.PRNGKey(9), (5, 24, 1))
+        np.testing.assert_allclose(
+            autoencoder_forward(params, x, cfg_f),
+            autoencoder_forward(params, x, cfg_s),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_engine_uses_fused_stack(self):
+        from repro.core.autoencoder import AutoencoderConfig, init_autoencoder
+        from repro.serve.engine import AnomalyStreamEngine
+
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1)
+        params = init_autoencoder(jax.random.PRNGKey(10), cfg)
+        eng = AnomalyStreamEngine(params, cfg)
+        assert eng.cfg.impl == "fused_stack"
+        eng_ref = AnomalyStreamEngine(params, cfg, impl="split")
+        x = np.random.RandomState(0).randn(6, 16, 1).astype("float32")
+        np.testing.assert_allclose(
+            eng.score(x), eng_ref.score(x), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestSingleLayerDegenerate:
+    def test_empty_stack_is_identity(self):
+        """An empty segment (latent_boundary=0 autoencoders) is a no-op."""
+        xs = jax.random.normal(jax.random.PRNGKey(13), (2, 5, 3))
+        for impl in ("split", "fused_stack"):
+            out, finals = lstm_stack_forward([], xs, [], impl=impl)
+            assert out is xs and finals == []
+
+    def test_single_layer_equals_lstm_forward(self):
+        """L=1 wavefront degenerates to the plain scan (lag 0)."""
+        cfg = LstmConfig(in_dim=3, hidden=7)
+        params = init_lstm(jax.random.PRNGKey(11), cfg)
+        xs = jax.random.normal(jax.random.PRNGKey(12), (4, 15, 3))
+        ref, (h_r, c_r) = lstm_forward(params, xs, cfg)
+        out, [(h_f, c_f)] = lstm_stack_forward(
+            [params], xs, [cfg], impl="fused_stack"
+        )
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(h_f, h_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c_f, c_r, rtol=1e-5, atol=1e-5)

@@ -7,8 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: fixed-example stand-ins
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.lstm import LstmConfig, init_lstm, lstm_forward
 from repro.core.pipeline import (
@@ -112,11 +115,18 @@ print("SHARD_MAP_OK")
 class TestShardMapWavefront:
     def test_distributed_matches_sequential(self):
         """4 stages on 4 (placeholder) devices, ppermute hand-off."""
+        import os
+
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+        # platform selection must survive into the subprocess: without e.g.
+        # JAX_PLATFORMS=cpu jax probes for accelerator plugins and can hang
+        for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "TMPDIR"):
+            if var in os.environ:
+                env[var] = os.environ[var]
         r = subprocess.run(
             [sys.executable, "-c", _SHARD_MAP_SCRIPT],
             capture_output=True, text=True, timeout=300,
-            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                 "HOME": "/root"},
+            env=env,
             cwd="/root/repo",
         )
         assert "SHARD_MAP_OK" in r.stdout, r.stderr[-2000:]
