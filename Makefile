@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-kernels bench
+.PHONY: test test-fast test-serve bench-kernels bench-stream bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -14,9 +14,17 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -x -q --deselect tests/test_gw_e2e.py
 
-# kernel + pipeline rows only, with the machine-readable perf artifact
+# the stateful streaming serving path (equivalence, cache, donation)
+test-serve:
+	$(PYTHON) -m pytest -x -q tests/test_serve_streaming.py
+
+# kernel + pipeline + streaming-serve rows, with the machine-readable artifact
 bench-kernels:
-	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance --json BENCH_kernels.json
+	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance,stream --json BENCH_kernels.json
+
+# fast path: just the streaming B=1 vs batch serving rows
+bench-stream:
+	$(PYTHON) -m benchmarks.run --only stream --json BENCH_stream.json
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

@@ -35,6 +35,7 @@ def main() -> None:
         kernels_bench,
         pipeline_balance,
         roofline_table,
+        stream_latency,
         table2,
         table3,
         table4,
@@ -48,6 +49,7 @@ def main() -> None:
         "table4": table4.run,
         "kernels_bench": kernels_bench.run,
         "pipeline_balance": pipeline_balance.run,
+        "stream": stream_latency.run,
         "roofline_table": lambda: roofline_table.run(args.rundir),
     }
     if args.only:

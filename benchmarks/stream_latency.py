@@ -1,0 +1,110 @@
+"""Streaming B=1 serving latency vs one-shot batch scoring.
+
+The paper's deployment unit is a batch-1 strain window arriving
+continuously (Table III's latency target).  This benchmark compares, on
+the same pre-packed fused stack:
+
+* ``StreamingAnomalyEngine`` full-window push (one encoder kernel call +
+  decode per window, persistent state, donated buffers);
+* ``StreamingAnomalyEngine`` chunked push (window split into 4 chunks —
+  the pipeline never re-fills between chunks);
+* ``AnomalyStreamEngine`` one-shot scoring at B=1 and B=8 (per-window
+  amortized).
+
+It also asserts the serving-cache contract: ``pack_lstm_stack`` must not
+be re-traced by steady-state scoring — packing happens exactly once per
+params identity, at engine init (the ``packs`` field of the acceptance
+row; ``ok=1`` means zero pack growth across the timed loop).
+
+Interpret-mode timings on CPU are correctness-grade only; on a TPU host
+the same code path runs the compiled wavefront kernel.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.gw import GW_MODELS
+from repro.core import pipeline
+from repro.core.autoencoder import init_autoencoder
+from repro.serve.engine import AnomalyStreamEngine, StreamingAnomalyEngine
+
+
+def _time(fn, n_iter: int = 10) -> float:
+    fn()  # warm up (compile)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()  # engines sync internally (scores come back as numpy)
+    return (time.perf_counter() - t0) / n_iter * 1e6
+
+
+def run() -> list[tuple]:
+    rows = []
+    cfg = GW_MODELS["gw_small"]
+    t_len = cfg.timesteps
+    params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    w1 = rng.standard_normal((1, t_len, 1)).astype(np.float32)
+    w8 = rng.standard_normal((8, t_len, 1)).astype(np.float32)
+
+    print("\n== serving: streaming B=1 vs one-shot batch (gw_small, "
+          f"T={t_len}) ==")
+
+    eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    packs_at_init = pipeline.PACK_TRACE_COUNT
+
+    us_window = _time(lambda: eng.push(w1))
+    print(f"streaming push, full window : {us_window:10.0f} us/window")
+    rows.append(("bench.stream_b1_window_us", us_window, ""))
+
+    chunk = max(t_len // 4, 1)
+
+    def push_chunked():
+        out = []
+        for pos in range(0, t_len, chunk):
+            out += eng.push(w1[:, pos : pos + chunk])
+        return out[0]
+
+    us_chunked = _time(push_chunked)
+    print(f"streaming push, 4 chunks    : {us_chunked:10.0f} us/window")
+    rows.append(("bench.stream_b1_chunk_us", us_chunked, f"chunk={chunk}"))
+
+    batch_eng = AnomalyStreamEngine(params, cfg)
+    us_b1 = _time(lambda: batch_eng.score(w1))
+    us_b8 = _time(lambda: batch_eng.score(w8)) / 8
+    print(f"one-shot score, B=1         : {us_b1:10.0f} us/window")
+    print(f"one-shot score, B=8         : {us_b8:10.0f} us/window (amortized)")
+    rows.append(("bench.batch_b1_us", us_b1, ""))
+    rows.append(("bench.batch_b8_us", us_b8, "per-window"))
+
+    pack_growth = pipeline.PACK_TRACE_COUNT - packs_at_init
+    # the one-shot engine legitimately traces its pack once per jit trace
+    # (w1 and w8 shapes); the STREAMING loops must contribute zero.  Re-run
+    # a streaming window now that every path is compiled and assert flat.
+    before = pipeline.PACK_TRACE_COUNT
+    for _ in range(3):
+        eng.push(w1)
+        eng.score(w1)
+    steady_growth = pipeline.PACK_TRACE_COUNT - before
+    ok = steady_growth == 0
+    ratio = us_window / us_b1
+    print(f"streaming vs one-shot B=1: {ratio:.2f}x; pack traces in "
+          f"steady state: {steady_growth} ({'OK' if ok else 'REGRESSION'})")
+    rows.append((
+        "bench.stream_b1_vs_batch", us_window,
+        f"ratio={ratio:.3f}|packs_steady={steady_growth}|"
+        f"packs_timed={pack_growth}|ok={int(ok)}",
+    ))
+    if not ok:  # a hard gate, not just a row: CI's bench run must fail
+        raise RuntimeError(
+            f"steady-state scoring re-traced pack_lstm_stack "
+            f"{steady_growth}x — the pre-packed serve contract regressed"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -87,40 +87,112 @@ def init_autoencoder(key: jax.Array, cfg: AutoencoderConfig) -> Params:
     return params
 
 
-def autoencoder_forward(
-    params: Params, x: jax.Array, cfg: AutoencoderConfig
-) -> jax.Array:
-    """Reconstruct x. x: (B, T, input_dim) -> (B, T, input_dim)."""
+#: per-segment streaming state: per-layer [(h, c), ...] at real widths
+SegmentState = list
+
+
+def encoder_layers(params: Params, cfg: AutoencoderConfig):
+    cfgs = cfg.layer_cfgs()[: cfg.boundary]
+    return [params[f"lstm_{i}"] for i in range(cfg.boundary)], cfgs
+
+
+def decoder_layers(params: Params, cfg: AutoencoderConfig):
     cfgs = cfg.layer_cfgs()
-    t = x.shape[1]
-    n = len(cfgs)
-    plist = [params[f"lstm_{i}"] for i in range(n)]
+    return (
+        [params[f"lstm_{i}"] for i in range(cfg.boundary, len(cfgs))],
+        cfgs[cfg.boundary :],
+    )
+
+
+def encode(
+    params: Params, x: jax.Array, cfg: AutoencoderConfig,
+    initial_state: SegmentState | None = None,
+    *, return_state: bool = False, packed: Any = None,
+) -> Any:
+    """Run the encoder segment. x: (B, T, input_dim) -> (B, T, h_enc_last).
+
+    ``initial_state``/``return_state`` thread the per-layer (h, c) finals
+    so a streaming caller can push a window chunk-by-chunk: the encoder is
+    causal, so K chunked calls that carry state equal one full-window call.
+    ``packed`` short-circuits weight packing on the fused path (serve).
+    """
+    plist, cfgs = encoder_layers(params, cfg)
+    return lstm_stack_forward(
+        plist, x, cfgs, initial_state, impl=cfg.impl,
+        return_state=return_state, packed=packed,
+    )
+
+
+def decode(
+    params: Params, latent: jax.Array, cfg: AutoencoderConfig,
+    t: int | None = None,
+    initial_state: SegmentState | None = None,
+    *, return_state: bool = False, packed: Any = None,
+) -> Any:
+    """Decoder segment + dense head. latent: (B, h_latent) -> (B, T, input_dim).
+
+    The bridge (RepeatVector) feeds the latent to every decoder timestep,
+    so decoding needs only the latent and a length — the streaming engine
+    calls this once per completed window.
+    """
+    t = cfg.timesteps if t is None else t
+    plist, cfgs = decoder_layers(params, cfg)
+    h_seq = jnp.broadcast_to(
+        latent[:, None, :], (latent.shape[0], t, latent.shape[1])
+    )
+    out = lstm_stack_forward(
+        plist, h_seq, cfgs, initial_state, impl=cfg.impl,
+        return_state=return_state, packed=packed,
+    )
+    h_seq, finals = out if return_state else (out, None)
+    # ---- TimeDistributed dense head ----------------------------------------
+    rec = h_seq.astype(cfg.dtype) @ params["dense"]["w"] + params["dense"]["b"]
+    return (rec, finals) if return_state else rec
+
+
+def autoencoder_forward(
+    params: Params, x: jax.Array, cfg: AutoencoderConfig,
+    *, packed_enc: Any = None, packed_dec: Any = None,
+) -> jax.Array:
+    """Reconstruct x. x: (B, T, input_dim) -> (B, T, input_dim).
+
+    ``packed_enc``/``packed_dec`` are optional pre-built ``PackedStack``s
+    for the fused segments (the serve path packs once at engine init).
+    """
     # The encoder->decoder bottleneck is the ii_model.Segment sync boundary:
     # only the final latent crosses, so each segment runs (and, under
     # impl="fused_stack", wavefront-fuses) independently.
-    # ---- encoder segment ---------------------------------------------------
-    h_seq, _ = lstm_stack_forward(
-        plist[: cfg.boundary], x, cfgs[: cfg.boundary], impl=cfg.impl
-    )
+    h_seq = encode(params, x, cfg, packed=packed_enc)
     # bottleneck: only the last hidden vector crosses (RepeatVector)
     latent = h_seq[:, -1, :]
-    h_seq = jnp.broadcast_to(latent[:, None, :], (latent.shape[0], t, latent.shape[1]))
-    # ---- decoder segment ---------------------------------------------------
-    h_seq, _ = lstm_stack_forward(
-        plist[cfg.boundary :], h_seq, cfgs[cfg.boundary :], impl=cfg.impl
-    )
-    # ---- TimeDistributed dense head ----------------------------------------
-    out = h_seq.astype(cfg.dtype) @ params["dense"]["w"] + params["dense"]["b"]
-    return out.astype(x.dtype)
+    rec = decode(params, latent, cfg, t=x.shape[1], packed=packed_dec)
+    return rec.astype(x.dtype)
+
+
+def reconstruction_error_from_latent(
+    params: Params, latent: jax.Array, x: jax.Array, cfg: AutoencoderConfig,
+    *, packed_dec: Any = None,
+) -> jax.Array:
+    """Anomaly score given an already-computed latent: decode + fp32 MSE
+    against x.  The single definition of the score tail — one-shot scoring
+    and the streaming engine (whose latent comes from resident encoder
+    state) must agree bit-for-bit, so both route through here. (B,)"""
+    rec = decode(
+        params, latent, cfg, t=x.shape[1], packed=packed_dec
+    ).astype(x.dtype)
+    err = (rec.astype(jnp.float32) - x.astype(jnp.float32)) ** 2
+    return jnp.mean(err, axis=(1, 2))
 
 
 def reconstruction_error(
-    params: Params, x: jax.Array, cfg: AutoencoderConfig
+    params: Params, x: jax.Array, cfg: AutoencoderConfig,
+    *, packed_enc: Any = None, packed_dec: Any = None,
 ) -> jax.Array:
     """Per-example anomaly score: mean squared reconstruction error. (B,)"""
-    rec = autoencoder_forward(params, x, cfg)
-    err = (rec.astype(jnp.float32) - x.astype(jnp.float32)) ** 2
-    return jnp.mean(err, axis=(1, 2))
+    h_seq = encode(params, x, cfg, packed=packed_enc)
+    return reconstruction_error_from_latent(
+        params, h_seq[:, -1, :], x, cfg, packed_dec=packed_dec
+    )
 
 
 def mse_loss(params: Params, x: jax.Array, cfg: AutoencoderConfig) -> jax.Array:

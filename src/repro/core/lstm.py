@@ -162,9 +162,12 @@ def lstm_forward(
 
 def lstm_stack_forward(
     params_list: list[Params], xs: jax.Array, cfgs: list[LstmConfig],
-    states: list[tuple[jax.Array, jax.Array]] | None = None,
+    initial_state: list[tuple[jax.Array, jax.Array]] | None = None,
     impl: str = "split",
-) -> tuple[jax.Array, list[tuple[jax.Array, jax.Array]]]:
+    *,
+    return_state: bool = True,
+    packed: Any = None,
+) -> Any:
     """Run L cascaded LSTM layers (one pipeline segment, no sync boundary).
 
     Dispatch: impl in {naive, split, kernel, fused_stack}.  The first three
@@ -174,21 +177,34 @@ def lstm_stack_forward(
     kernel (paper Fig. 7): layer l+1 consumes h_t one kernel step after
     layer l emits it, and no intermediate hidden sequence leaves the chip.
 
-    Returns (last layer's hidden sequence (B, T, hidden[-1]),
-    per-layer (h_final, c_final) — layer-by-layer semantics either way).
+    Persistent-state contract (the streaming serve path): ``initial_state``
+    is a per-layer ``[(h, c), ...]`` at real layer widths (None = zeros);
+    feeding the returned finals back as the next call's ``initial_state``
+    continues the sequence exactly — running T steps twice equals one
+    2T-step pass (tested).  ``packed`` is an optional pre-built
+    ``kernels.lstm_stack.PackedStack`` (fused path only): pass it to skip
+    re-packing the weights inside a jitted serving step.
+
+    Returns last layer's hidden sequence (B, T, hidden[-1]); with
+    ``return_state`` (default) also the per-layer (h_final, c_final) list —
+    layer-by-layer semantics for every impl.
     """
     if not cfgs:  # empty segment (e.g. latent_boundary=0): identity
-        return xs, []
+        return (xs, []) if return_state else xs
     if impl == "fused_stack":
         from repro.kernels.lstm_stack import ops as kops
 
-        return kops.lstm_stack_forward_fused(params_list, xs, cfgs, states)
+        h_seq, finals = kops.lstm_stack_forward_fused(
+            params_list, xs, cfgs, initial_state, packed=packed
+        )
+        return (h_seq, finals) if return_state else h_seq
+    assert packed is None, "packed weights only apply to impl='fused_stack'"
     h_seq, finals = xs, []
     for i, (p, cfg) in enumerate(zip(params_list, cfgs)):
-        state = None if states is None else states[i]
+        state = None if initial_state is None else initial_state[i]
         h_seq, final = lstm_forward(p, h_seq, cfg, state, impl=impl)
         finals.append(final)
-    return h_seq, finals
+    return (h_seq, finals) if return_state else h_seq
 
 
 def zero_state(batch: int, cfg: LstmConfig) -> tuple[jax.Array, jax.Array]:

@@ -43,6 +43,12 @@ from repro.core.quant import ActivationSet, EXACT
 # homogeneous stage packing for LSTM stacks
 # ---------------------------------------------------------------------------
 
+#: Number of times ``pack_lstm_stack`` has run (eagerly, or traced into a
+#: jit).  Serving code pre-packs once per params identity; benchmarks and
+#: tests read this counter to assert the pack is NOT re-traced per call.
+PACK_TRACE_COUNT: int = 0
+
+
 def pack_lstm_stack(params_list: list[dict], in_dims: list[int],
                     hidden_dims: list[int], d_target: int | None = None,
                     h_target: int | None = None) -> tuple[dict, int, int]:
@@ -53,6 +59,8 @@ def pack_lstm_stack(params_list: list[dict], in_dims: list[int],
     padded hidden lanes multiply zero W_h rows, and padded gate outputs
     never feed back into real lanes.
     """
+    global PACK_TRACE_COUNT
+    PACK_TRACE_COUNT += 1
     d_max = d_target or max(in_dims)
     h_max = h_target or max(hidden_dims)
 

@@ -1,3 +1,9 @@
 from .lstm_stack import lstm_stack  # noqa: F401
-from .ops import lstm_stack_forward_fused, lstm_stack_op  # noqa: F401
+from .ops import (  # noqa: F401
+    PackedStack,
+    lstm_stack_forward_fused,
+    lstm_stack_op,
+    pack_stack,
+    pack_stack_cached,
+)
 from .ref import lstm_stack_ref  # noqa: F401

@@ -132,10 +132,19 @@ def lstm_stack(
     sigma: Callable = jax.nn.sigmoid,
     tanh: Callable = jnp.tanh,
     interpret: bool = False,
+    alias_state: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Run the fused L-layer wavefront. Shapes pre-padded by ops.py (W a lane
     multiple, B a block multiple on device).  Returns
     (hs_last: (T, B, W), h_final: (L, B, W), c_final fp32: (L, B, W)).
+
+    ``alias_state`` maps ``h0 -> h_final`` and ``c0 -> c_final`` via
+    ``input_output_aliases``: the kernel may write the final state in place
+    over the initial state, so a persistent-state serving loop (feed the
+    finals back as the next call's initials, donate at the jit boundary)
+    carries (h, c) with zero per-call state allocations.  Safe because each
+    batch block reads ``h0``/``c0`` exactly once, at its first wavefront
+    step, strictly before any final-state write for that block.
     """
     t_len, batch, w4 = xw0.shape
     width = w4 // 4
@@ -201,6 +210,8 @@ def lstm_stack(
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
+        # operands: (xw0, w_x, w_h, b, h0, c0); outputs: (hs, h_f, c_f)
+        input_output_aliases={4: 1, 5: 2} if alias_state else {},
         interpret=interpret,
         name="lstm_stack_wavefront",
     )(xw0, w_x, w_h, b.reshape(n_layers, 1, w4), h0, c0)

@@ -5,8 +5,17 @@ Public entry points:
 * ``lstm_stack_op(xs, stacked, h0, c0)`` — batch-major convenience wrapper
   over an already homogeneous-packed stack (``core/pipeline.pack_lstm_stack``
   output), handling batch padding/blocking and the layer-0 ``mvm_x`` matmul.
-* ``lstm_stack_forward_fused(params_list, xs, cfgs, states)`` — drop-in
-  backend for ``core.lstm.lstm_stack_forward(..., impl="fused_stack")``:
+  Threads an explicit ``(h0, c0) -> (h_f, c_f)`` so callers can carry state
+  across calls; with ``alias_state`` (default) the kernel writes the finals
+  in place over the initials.
+* ``pack_stack_cached(params_list, cfgs)`` — one-time homogeneous packing
+  with an identity-keyed cache: serving engines pack at init and every
+  subsequent score call feeds the same ``PackedStack`` straight to
+  ``lstm_stack_op``, so ``pack_lstm_stack`` (pad + scatter + stack) is
+  traced exactly once per params identity instead of riding inside every
+  jitted score call.
+* ``lstm_stack_forward_fused(params_list, xs, cfgs, initial_state)`` —
+  drop-in backend for ``core.lstm.lstm_stack_forward(..., impl="fused_stack")``:
   packs a heterogeneous stack (e.g. the GW autoencoder's (32, 8, 8, 32))
   straight to the lane-padded common width, runs ONE kernel for the whole
   segment, and slices per-layer real widths back out.
@@ -19,6 +28,7 @@ happen once per *segment* instead of once per *layer*, and no intermediate
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass, field
 from typing import Any, Sequence
 
 import jax
@@ -35,7 +45,9 @@ from repro.kernels.lstm_scan.ops import (
 from .lstm_stack import lstm_stack
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "acts", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "acts", "interpret", "alias_state")
+)
 def lstm_stack_op(
     xs: jax.Array,       # (B, T, W) layer-0 input, pre-padded to the pack width
     stacked: dict,       # {"w_x": (L, W, 4W), "w_h": (L, W, 4W), "b": (L, 4W)}
@@ -45,6 +57,7 @@ def lstm_stack_op(
     block_b: int | None = None,
     acts: ActivationSet = EXACT,
     interpret: bool | None = None,
+    alias_state: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (hs_last: (B, T, W), h_final: (L, B, W), c_final fp32)."""
     if interpret is None:
@@ -76,25 +89,85 @@ def lstm_stack_op(
         sigma=acts_k.sigma,
         tanh=acts_k.tanh,
         interpret=interpret,
+        alias_state=alias_state,
     )
     hs = jnp.swapaxes(hs, 0, 1)[:batch]
     return hs, h_f[:, :batch], c_f[:, :batch]
 
 
-def lstm_stack_forward_fused(
-    params_list: Sequence[dict[str, Any]],
-    xs: jax.Array,  # (B, T, in_dim of layer 0)
-    cfgs: Sequence,  # list[LstmConfig], one per layer
-    states: Sequence[tuple[jax.Array, jax.Array]] | None = None,
-) -> tuple[jax.Array, list[tuple[jax.Array, jax.Array]]]:
-    """Backend for core.lstm.lstm_stack_forward(impl="fused_stack").
+# ---------------------------------------------------------------------------
+# one-time weight packing for the serve path
+# ---------------------------------------------------------------------------
 
-    Packs the (possibly heterogeneous) stack to one lane-padded width and
-    executes the whole segment as a single wavefront kernel.  Returns
-    (hs of the LAST layer: (B, T, hidden[-1]), per-layer (h_f, c_f) finals).
+@dataclass(frozen=True)
+class PackedStack:
+    """A homogeneous-packed LSTM stack ready for ``lstm_stack_op``.
+
+    ``stacked`` holds the lane-padded weights with a leading layer axis;
+    the remaining fields record the real (unpadded) geometry needed to
+    slice results back out and to build zero/padded state buffers.
+    Registered as a pytree (weights are children, geometry is static) so a
+    ``PackedStack`` can be passed through ``jax.jit`` boundaries — serving
+    engines pack once at init and pass the same arrays to every call.
     """
-    from repro.core.pipeline import pack_lstm_stack
 
+    stacked: dict[str, jax.Array]
+    width_p: int                 # common padded width W
+    in_dims: tuple[int, ...]
+    hidden: tuple[int, ...]
+    dtype: Any
+    cell_dtype: Any
+    acts: ActivationSet
+    #: strong refs to the source param leaves — keep the cache key's ids
+    #: valid and let lookups verify identity (see ``pack_stack_cached``)
+    src_leaves: tuple = field(default=(), compare=False)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.hidden)
+
+    def zero_state(self, batch: int) -> tuple[jax.Array, jax.Array]:
+        """Packed-layout zero state: h (L, B, W) compute dtype, c fp32."""
+        shape = (self.n_layers, batch, self.width_p)
+        return jnp.zeros(shape, self.dtype), jnp.zeros(shape, jnp.float32)
+
+    def pad_input(self, xs: jax.Array) -> jax.Array:
+        """Pad (B, T, in_dims[0]) features up to the pack width."""
+        return jnp.pad(
+            xs.astype(self.dtype),
+            ((0, 0), (0, 0), (0, self.width_p - xs.shape[-1])),
+        )
+
+    def pack_state(
+        self, states: Sequence[tuple[jax.Array, jax.Array]]
+    ) -> tuple[jax.Array, jax.Array]:
+        """Per-layer [(h, c), ...] at real widths -> packed (L, B, W) pair."""
+        def pad(arr, real, dtype):
+            return jnp.pad(arr.astype(dtype), ((0, 0), (0, self.width_p - real)))
+
+        h = jnp.stack([pad(h, w, self.dtype) for (h, _), w in zip(states, self.hidden)])
+        c = jnp.stack([pad(c, w, jnp.float32) for (_, c), w in zip(states, self.hidden)])
+        return h, c
+
+    def unpack_state(
+        self, h_f: jax.Array, c_f: jax.Array
+    ) -> list[tuple[jax.Array, jax.Array]]:
+        """Packed (L, B, W) finals -> per-layer [(h, c), ...] at real widths."""
+        return [
+            (
+                h_f[l, :, :w].astype(self.dtype),
+                c_f[l, :, :w].astype(self.cell_dtype),
+            )
+            for l, w in enumerate(self.hidden)
+        ]
+
+
+def _pack_width(cfgs: Sequence) -> int:
+    width = max(max(c.in_dim for c in cfgs), max(c.hidden for c in cfgs))
+    return width if _on_cpu() else _round_up(width, LANES)
+
+
+def _check_homogeneous(cfgs: Sequence) -> None:
     cfg0 = cfgs[0]
     # one kernel executes every layer: activations and dtypes must be
     # stack-wide (a mixed-precision stack would silently compute every
@@ -105,44 +178,138 @@ def lstm_stack_forward_fused(
     assert all(
         c.dtype == cfg0.dtype and c.cell_dtype == cfg0.cell_dtype for c in cfgs
     ), "fused_stack requires homogeneous dtypes across the segment"
-    in_dims = [c.in_dim for c in cfgs]
-    hidden = [c.hidden for c in cfgs]
-    n_layers = len(cfgs)
+
+
+def pack_stack(params_list: Sequence[dict], cfgs: Sequence) -> PackedStack:
+    """Pack a (possibly heterogeneous) stack to the kernel's common width."""
+    from repro.core.pipeline import pack_lstm_stack
+
+    _check_homogeneous(cfgs)
+    cfg0 = cfgs[0]
+    in_dims = tuple(c.in_dim for c in cfgs)
+    hidden = tuple(c.hidden for c in cfgs)
+    width_p = _pack_width(cfgs)
+    stacked, _, _ = pack_lstm_stack(
+        list(params_list), list(in_dims), list(hidden),
+        d_target=width_p, h_target=width_p,
+    )
+    return PackedStack(
+        stacked=stacked, width_p=width_p, in_dims=in_dims, hidden=hidden,
+        dtype=cfg0.dtype, cell_dtype=cfg0.cell_dtype, acts=cfg0.acts,
+        src_leaves=tuple(
+            leaf for p in params_list for leaf in jax.tree_util.tree_leaves(p)
+        ),
+    )
+
+
+jax.tree_util.register_pytree_node(
+    PackedStack,
+    lambda ps: (
+        (ps.stacked,),
+        (ps.width_p, ps.in_dims, ps.hidden, ps.dtype, ps.cell_dtype, ps.acts),
+    ),
+    lambda aux, ch: PackedStack(ch[0], *aux),
+)
+
+
+#: identity-keyed pack cache: key -> PackedStack.  The PackedStack keeps
+#: strong refs to the source leaves, so their id()s stay valid for the
+#: lifetime of the entry and a hit can verify ``is``-identity leaf by leaf.
+_PACK_CACHE: dict[tuple, PackedStack] = {}
+_PACK_CACHE_MAX = 16
+
+
+def pack_stack_cached(params_list: Sequence[dict], cfgs: Sequence) -> PackedStack:
+    """``pack_stack`` memoized on *params identity* (plus geometry).
+
+    A functional update (``{**params, "lstm_0": new}`` / dataclass
+    ``replace``) produces new leaf objects, so it misses the cache and
+    re-packs — stale packs cannot be served after a params update.  Traced
+    values (inside jit) bypass the cache entirely: caching by ``id`` of a
+    tracer would leak across traces.
+    """
+    leaves = [
+        leaf for p in params_list for leaf in jax.tree_util.tree_leaves(p)
+    ]
+    if any(isinstance(leaf, jax.core.Tracer) for leaf in leaves):
+        return pack_stack(params_list, cfgs)
+    # geometry AND semantics in the key: the same param leaves packed under
+    # different acts/dtypes are distinct PackedStacks (packed.acts drives
+    # the kernel's activation functions)
+    key = (
+        tuple(id(leaf) for leaf in leaves),
+        tuple((c.in_dim, c.hidden) for c in cfgs),
+        tuple((c.acts.name, c.dtype, c.cell_dtype) for c in cfgs),
+        _pack_width(cfgs),
+    )
+    hit = _PACK_CACHE.get(key)
+    if hit is not None and len(hit.src_leaves) == len(leaves) and all(
+        a is b for a, b in zip(hit.src_leaves, leaves)
+    ):
+        return hit
+    packed = pack_stack(params_list, cfgs)
+    while len(_PACK_CACHE) >= _PACK_CACHE_MAX:
+        _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
+    _PACK_CACHE[key] = packed
+    return packed
+
+
+def pack_cache_evict(*packs: PackedStack | None) -> None:
+    """Drop cache entries holding the given PackedStacks.
+
+    The cache keeps strong refs to source param leaves (that is what makes
+    identity keys sound), so a long-lived server that swaps params should
+    evict the superseded packs instead of waiting for FIFO turnover —
+    ``StreamingAnomalyEngine.update_params`` does.  Evicting is only a
+    memory release: engines still holding the PackedStack keep using it.
+    """
+    dead = {id(p) for p in packs if p is not None}
+    for key in [k for k, v in _PACK_CACHE.items() if id(v) in dead]:
+        del _PACK_CACHE[key]
+
+
+def lstm_stack_forward_fused(
+    params_list: Sequence[dict[str, Any]],
+    xs: jax.Array,  # (B, T, in_dim of layer 0)
+    cfgs: Sequence,  # list[LstmConfig], one per layer
+    initial_state: Sequence[tuple[jax.Array, jax.Array]] | None = None,
+    *,
+    packed: PackedStack | None = None,
+) -> tuple[jax.Array, list[tuple[jax.Array, jax.Array]]]:
+    """Backend for core.lstm.lstm_stack_forward(impl="fused_stack").
+
+    Packs the (possibly heterogeneous) stack to one lane-padded width and
+    executes the whole segment as a single wavefront kernel.  Returns
+    (hs of the LAST layer: (B, T, hidden[-1]), per-layer (h_f, c_f) finals).
+
+    Pass a pre-built ``packed`` (``pack_stack_cached``) to skip the in-trace
+    pack entirely — the serve path does this once at engine init.
+    """
+    if packed is None:
+        packed = pack_stack_cached(params_list, cfgs)
+    else:
+        _check_homogeneous(cfgs)
+        cfg0 = cfgs[0]
+        want = (
+            tuple(c.hidden for c in cfgs), tuple(c.in_dim for c in cfgs),
+            cfg0.acts.name, cfg0.dtype, cfg0.cell_dtype,
+        )
+        have = (
+            packed.hidden, packed.in_dims,
+            packed.acts.name, packed.dtype, packed.cell_dtype,
+        )
+        # a mismatched pack silently computes with the pack's geometry and
+        # activations, so this must hold even under python -O
+        if want != have:
+            raise ValueError(f"packed stack mismatches cfgs: {have} != {want}")
     batch = xs.shape[0]
 
-    interpret = _on_cpu()
-    width = max(max(in_dims), max(hidden))
-    width_p = width if interpret else _round_up(width, LANES)
-    stacked, _, _ = pack_lstm_stack(
-        list(params_list), in_dims, hidden, d_target=width_p, h_target=width_p
-    )
-
-    def pad_state(arr, real, dtype):
-        return jnp.pad(
-            arr.astype(dtype), ((0, 0), (0, width_p - real))
-        )
-
-    if states is None:
-        h0 = jnp.zeros((n_layers, batch, width_p), cfg0.dtype)
-        c0 = jnp.zeros((n_layers, batch, width_p), jnp.float32)
+    if initial_state is None:
+        h0, c0 = packed.zero_state(batch)
     else:
-        h0 = jnp.stack(
-            [pad_state(h, c.hidden, cfg0.dtype) for (h, _), c in zip(states, cfgs)]
-        )
-        c0 = jnp.stack(
-            [pad_state(cc, c.hidden, jnp.float32) for (_, cc), c in zip(states, cfgs)]
-        )
+        h0, c0 = packed.pack_state(initial_state)
 
-    xs_p = jnp.pad(
-        xs.astype(cfg0.dtype), ((0, 0), (0, 0), (0, width_p - xs.shape[-1]))
+    hs, h_f, c_f = lstm_stack_op(
+        packed.pad_input(xs), packed.stacked, h0, c0, acts=packed.acts
     )
-    hs, h_f, c_f = lstm_stack_op(xs_p, stacked, h0, c0, acts=cfg0.acts)
-
-    finals = [
-        (
-            h_f[l, :, : cfgs[l].hidden].astype(cfgs[l].dtype),
-            c_f[l, :, : cfgs[l].hidden].astype(cfgs[l].cell_dtype),
-        )
-        for l in range(n_layers)
-    ]
-    return hs[..., : hidden[-1]], finals
+    return hs[..., : packed.hidden[-1]], packed.unpack_state(h_f, c_f)

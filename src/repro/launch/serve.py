@@ -1,7 +1,15 @@
-"""Serving launcher: --arch <id>, batched prefill + decode.
+"""Serving launcher: LM decode or GW anomaly streaming.
+
+LM mode (batched prefill + decode):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --prompt-len 16 --new-tokens 16
+
+Anomaly mode (the paper's use case — persistent-state B=1 streaming on the
+fused stack, weights pre-packed at engine init, state donated per chunk):
+
+    PYTHONPATH=src python -m repro.launch.serve --mode anomaly \
+        --gw-model gw_small --windows 50 --chunk 25
 """
 
 from __future__ import annotations
@@ -19,13 +27,27 @@ from repro.serve.engine import LmEngine
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", choices=("lm", "anomaly"), default="lm")
+    # lm mode
+    ap.add_argument("--arch", help="LM arch id (lm mode)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    # anomaly mode
+    ap.add_argument("--gw-model", default="gw_small",
+                    help="GW_MODELS key (anomaly mode)")
+    ap.add_argument("--windows", type=int, default=50)
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="chunk length per push; 0 = full windows")
+    ap.add_argument("--fpr", type=float, default=0.01)
     args = ap.parse_args()
 
+    if args.mode == "anomaly":
+        return serve_anomaly(args)
+
+    if not args.arch:
+        ap.error("--arch is required in lm mode")
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -43,6 +65,41 @@ def main():
     print(f"{args.arch}: generated {out.shape} in {dt:.2f}s "
           f"({tok_s:.1f} tok/s on this host)")
     print("sample:", out[0][:12].tolist())
+
+
+def serve_anomaly(args):
+    """Continuous B=1 strain scoring with resident state (paper Table III)."""
+    from repro.configs.gw import GW_MODELS
+    from repro.core.autoencoder import init_autoencoder
+    from repro.data.gw import GwDataConfig, GwDataset
+    from repro.serve.engine import StreamingAnomalyEngine
+
+    cfg = GW_MODELS[args.gw_model]
+    params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+    ds = GwDataset(GwDataConfig(timesteps=cfg.timesteps))
+
+    engine = StreamingAnomalyEngine(params, cfg, batch=1)
+    print(f"{args.gw_model}: impl={engine.effective_impl} "
+          f"(requested fused_stack), window={engine.window}")
+    thr = engine.calibrate(ds.background(256), fpr=args.fpr)
+    print(f"calibrated threshold ({args.fpr:.0%} FPR): {thr:.4f}")
+
+    chunk = args.chunk or cfg.timesteps
+    rng = np.random.default_rng(1)
+    lat, flagged = [], 0
+    for _ in range(args.windows):
+        w = ds.events(1) if rng.random() < 0.1 else ds.background(1)
+        t0 = time.perf_counter()
+        scores = []
+        for pos in range(0, cfg.timesteps, chunk):
+            scores += engine.push(w[:, pos : pos + chunk])
+        lat.append(time.perf_counter() - t0)
+        flagged += int(scores[0][0] > thr)
+    warmup = min(5, len(lat) - 1)  # keep at least one sample
+    lat_us = np.asarray(lat[warmup:]) * 1e6
+    print(f"{args.windows} windows ({chunk}-sample chunks): "
+          f"{flagged} flagged; latency p50={np.percentile(lat_us, 50):.0f}us "
+          f"p99={np.percentile(lat_us, 99):.0f}us on this host")
 
 
 if __name__ == "__main__":

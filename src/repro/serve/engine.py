@@ -1,27 +1,84 @@
-"""Batched serving engine: prefill + decode loop with cache donation.
+"""Serving engines: batched scoring, stateful streaming, and LM decode.
 
 The paper's serving scenario is latency-critical batch-1 streaming (LIGO
-events arrive when they arrive); LM serving adds batched decode.  This
-engine covers both:
+events arrive when they arrive); LM serving adds batched decode.  Three
+engines cover the space:
 
-* ``AnomalyStreamEngine`` — the paper's use case: a stream of strain
+* ``AnomalyStreamEngine`` — one-shot batch scoring: a batch of strain
   windows scored by autoencoder reconstruction error against a calibrated
   threshold (FPR-targeted, like the paper's loss-spike flagging).
+* ``StreamingAnomalyEngine`` — the paper's true deployment unit: strain
+  arrives as a continuous stream of small chunks at batch 1 (or a few
+  parallel streams).  Per-stream LSTM ``(h, c)`` state stays resident
+  across calls, weights are packed ONCE at engine init, and the per-chunk
+  state buffers are donated — the hot loop re-fills nothing.
 * ``LmEngine`` — prefill once, then token-by-token decode with the cache
   donated between steps (no per-step reallocation).
+
+Streaming state lifecycle (``StreamingAnomalyEngine``):
+
+    push(chunk) -> encoder (h, c) advances      [donated, kernel-aliased]
+    ... window fills up (cfg.timesteps samples) ...
+    window complete -> latent -> decode + head -> score; encoder state
+    resets to zero (default, matches one-shot window scoring) or carries
+    on (``carry_state=True``, the continuous-stream mode)
+
+Donation caveat: after ``push`` returns, the previous state arrays are
+deleted (their buffers were reused) — callers must never hold references
+to engine state across calls.  The pre-packed weight cache is keyed on
+params *identity*: a functional params update (new leaf objects) re-packs
+automatically; use ``update_params`` to swap params on a live engine.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+import logging
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.autoencoder import AutoencoderConfig, reconstruction_error
+from repro.core.autoencoder import (
+    AutoencoderConfig,
+    decoder_layers,
+    encode,
+    encoder_layers,
+    reconstruction_error,
+    reconstruction_error_from_latent,
+)
 from repro.models.api import get_model
+
+logger = logging.getLogger(__name__)
+
+
+def resolve_impl(
+    cfg: AutoencoderConfig, impl: str | None
+) -> tuple[AutoencoderConfig, str, str | None]:
+    """Resolve a requested inference backend against kernel-safety.
+
+    Returns ``(cfg, effective_impl, fallback_reason)``.  Kernel backends
+    (``kernel``/``fused_stack``) swap non-kernel-safe activations (e.g.
+    PAPER_HW's LUT sigmoid) for their PWL twins in-kernel, which would make
+    scores inconsistent with thresholds calibrated on ``cfg.impl`` — in
+    that case the request is declined, ``cfg.impl`` is kept, and the reason
+    is returned (and logged by the engines).  Set ``cfg.impl`` directly to
+    opt in regardless.
+    """
+    from repro.core.quant import kernel_safe
+
+    if impl is None or impl == cfg.impl:
+        return cfg, cfg.impl, None
+    kernel_impl = impl in ("kernel", "fused_stack")
+    if kernel_impl and kernel_safe(cfg.acts) is not cfg.acts:
+        reason = (
+            f"requested impl={impl!r} would swap acts={cfg.acts.name!r} for "
+            f"its kernel-safe twin; keeping impl={cfg.impl!r} so scores stay "
+            f"consistent with thresholds calibrated on it"
+        )
+        return cfg, cfg.impl, reason
+    return replace(cfg, impl=impl), impl, None
 
 
 @dataclass
@@ -34,36 +91,296 @@ class AnomalyStreamEngine:
     #: inference backend for the jit'd score path; None keeps cfg.impl.
     #: Serving defaults to the fused wavefront stack — the whole encoder
     #: (and decoder) runs as one Pallas call, no per-layer HBM round-trips.
-    #: The upgrade is skipped when cfg.acts is not kernel-exact (e.g.
-    #: PAPER_HW's LUT sigmoid would be swapped for its PWL twin in-kernel),
-    #: so scores stay consistent with thresholds calibrated on cfg.impl;
-    #: set cfg.impl="fused_stack" directly to opt in regardless.
+    #: The upgrade is skipped when cfg.acts is not kernel-exact; the path
+    #: actually taken is exposed as ``effective_impl`` (and the fallback is
+    #: logged), so serving configs can assert what they run.
     impl: str | None = "fused_stack"
+    #: backend the engine actually runs (output-only, set in __post_init__).
+    effective_impl: str = field(init=False, default="")
+    #: non-None iff the requested impl was declined (the logged reason).
+    fallback_reason: str | None = field(init=False, default=None)
 
     def __post_init__(self):
-        from repro.core.quant import kernel_safe
+        self.cfg, self.effective_impl, self.fallback_reason = resolve_impl(
+            self.cfg, self.impl
+        )
+        if self.fallback_reason is not None:
+            logger.warning("AnomalyStreamEngine: %s", self.fallback_reason)
 
-        if self.impl is not None and self.impl != self.cfg.impl:
-            kernel_impl = self.impl in ("kernel", "fused_stack")
-            if not kernel_impl or kernel_safe(self.cfg.acts) is self.cfg.acts:
-                self.cfg = replace(self.cfg, impl=self.impl)
         self._score = jax.jit(
-            lambda p, x: reconstruction_error(p, x, self.cfg)
+            lambda p, packed_enc, packed_dec, x: reconstruction_error(
+                p, x, self.cfg, packed_enc=packed_enc, packed_dec=packed_dec
+            )
+        )
+
+    def _packs(self):
+        """Current params' packed stacks (identity-cached, built eagerly —
+        never traced into the score graph; re-packs if params were swapped)."""
+        if self.effective_impl != "fused_stack":
+            return None, None
+        from repro.kernels.lstm_stack.ops import pack_stack_cached
+
+        enc_p, enc_cfgs = encoder_layers(self.params, self.cfg)
+        dec_p, dec_cfgs = decoder_layers(self.params, self.cfg)
+        return (
+            pack_stack_cached(enc_p, enc_cfgs) if enc_cfgs else None,
+            pack_stack_cached(dec_p, dec_cfgs) if dec_cfgs else None,
         )
 
     def calibrate(self, background: np.ndarray, fpr: float = 0.01):
         """Set the anomaly threshold at a target false-positive rate
         (the paper: 'threshold ... by setting a false positive rate on
         noise events')."""
-        scores = np.asarray(self._score(self.params, jnp.asarray(background)))
-        self.threshold = float(np.quantile(scores, 1.0 - fpr))
+        self.threshold = float(np.quantile(self.score(background), 1.0 - fpr))
         return self.threshold
 
     def score(self, windows: np.ndarray) -> np.ndarray:
-        return np.asarray(self._score(self.params, jnp.asarray(windows)))
+        packed_enc, packed_dec = self._packs()
+        return np.asarray(
+            self._score(self.params, packed_enc, packed_dec,
+                        jnp.asarray(windows))
+        )
 
     def flag(self, windows: np.ndarray) -> np.ndarray:
         return self.score(windows) > self.threshold
+
+
+class StreamingAnomalyEngine:
+    """Persistent-state chunked scoring: the paper's continuous-stream mode.
+
+    Strain chunks of any length (including single samples, T=1) arrive via
+    ``push``; the encoder's per-layer ``(h, c)`` advances in place without
+    re-scoring earlier samples.  Every ``window`` accumulated samples the
+    engine emits one anomaly score — numerically equivalent to scoring that
+    window one-shot through ``AnomalyStreamEngine`` (tested to fp
+    tolerance across impls and chunkings).
+
+    Serving-path specifics (vs the one-shot engine):
+
+    * **pre-packed weights** — on the fused path the stack is packed once
+      at init (``pack_stack_cached``, keyed on params identity) and the
+      jitted chunk step consumes the packed arrays directly, so
+      ``pack_lstm_stack`` is never traced into the per-call graph;
+    * **donated state** — the chunk step donates the (h, c) buffers
+      (``donate_argnums``), and inside the kernel ``input_output_aliases``
+      maps h0->h_final / c0->c_final: steady-state pushes allocate no new
+      state;
+    * **B parallel streams** — ``batch`` independent streams advance in
+      lock-step (the paper's multi-detector case); scores come back (B,).
+
+    ``carry_state=True`` carries encoder state across window boundaries
+    (continuous monitoring with no pipeline re-fill); the default resets
+    per window, matching one-shot batch semantics bit-for-bit.
+    """
+
+    def __init__(
+        self,
+        params: dict,
+        cfg: AutoencoderConfig,
+        *,
+        batch: int = 1,
+        window: int | None = None,
+        impl: str | None = "fused_stack",
+        carry_state: bool = False,
+        donate: bool = True,
+        threshold: float = float("inf"),
+    ):
+        self.cfg, self.effective_impl, self.fallback_reason = resolve_impl(
+            cfg, impl
+        )
+        if self.fallback_reason is not None:
+            logger.warning("StreamingAnomalyEngine: %s", self.fallback_reason)
+        if self.cfg.boundary < 1:
+            raise ValueError("streaming engine needs >= 1 encoder layer")
+        self._params = params
+        self.batch = batch
+        self.window = int(window or self.cfg.timesteps)
+        self.carry_state = carry_state
+        self.threshold = threshold
+        self._donate = donate
+        self._build()
+        self.reset()
+
+    # -- engine construction -------------------------------------------------
+
+    def _build(self) -> None:
+        cfg = self.cfg
+        enc_params, enc_cfgs = encoder_layers(self.params, cfg)
+        dec_params, dec_cfgs = decoder_layers(self.params, cfg)
+        self._enc_cfgs = enc_cfgs
+        self._enc_hidden_last = enc_cfgs[-1].hidden
+        self._fused = self.effective_impl == "fused_stack"
+        donate = self._donate
+
+        if self._fused:
+            from repro.kernels.lstm_stack.ops import (
+                lstm_stack_op,
+                pack_stack_cached,
+            )
+
+            self._packed_enc = pack_stack_cached(enc_params, enc_cfgs)
+            self._packed_dec = (
+                pack_stack_cached(dec_params, dec_cfgs) if dec_cfgs else None
+            )
+
+            def enc_step(packed, chunk, h, c):
+                _, h_f, c_f = lstm_stack_op(
+                    packed.pad_input(chunk), packed.stacked, h, c,
+                    acts=packed.acts,
+                )
+                return h_f, c_f
+
+            self._enc_step = jax.jit(
+                enc_step, donate_argnums=(2, 3) if donate else ()
+            )
+        else:
+            self._packed_enc = self._packed_dec = None
+
+            def enc_step(params, chunk, state):
+                _, finals = encode(
+                    params, chunk, cfg, initial_state=state, return_state=True
+                )
+                return finals
+
+            self._enc_step = jax.jit(
+                enc_step, donate_argnums=(2,) if donate else ()
+            )
+
+        self._score_window = jax.jit(
+            lambda params, packed_dec, latent, x: reconstruction_error_from_latent(
+                params, latent, x, cfg, packed_dec=packed_dec
+            )
+        )
+        self._score_batch = jax.jit(
+            lambda params, packed_enc, packed_dec, x: reconstruction_error(
+                params, x, cfg, packed_enc=packed_enc, packed_dec=packed_dec
+            )
+        )
+
+    def _zero_state(self):
+        if self._fused:
+            return self._packed_enc.zero_state(self.batch)
+        from repro.core.lstm import zero_state
+
+        return [zero_state(self.batch, c) for c in self._enc_cfgs]
+
+    # -- state lifecycle -----------------------------------------------------
+
+    def reset(self) -> None:
+        """Zero the encoder state and drop any partially-filled window."""
+        self._state = self._zero_state()
+        self._chunks: list[np.ndarray] = []
+        self._filled = 0
+
+    @property
+    def params(self) -> dict:
+        return self._params
+
+    @params.setter
+    def params(self, params: dict) -> None:
+        # a bare ``engine.params = new`` must never leave the engine scoring
+        # with a hybrid of new dense head + stale packed LSTM stacks
+        self.update_params(params)
+
+    def update_params(self, params: dict) -> None:
+        """Swap params on a live engine: re-pack (the identity cache misses
+        on the new leaves), evict the superseded packs, reset stream state."""
+        old_packs = (self._packed_enc, self._packed_dec)
+        self._params = params
+        self._build()
+        self.reset()
+        if self._fused:
+            from repro.kernels.lstm_stack.ops import pack_cache_evict
+
+            keep = {id(self._packed_enc), id(self._packed_dec)}
+            pack_cache_evict(*(p for p in old_packs if id(p) not in keep))
+
+    @property
+    def filled(self) -> int:
+        """Samples accumulated toward the current window."""
+        return self._filled
+
+    # -- streaming -----------------------------------------------------------
+
+    def push(self, chunk: np.ndarray) -> list[np.ndarray]:
+        """Advance every stream by ``chunk``: (B, t, input_dim), any t >= 1.
+
+        Returns one (B,) score array per window completed during this push
+        (empty list while a window is still filling).  Chunks may span
+        window boundaries; they are split internally.
+        """
+        chunk = np.asarray(chunk)
+        # a wrong feature dim would be silently zero-padded by the packed
+        # kernel, so this must hold even under python -O: raise, not assert
+        if (
+            chunk.ndim != 3
+            or chunk.shape[0] != self.batch
+            or chunk.shape[2] != self.cfg.input_dim
+        ):
+            raise ValueError(
+                f"chunk must be (batch={self.batch}, t, "
+                f"{self.cfg.input_dim}), got {chunk.shape}"
+            )
+        scores: list[np.ndarray] = []
+        pos = 0
+        while pos < chunk.shape[1]:
+            take = min(chunk.shape[1] - pos, self.window - self._filled)
+            # copy, not view: the caller may reuse its chunk buffer between
+            # pushes, and this slice is held until the window completes
+            piece = np.array(chunk[:, pos : pos + take])
+            self._advance(jnp.asarray(piece))
+            self._chunks.append(piece)
+            self._filled += take
+            pos += take
+            if self._filled == self.window:
+                scores.append(self._finish_window())
+        return scores
+
+    def _advance(self, piece: jax.Array) -> None:
+        if self._fused:
+            h, c = self._state
+            self._state = self._enc_step(self._packed_enc, piece, h, c)
+        else:
+            self._state = self._enc_step(self.params, piece, self._state)
+
+    def _latent(self) -> jax.Array:
+        """Last encoder layer's current hidden — the RepeatVector input."""
+        if self._fused:
+            h, _ = self._state
+            return h[-1, :, : self._enc_hidden_last]
+        return self._state[-1][0]
+
+    def _finish_window(self) -> np.ndarray:
+        x = jnp.asarray(np.concatenate(self._chunks, axis=1))
+        scores = np.asarray(
+            self._score_window(self.params, self._packed_dec, self._latent(), x)
+        )
+        self._chunks, self._filled = [], 0
+        if not self.carry_state:
+            self._state = self._zero_state()
+        return scores
+
+    # -- batch path (calibration / offline) ----------------------------------
+
+    def score(self, windows: np.ndarray) -> np.ndarray:
+        """One-shot batch scoring on the same pre-packed weights (does not
+        touch stream state); equals chunked scoring to fp tolerance."""
+        return np.asarray(
+            self._score_batch(
+                self.params, self._packed_enc, self._packed_dec,
+                jnp.asarray(windows),
+            )
+        )
+
+    def flag(self, windows: np.ndarray) -> np.ndarray:
+        return self.score(windows) > self.threshold
+
+    def calibrate(self, background: np.ndarray, fpr: float = 0.01) -> float:
+        """FPR-targeted threshold on background windows (batch path; chunked
+        scoring yields the same threshold — regression-tested)."""
+        scores = self.score(background)
+        self.threshold = float(np.quantile(scores, 1.0 - fpr))
+        return self.threshold
 
 
 class LmEngine:

@@ -120,7 +120,7 @@ class TestHeterogeneousStack:
         xs = jax.random.normal(jax.random.fold_in(key, 99), (b, 12, 1))
         ref, _ = _sequential(params, cfgs, xs, states)
         out, _ = lstm_stack_forward(
-            params, xs, cfgs, states=states, impl="fused_stack"
+            params, xs, cfgs, initial_state=states, impl="fused_stack"
         )
         np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
 
@@ -178,6 +178,137 @@ class TestAutoencoderBoundary:
         np.testing.assert_allclose(
             eng.score(x), eng_ref.score(x), rtol=1e-5, atol=1e-5
         )
+
+
+class TestStateThreading:
+    """Persistent-state contract: (h_f, c_f) re-injection continues the
+    sequence exactly — the invariant the streaming serve path rides on."""
+
+    def test_packed_roundtrip_vs_2t_oracle(self):
+        """Run T steps, feed the finals back for T more == one 2T pass."""
+        n_layers, b, t, w = 3, 4, 8, 8
+        xw, w_x, w_h, bias, h0, c0 = _mk_packed(
+            jax.random.PRNGKey(21), n_layers, b, 2 * t, w
+        )
+        hs_2t, hf_2t, cf_2t = lstm_stack(
+            xw, w_x, w_h, bias, h0, c0, interpret=True
+        )
+        hs_a, hf_a, cf_a = lstm_stack(
+            xw[:t], w_x, w_h, bias, h0, c0, interpret=True
+        )
+        hs_b, hf_b, cf_b = lstm_stack(
+            xw[t:], w_x, w_h, bias, hf_a, cf_a, interpret=True
+        )
+        np.testing.assert_allclose(
+            jnp.concatenate([hs_a, hs_b]), hs_2t, rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(hf_b, hf_2t, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(cf_b, cf_2t, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("impl", ["naive", "split", "fused_stack"])
+    @pytest.mark.parametrize("splits", [[8, 8], [1, 15], [1, 1, 14]])
+    def test_stack_forward_chunked_vs_oracle(self, impl, splits):
+        """lstm_stack_forward initial_state threading, heterogeneous dims."""
+        dims = [(2, 12), (12, 4), (4, 8)]
+        params, cfgs = _mk_stack(jax.random.PRNGKey(22), dims)
+        t = sum(splits)
+        xs = jax.random.normal(jax.random.PRNGKey(23), (3, t, 2))
+        ref, finals_ref = lstm_stack_forward(params, xs, cfgs, impl=impl)
+        outs, state, pos = [], None, 0
+        for s in splits:
+            h, state = lstm_stack_forward(
+                params, xs[:, pos : pos + s], cfgs,
+                initial_state=state, impl=impl,
+            )
+            outs.append(h)
+            pos += s
+        np.testing.assert_allclose(
+            jnp.concatenate(outs, axis=1), ref, rtol=1e-5, atol=1e-5
+        )
+        for (hf, cf), (hr, cr) in zip(state, finals_ref):
+            np.testing.assert_allclose(hf, hr, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(cf, cr, rtol=1e-5, atol=1e-5)
+
+    def test_return_state_false_returns_sequence_only(self):
+        dims = [(3, 6), (6, 6)]
+        params, cfgs = _mk_stack(jax.random.PRNGKey(24), dims)
+        xs = jax.random.normal(jax.random.PRNGKey(25), (2, 7, 3))
+        for impl in ("split", "fused_stack"):
+            ref, _ = lstm_stack_forward(params, xs, cfgs, impl=impl)
+            only = lstm_stack_forward(params, xs, cfgs, impl=impl,
+                                      return_state=False)
+            np.testing.assert_allclose(only, ref, rtol=0, atol=0)
+
+
+class TestDonationAliasing:
+    """The serving loop donates (h0, c0) at the jit boundary and the kernel
+    aliases them onto (h_f, c_f) — state carries with no per-call copies."""
+
+    def _args(self):
+        return _mk_packed(jax.random.PRNGKey(31), 2, 4, 6, 8)
+
+    def test_alias_state_matches_unaliased(self):
+        args = self._args()
+        base = lstm_stack(*args, interpret=True, alias_state=False)
+        got = lstm_stack(*args, interpret=True, alias_state=True)
+        for b, g in zip(base, got):
+            np.testing.assert_allclose(b, g, rtol=0, atol=0)
+
+    def test_inputs_survive_eager_aliased_call(self):
+        """Aliasing must not invalidate caller-held h0/c0 outside jit."""
+        args = self._args()
+        lstm_stack(*args, interpret=True)
+        h0, c0 = args[4], args[5]
+        assert not h0.is_deleted() and not c0.is_deleted()
+        # and a second call with the same buffers still works
+        lstm_stack(*args, interpret=True)
+
+    def test_jit_donated_state_is_consumed(self):
+        """Donated state buffers are released after the step (the no-copy
+        contract the streaming engine relies on): jax marks them deleted."""
+        xw, w_x, w_h, bias, h0, c0 = self._args()
+
+        @jax.jit
+        def ref_step(xw, h, c):
+            return lstm_stack(xw, w_x, w_h, bias, h, c, interpret=True)
+
+        step = jax.jit(
+            lambda xw, h, c: lstm_stack(
+                xw, w_x, w_h, bias, h, c, interpret=True
+            ),
+            donate_argnums=(1, 2),
+        )
+        want = ref_step(xw, h0, c0)
+        h, c = jnp.array(h0), jnp.array(c0)
+        got = step(xw, h, c)
+        assert h.is_deleted() and c.is_deleted()
+        for w_, g in zip(want, got):
+            np.testing.assert_allclose(w_, g, rtol=0, atol=0)
+        # chained steady-state: outputs feed straight back in as donations
+        _, h2, c2 = got
+        got2 = step(xw, h2, c2)
+        assert h2.is_deleted() and c2.is_deleted()
+        jax.block_until_ready(got2)
+
+    def test_engine_push_donates_state(self):
+        """StreamingAnomalyEngine's per-chunk step consumes its state."""
+        from repro.core.autoencoder import AutoencoderConfig, init_autoencoder
+        from repro.serve.engine import StreamingAnomalyEngine
+
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, timesteps=16)
+        params = init_autoencoder(jax.random.PRNGKey(32), cfg)
+        eng = StreamingAnomalyEngine(params, cfg, batch=1, window=16)
+        x = np.random.RandomState(0).randn(1, 4, 1).astype("float32")
+        h_prev, c_prev = eng._state
+        eng.push(x)
+        assert h_prev.is_deleted() and c_prev.is_deleted()
+        # donation off: state survives (debugging mode)
+        eng2 = StreamingAnomalyEngine(
+            params, cfg, batch=1, window=16, donate=False
+        )
+        h_prev, _ = eng2._state
+        eng2.push(x)
+        assert not h_prev.is_deleted()
 
 
 class TestSingleLayerDegenerate:

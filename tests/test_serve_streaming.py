@@ -1,0 +1,390 @@
+"""Stateful streaming serving path: equivalence, lifecycle, cache, fallback.
+
+The contract under test: scoring a strain window in K chunks through
+``StreamingAnomalyEngine`` (persistent encoder state, pre-packed weights,
+donated buffers) is numerically equivalent to one-shot batch scoring
+through ``AnomalyStreamEngine`` — across impls, chunkings down to T=1,
+carried state, and engine resets.  Plus the serving-cache invariants: the
+pack runs once per params identity, a functional params update invalidates
+it, and the requested-vs-effective impl fallback is exposed.
+"""
+
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.autoencoder import (
+    AutoencoderConfig,
+    encode,
+    init_autoencoder,
+    reconstruction_error,
+)
+from repro.core.quant import HARD, PAPER_HW
+from repro.serve.engine import (
+    AnomalyStreamEngine,
+    StreamingAnomalyEngine,
+    resolve_impl,
+)
+
+IMPLS = ["naive", "split", "fused_stack"]
+T = 20
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, timesteps=T)
+    params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+    x = np.random.RandomState(0).randn(3, T, 1).astype("float32")
+    return params, cfg, x
+
+
+@pytest.fixture(scope="module")
+def nominal():
+    cfg = AutoencoderConfig(hidden=(12, 4, 4, 12), timesteps=T)
+    params = init_autoencoder(jax.random.PRNGKey(1), cfg)
+    x = np.random.RandomState(1).randn(2, T, 1).astype("float32")
+    return params, cfg, x
+
+
+def push_chunked(engine, x, sizes):
+    assert sum(sizes) == x.shape[1]
+    scores, pos = [], 0
+    for t in sizes:
+        scores += engine.push(x[:, pos : pos + t])
+        pos += t
+    return scores
+
+
+class TestChunkedEqualsOneShot:
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize(
+        "sizes",
+        [[T], [1, 7, 12], [5] * 4, [1] * T],
+        ids=["oneshot", "ragged", "uniform", "T1"],
+    )
+    def test_equivalence(self, small, impl, sizes):
+        params, cfg, x = small
+        ref = AnomalyStreamEngine(params, cfg, impl=impl).score(x)
+        eng = StreamingAnomalyEngine(
+            params, cfg, batch=x.shape[0], window=T, impl=impl
+        )
+        scores = push_chunked(eng, x, sizes)
+        assert len(scores) == 1
+        np.testing.assert_allclose(scores[0], ref, rtol=1e-6, atol=1e-7)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_equivalence_4layer_stack(self, nominal, impl):
+        """Both segments multi-layer: encoder (2) + decoder (2) widths vary."""
+        params, cfg, x = nominal
+        ref = AnomalyStreamEngine(params, cfg, impl=impl).score(x)
+        eng = StreamingAnomalyEngine(
+            params, cfg, batch=x.shape[0], window=T, impl=impl
+        )
+        (scores,) = push_chunked(eng, x, [3, 8, 9])
+        np.testing.assert_allclose(scores, ref, rtol=1e-6, atol=1e-7)
+
+    def test_chunk_spanning_window_boundary(self, small):
+        """One push may close a window and start the next."""
+        params, cfg, x = small
+        x2 = np.concatenate([x, x[:, ::-1]], axis=1)  # two windows back-to-back
+        ref = AnomalyStreamEngine(params, cfg).score(
+            np.concatenate([x2[:, :T], x2[:, T:]], axis=0)
+        )
+        eng = StreamingAnomalyEngine(params, cfg, batch=x.shape[0], window=T)
+        scores = push_chunked(eng, x2, [13, 14, 13])  # 40 samples, 3 pushes
+        assert len(scores) == 2
+        got = np.concatenate(scores)
+        np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-7)
+
+    def test_multiple_streams_match_b1(self, small):
+        """B parallel streams score exactly like B independent B=1 engines."""
+        params, cfg, x = small
+        engb = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        (batch_scores,) = push_chunked(engb, x, [10, 10])
+        for i in range(3):
+            eng1 = StreamingAnomalyEngine(params, cfg, batch=1, window=T)
+            (s,) = push_chunked(eng1, x[i : i + 1], [10, 10])
+            np.testing.assert_allclose(s[0], batch_scores[i], rtol=1e-6,
+                                       atol=1e-7)
+
+
+class TestStateLifecycle:
+    def test_carried_state_matches_stateful_oracle(self, small):
+        """carry_state=True: window 2 starts from window 1's encoder finals."""
+        params, cfg, x = small
+        w2 = x[:, ::-1].copy()
+        eng = StreamingAnomalyEngine(
+            params, cfg, batch=3, window=T, carry_state=True
+        )
+        (s1,) = push_chunked(eng, x, [9, 11])
+        (s2,) = push_chunked(eng, w2, [4, 16])
+        # oracle: window 1 scored cold; its encoder finals seed window 2
+        ref1 = AnomalyStreamEngine(params, cfg).score(x)
+        np.testing.assert_allclose(s1, ref1, rtol=1e-6, atol=1e-7)
+        cfgf = eng.cfg
+        _, finals = encode(
+            params, jax.numpy.asarray(x), cfgf, return_state=True
+        )
+        h_seq, _ = encode(
+            params, jax.numpy.asarray(w2), cfgf, initial_state=finals,
+            return_state=True,
+        )
+        from repro.core.autoencoder import decode
+
+        rec = decode(params, h_seq[:, -1, :], cfgf, t=T)
+        ref2 = np.mean((np.asarray(rec) - w2) ** 2, axis=(1, 2))
+        np.testing.assert_allclose(s2, ref2, rtol=1e-5, atol=1e-6)
+
+    def test_carried_state_differs_from_cold(self, small):
+        """The carried path must actually carry: scores != cold scoring."""
+        params, cfg, x = small
+        eng = StreamingAnomalyEngine(
+            params, cfg, batch=3, window=T, carry_state=True
+        )
+        eng.push(x)
+        (s2,) = eng.push(x)
+        cold = AnomalyStreamEngine(params, cfg).score(x)
+        assert np.abs(s2 - cold).max() > 0
+
+    def test_reset_drops_partial_window(self, small):
+        params, cfg, x = small
+        eng = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        assert eng.push(x[:, :7]) == [] and eng.filled == 7
+        eng.reset()
+        assert eng.filled == 0
+        (scores,) = push_chunked(eng, x, [10, 10])
+        ref = AnomalyStreamEngine(params, cfg).score(x)
+        np.testing.assert_allclose(scores, ref, rtol=1e-6, atol=1e-7)
+
+    def test_default_resets_between_windows(self, small):
+        """carry_state=False: consecutive windows score independently."""
+        params, cfg, x = small
+        eng = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        (s1,) = eng.push(x)
+        (s2,) = eng.push(x)
+        np.testing.assert_allclose(s1, s2, rtol=0, atol=0)
+
+    def test_push_shape_validation(self, small):
+        params, cfg, _ = small
+        eng = StreamingAnomalyEngine(params, cfg, batch=2, window=T)
+        with pytest.raises(ValueError):
+            eng.push(np.zeros((3, 5, 1), np.float32))
+        with pytest.raises(ValueError):  # wrong feature dim must not be
+            eng.push(np.zeros((2, 5, 3), np.float32))  # silently zero-padded
+
+    def test_caller_may_reuse_chunk_buffer(self, small):
+        """push() must copy: a caller streaming through one ring buffer
+        must not corrupt the window held for scoring."""
+        params, cfg, x = small
+        eng = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        ref = AnomalyStreamEngine(params, cfg).score(x)
+        buf = np.empty((3, 5, 1), np.float32)
+        scores = []
+        for k in range(T // 5):
+            buf[:] = x[:, 5 * k : 5 * (k + 1)]
+            scores += eng.push(buf)
+        np.testing.assert_allclose(scores[0], ref, rtol=1e-6, atol=1e-7)
+
+    def test_packed_mismatch_rejected(self, small):
+        """An explicit packed= built for different cfgs must be refused."""
+        import dataclasses
+
+        from repro.core.autoencoder import encoder_layers
+        from repro.core.lstm import lstm_stack_forward
+        from repro.kernels.lstm_stack.ops import pack_stack
+
+        params, cfg, x = small
+        plist, cfgs = encoder_layers(params, cfg)
+        packed = pack_stack(plist, cfgs)
+        bad = [dataclasses.replace(c, acts=HARD) for c in cfgs]
+        with pytest.raises(ValueError):
+            lstm_stack_forward(
+                plist, jax.numpy.asarray(x), bad, impl="fused_stack",
+                packed=packed,
+            )
+
+    def test_cache_keys_on_acts_and_dtype(self, small):
+        """Same param leaves under different activation sets must yield
+        DISTINCT packs — packed.acts drives the kernel's activations."""
+        import dataclasses
+
+        from repro.core.autoencoder import encoder_layers
+        from repro.kernels.lstm_stack.ops import pack_stack_cached
+
+        params, cfg, _ = small
+        plist, cfgs = encoder_layers(params, cfg)
+        p_exact = pack_stack_cached(plist, cfgs)
+        p_hard = pack_stack_cached(
+            plist, [dataclasses.replace(c, acts=HARD) for c in cfgs]
+        )
+        assert p_exact is not p_hard
+        assert p_exact.acts.name == "exact" and p_hard.acts.name == "hard"
+
+
+class TestCalibrationAndPackCache:
+    def _pack_count(self):
+        from repro.core import pipeline
+
+        return pipeline.PACK_TRACE_COUNT
+
+    def test_calibrate_chunked_vs_batch_invariant(self, small):
+        params, cfg, _ = small
+        bg = np.random.RandomState(7).randn(32, T, 1).astype("float32")
+        eng = StreamingAnomalyEngine(params, cfg, batch=32, window=T)
+        thr_batch = eng.calibrate(bg, fpr=0.05)
+        chunked = np.concatenate(push_chunked(eng, bg, [6, 6, 8]))
+        thr_chunked = float(np.quantile(chunked, 0.95))
+        np.testing.assert_allclose(thr_chunked, thr_batch, rtol=1e-6)
+        # and the batch engine agrees
+        ref = AnomalyStreamEngine(params, cfg)
+        np.testing.assert_allclose(
+            ref.calibrate(bg, fpr=0.05), thr_batch, rtol=1e-6
+        )
+
+    def test_calibrate_invariant_to_cache_warmth(self, small):
+        """Cold pack (first engine) and warm cache (second) must agree."""
+        params, cfg, _ = small
+        bg = np.random.RandomState(8).randn(16, T, 1).astype("float32")
+        eng_cold = StreamingAnomalyEngine(params, cfg, window=T)
+        thr_cold = eng_cold.calibrate(bg, fpr=0.1)
+        before = self._pack_count()
+        eng_warm = StreamingAnomalyEngine(params, cfg, window=T)
+        assert self._pack_count() == before, "second engine must hit the cache"
+        assert eng_warm.calibrate(bg, fpr=0.1) == thr_cold
+
+    def test_pack_traced_once_per_params_identity(self, small):
+        params, cfg, x = small
+        eng = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        before = self._pack_count()
+        for _ in range(4):
+            push_chunked(eng, x, [10, 10])
+            eng.score(x)
+        assert self._pack_count() == before, (
+            "steady-state scoring must not re-run pack_lstm_stack"
+        )
+
+    def test_params_update_invalidates_pack(self, small):
+        """Functional replace -> new leaf identity -> fresh pack, new scores."""
+        params, cfg, x = small
+        eng = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        (s_old,) = eng.push(x)
+        params2 = {
+            **params,
+            "lstm_0": {k: v * 1.5 for k, v in params["lstm_0"].items()},
+        }
+        before = self._pack_count()
+        eng.update_params(params2)
+        assert self._pack_count() > before, "new params identity must re-pack"
+        (s_new,) = eng.push(x)
+        assert np.abs(s_new - s_old).max() > 0, "stale pack served after update"
+        ref = AnomalyStreamEngine(params2, cfg).score(x)
+        np.testing.assert_allclose(s_new, ref, rtol=1e-6, atol=1e-7)
+
+    def test_batch_engine_packs_outside_the_trace(self, small):
+        """AnomalyStreamEngine's fused score path must not trace
+        pack_lstm_stack into the per-call graph either: after warmup,
+        repeated scoring triggers zero pack traces (cache hits only)."""
+        params, cfg, x = small
+        eng = AnomalyStreamEngine(params, cfg)
+        eng.score(x)  # compile + first (cached) pack
+        before = self._pack_count()
+        for _ in range(3):
+            eng.score(x)
+        assert self._pack_count() == before
+
+    def test_bare_params_assignment_repacks(self, small):
+        """engine.params = new must score the NEW model end to end, never a
+        hybrid of new dense head + stale packed stacks."""
+        params, cfg, x = small
+        eng = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        params2 = jax.tree_util.tree_map(lambda v: v * 1.3, params)
+        eng.params = params2  # property setter routes through update_params
+        (s,) = push_chunked(eng, x, [10, 10])
+        ref = AnomalyStreamEngine(params2, cfg).score(x)
+        np.testing.assert_allclose(s, ref, rtol=1e-6, atol=1e-7)
+        batch_eng = AnomalyStreamEngine(params, cfg)
+        old = batch_eng.score(x)
+        batch_eng.params = params2  # plain dataclass field, re-packed per call
+        np.testing.assert_allclose(batch_eng.score(x), ref, rtol=1e-6,
+                                   atol=1e-7)
+        assert np.abs(old - ref).max() > 0
+
+    def test_update_params_evicts_superseded_packs(self, small):
+        """The cache must not pin replaced params alive: after
+        update_params the old packs are evicted (old params re-pack)."""
+        params, cfg, _ = small
+        eng = StreamingAnomalyEngine(params, cfg, window=T)
+        params2 = {
+            **params,
+            "lstm_0": {k: v * 2 for k, v in params["lstm_0"].items()},
+        }
+        eng.update_params(params2)
+        before = self._pack_count()
+        StreamingAnomalyEngine(params, cfg, window=T)  # old params again
+        assert self._pack_count() > before, "old pack should have been evicted"
+
+    def test_cache_not_fooled_by_equal_values(self, small):
+        """A value-equal but identity-distinct params copy re-packs (the
+        cache keys on identity, never on array contents)."""
+        params, cfg, _ = small
+        from repro.core.autoencoder import encoder_layers
+        from repro.kernels.lstm_stack.ops import pack_stack_cached
+
+        plist, cfgs = encoder_layers(params, cfg)
+        p1 = pack_stack_cached(plist, cfgs)
+        copies = [{k: v + 0 for k, v in p.items()} for p in plist]
+        before = self._pack_count()
+        p2 = pack_stack_cached(copies, cfgs)
+        assert self._pack_count() > before
+        assert p1 is not p2
+        np.testing.assert_allclose(p1.stacked["w_x"], p2.stacked["w_x"])
+
+
+class TestEffectiveImpl:
+    def test_fused_request_honored_for_safe_acts(self, small):
+        params, cfg, _ = small
+        for acts in (cfg.acts, HARD):
+            c = AutoencoderConfig(hidden=(9, 9), latent_boundary=1,
+                                  timesteps=T, acts=acts)
+            eng = AnomalyStreamEngine(params, c)
+            assert eng.effective_impl == "fused_stack"
+            assert eng.cfg.impl == "fused_stack"
+            assert eng.fallback_reason is None
+
+    def test_unsafe_acts_fall_back_and_log(self, small, caplog):
+        params, _, x = small
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1,
+                                timesteps=T, acts=PAPER_HW)
+        with caplog.at_level(logging.WARNING, logger="repro.serve.engine"):
+            eng = AnomalyStreamEngine(params, cfg)
+        assert eng.effective_impl == "split" == eng.cfg.impl
+        assert eng.fallback_reason is not None
+        assert any("paper_hw" in r.message for r in caplog.records)
+        # scores actually come from the fallback path
+        np.testing.assert_allclose(
+            eng.score(x),
+            np.asarray(reconstruction_error(params, jax.numpy.asarray(x), cfg)),
+            rtol=1e-6, atol=1e-7,
+        )
+
+    def test_streaming_engine_exposes_fallback(self, small, caplog):
+        params, _, x = small
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1,
+                                timesteps=T, acts=PAPER_HW)
+        with caplog.at_level(logging.WARNING, logger="repro.serve.engine"):
+            eng = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        assert eng.effective_impl == "split"
+        assert eng.fallback_reason is not None
+        # and the fallback engine still satisfies chunked == one-shot
+        ref = AnomalyStreamEngine(params, cfg).score(x)
+        (scores,) = push_chunked(eng, x, [4, 16])
+        np.testing.assert_allclose(scores, ref, rtol=1e-6, atol=1e-7)
+
+    def test_explicit_cfg_impl_is_never_overridden(self, small):
+        params, _, _ = small
+        cfg = AutoencoderConfig(hidden=(9, 9), latent_boundary=1,
+                                timesteps=T, acts=PAPER_HW, impl="fused_stack")
+        cfg2, eff, reason = resolve_impl(cfg, "fused_stack")
+        assert eff == "fused_stack" and reason is None and cfg2 is cfg
