@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve bench-kernels bench-stream bench
+.PHONY: test test-fast test-serve test-quant bench-kernels bench-stream bench-quant bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -18,6 +18,10 @@ test-fast:
 test-serve:
 	$(PYTHON) -m pytest -x -q tests/test_serve_streaming.py
 
+# the quantized packed-weight fused stack (grid, kernel, cache, serving)
+test-quant:
+	$(PYTHON) -m pytest -x -q tests/test_quant_stack.py
+
 # kernel + pipeline + streaming-serve rows, with the machine-readable artifact
 bench-kernels:
 	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance,stream --json BENCH_kernels.json
@@ -25,6 +29,11 @@ bench-kernels:
 # fast path: just the streaming B=1 vs batch serving rows
 bench-stream:
 	$(PYTHON) -m benchmarks.run --only stream --json BENCH_stream.json
+
+# quant.* rows (packed bytes ratio, fused latency, AUC parity, serving gate)
+# merged into the shared artifact next to the kernel rows
+bench-quant:
+	$(PYTHON) -m benchmarks.run --only quant --json BENCH_kernels.json --merge
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

@@ -23,6 +23,11 @@ def main() -> None:
         help="write results as JSON {name: {us_per_call, derived}} to OUT",
     )
     ap.add_argument(
+        "--merge", action="store_true",
+        help="merge rows into an existing --json artifact instead of "
+             "overwriting it (e.g. add quant.* rows to BENCH_kernels.json)",
+    )
+    ap.add_argument(
         "--only", metavar="MODULES", default=None,
         help="comma-separated benchmark subset, e.g. "
              "--only kernels_bench,pipeline_balance",
@@ -34,6 +39,7 @@ def main() -> None:
         fig10,
         kernels_bench,
         pipeline_balance,
+        quant_bench,
         roofline_table,
         stream_latency,
         table2,
@@ -50,6 +56,7 @@ def main() -> None:
         "kernels_bench": kernels_bench.run,
         "pipeline_balance": pipeline_balance.run,
         "stream": stream_latency.run,
+        "quant": quant_bench.run,
         "roofline_table": lambda: roofline_table.run(args.rundir),
     }
     if args.only:
@@ -78,13 +85,27 @@ def main() -> None:
         print(f"{name},{us:.3f},{derived}")
 
     if args.json:
-        payload = {
+        payload = {}
+        if args.merge:
+            try:
+                with open(args.json) as fh:
+                    payload = json.load(fh)
+            except FileNotFoundError:
+                pass
+            except json.JSONDecodeError as e:
+                # a truncated artifact must not discard the rows this run
+                # just spent minutes computing — start fresh and say so
+                print(f"warning: {args.json} was unreadable ({e}); rewriting",
+                      file=sys.stderr)
+        payload.update({
             name: {"us_per_call": round(us, 3), "derived": derived}
             for name, us, derived in rows
-        }
+        })
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
-        print(f"\nwrote {len(payload)} rows to {args.json}")
+        verb = "merged" if args.merge else "wrote"
+        print(f"\n{verb} {len(rows)} rows into {args.json} "
+              f"({len(payload)} total)")
 
 
 if __name__ == "__main__":

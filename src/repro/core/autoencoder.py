@@ -42,6 +42,12 @@ class AutoencoderConfig:
     cell_dtype: Any = jnp.float32
     acts: ActivationSet = EXACT
     impl: str = "split"                 # naive | split | kernel | fused_stack
+    #: fused-stack weight storage: "fp32" | "bf16" | "int8" (None = native at
+    #: ``dtype``).  The encoder and decoder are separate packed segments, so
+    #: ``dec_weight_dtype`` may override the decoder independently (None =
+    #: same as ``weight_dtype``) — e.g. int8 encoder, fp32 decoder head.
+    weight_dtype: str | None = None
+    dec_weight_dtype: str | None = None
 
     @property
     def boundary(self) -> int:
@@ -53,6 +59,11 @@ class AutoencoderConfig:
 
     def layer_cfgs(self) -> list[LstmConfig]:
         cfgs, lx = [], self.input_dim
+        dec_wd = (
+            self.dec_weight_dtype
+            if self.dec_weight_dtype is not None
+            else self.weight_dtype
+        )
         for i, h in enumerate(self.hidden):
             # the first decoder layer consumes the repeated latent
             if i == self.boundary:
@@ -61,6 +72,7 @@ class AutoencoderConfig:
                 LstmConfig(
                     in_dim=lx, hidden=h, dtype=self.dtype,
                     cell_dtype=self.cell_dtype, acts=self.acts,
+                    weight_dtype=self.weight_dtype if i < self.boundary else dec_wd,
                 )
             )
             lx = h

@@ -42,6 +42,11 @@ class LstmConfig:
     dtype: Any = jnp.float32       # weight/activation compute dtype
     cell_dtype: Any = jnp.float32  # carry dtype for c_t (paper: 32-bit)
     acts: ActivationSet = EXACT
+    #: weight *storage* dtype for the fused packed stack: "fp32" | "bf16" |
+    #: "int8" (per-layer symmetric scales ride the pack), or None = native
+    #: storage at ``dtype``.  Only impl="fused_stack" honours non-native
+    #: storage; other impls raise rather than silently compute full-width.
+    weight_dtype: str | None = None
 
 
 def init_lstm(key: jax.Array, cfg: LstmConfig) -> Params:
@@ -167,6 +172,7 @@ def lstm_stack_forward(
     *,
     return_state: bool = True,
     packed: Any = None,
+    weight_dtype: str | None = None,
 ) -> Any:
     """Run L cascaded LSTM layers (one pipeline segment, no sync boundary).
 
@@ -185,12 +191,21 @@ def lstm_stack_forward(
     ``kernels.lstm_stack.PackedStack`` (fused path only): pass it to skip
     re-packing the weights inside a jitted serving step.
 
+    ``weight_dtype`` overrides the layer configs' weight storage for the
+    fused packed stack ("fp32" | "bf16" | "int8"); quantized storage exists
+    only on the fused path — requesting it under any other impl raises
+    instead of silently scoring with full-width weights.
+
     Returns last layer's hidden sequence (B, T, hidden[-1]); with
     ``return_state`` (default) also the per-layer (h_final, c_final) list —
     layer-by-layer semantics for every impl.
     """
     if not cfgs:  # empty segment (e.g. latent_boundary=0): identity
         return (xs, []) if return_state else xs
+    if weight_dtype is not None:
+        import dataclasses
+
+        cfgs = [dataclasses.replace(c, weight_dtype=weight_dtype) for c in cfgs]
     if impl == "fused_stack":
         from repro.kernels.lstm_stack import ops as kops
 
@@ -199,6 +214,19 @@ def lstm_stack_forward(
         )
         return (h_seq, finals) if return_state else h_seq
     assert packed is None, "packed weights only apply to impl='fused_stack'"
+    from .quant import native_weight_dtype
+
+    quantized = [
+        c.weight_dtype for c in cfgs
+        if c.weight_dtype is not None
+        and c.weight_dtype != native_weight_dtype(c.dtype)
+    ]
+    if quantized:
+        raise ValueError(
+            f"weight_dtype={quantized[0]!r} requires impl='fused_stack' "
+            f"(got impl={impl!r}): quantized packed weights only exist on "
+            "the fused wavefront path"
+        )
     h_seq, finals = xs, []
     for i, (p, cfg) in enumerate(zip(params_list, cfgs)):
         state = None if initial_state is None else initial_state[i]

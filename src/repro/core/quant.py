@@ -58,6 +58,57 @@ def quantize_tree(tree, total_bits: int = 16, frac_bits: int = 8):
     )
 
 
+# ---------------------------------------------------------------------------
+# storage quantization for packed kernel weights (int8 on a fixed_quant grid)
+# ---------------------------------------------------------------------------
+
+#: Weight storage dtypes a packed stack can carry (kernels/lstm_stack).
+WEIGHT_DTYPES = ("fp32", "bf16", "int8")
+
+
+def native_weight_dtype(compute_dtype) -> str | None:
+    """The storage name matching a compute dtype, or None if there is none.
+
+    The single source of the "is this weight_dtype native?" rule — the
+    packing layer, core forward dispatch and serve engines all classify
+    against this (three drifting copies would let e.g. an fp16 compute
+    config slip a 'bf16' request through one guard and not another).
+    """
+    return {
+        jnp.dtype(jnp.float32): "fp32",
+        jnp.dtype(jnp.bfloat16): "bf16",
+    }.get(jnp.dtype(compute_dtype))
+
+
+def int8_symmetric_quant(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantize a weight tensor to int8 on a power-of-two fixed-point grid.
+
+    The scale is snapped to ``2**-f`` with ``f = floor(log2(127 / amax))`` —
+    the largest fixed-point grid <8, f> (in ``fixed_quant`` terms) that still
+    covers the tensor's range.  Consequently the dequantized values
+    ``q * scale`` land *exactly* on the ``fixed_quant(w, 8, f)`` grid: the
+    int8 packed path and the fixed-point accuracy-study path share one
+    quantization semantics (tested bit-for-bit).
+
+    Returns ``(q int8, scale fp32 scalar)``; symmetric range [-127, 127]
+    (the -128 code is unused, like the paper's saturating ap_fixed).
+    Traceable: callers may quantize under jit (the pack path does when
+    handed tracers).
+    """
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)))
+    # guard amax == 0 (an all-zero padded layer): any scale works, use 1.0
+    safe = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny)
+    f = jnp.floor(jnp.log2(127.0 / safe))
+    scale = jnp.where(amax > 0, jnp.exp2(-f), 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Exact inverse grid mapping: int8 codes -> fp32 grid points."""
+    return q.astype(jnp.float32) * scale
+
+
 def to_dtype_tree(tree, dtype):
     return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
 

@@ -40,7 +40,11 @@ is "arbitrary" (scratch carries state between consecutive steps).
 VMEM budget (fp32, W = padded width, Bb = batch block):
     weights 2*L*W*4W*4 + bias L*4W*4 + state 2*L*Bb*W*4 + streams ~Bb*4W*4*2
 For the GW nominal model (L=2 per segment, W=128, Bb=256) that is ~1.3 MB —
-far below the ~16 MB/core budget.
+far below the ~16 MB/core budget.  The weight term — the dominant VMEM
+tenant at serving batch sizes — shrinks 2x with bf16 and 4x with int8
+storage (paper Sec. IV-A: 16-bit fixed weights, 32-bit cell): quantized
+codes stay resident, per-layer dequant scales sit in SMEM, and the cast to
+compute dtype rides the tile on its way into the MXU.
 """
 
 from __future__ import annotations
@@ -61,6 +65,7 @@ def _lstm_stack_kernel(
     wx_ref,    # (L, W, 4W)   VMEM-resident input projections (slot 0 unused)
     wh_ref,    # (L, W, 4W)   VMEM-resident recurrent weights
     b_ref,     # (L, 1, 4W)   fp32 biases (slot 0 folded into the xw stream)
+    scale_ref,  # (L, 2) fp32 SMEM per-layer [s_x, s_h] dequant scales
     h0_ref,    # (L, Bb, W)   initial hidden per layer
     c0_ref,    # (L, Bb, W)   initial cell per layer (fp32)
     hs_ref,    # out: (Bb, W) last layer's hidden, block at (t=s-L+1, b)
@@ -74,6 +79,7 @@ def _lstm_stack_kernel(
     width: int,
     sigma: Callable,
     tanh: Callable,
+    quantized: bool,
 ):
     s = pl.program_id(1)
 
@@ -81,6 +87,18 @@ def _lstm_stack_kernel(
     def _init():
         h_scr[...] = h0_ref[...]
         c_scr[...] = c0_ref[...].astype(jnp.float32)
+
+    def load_w(w_ref, layer):
+        """A layer's weight tile at the compute dtype.
+
+        Weights stay int8/bf16-resident in VMEM for the whole call — this
+        cast happens tile-by-tile on the way into the MXU (int8 -> bf16 is
+        exact: |q| <= 127 < 2^8 mantissa bits).  The dequant *scale* is
+        applied to the fp32 matmul result (see below), never to the weight
+        tile, so the stored codes are what the MXU consumes.
+        """
+        w = w_ref[layer]
+        return w if w.dtype == h_scr.dtype else w.astype(h_scr.dtype)
 
     # Reverse layer order: at step s, layer l must consume h_{l-1}[t = s-l],
     # which is what h_scr[l-1] still holds from step s-1.  Iterating l
@@ -92,17 +110,22 @@ def _lstm_stack_kernel(
             if layer == 0:
                 gx = xw_ref[...]  # streamed mvm_x (+bias), computed outside
             else:
-                gx = (
-                    jnp.dot(
-                        h_scr[layer - 1],
-                        wx_ref[layer],
-                        preferred_element_type=jnp.float32,
-                    )
-                    + b_ref[layer]
+                gx = jnp.dot(
+                    h_scr[layer - 1],
+                    load_w(wx_ref, layer),
+                    preferred_element_type=jnp.float32,
                 )
-            gates = gx + jnp.dot(
-                h_scr[layer], wh_ref[layer], preferred_element_type=jnp.float32
+                if quantized:  # scale the fp32 accumulator: (h @ q) * s_x
+                    gx = gx * scale_ref[layer, 0]
+                gx = gx + b_ref[layer]
+            hh = jnp.dot(
+                h_scr[layer],
+                load_w(wh_ref, layer),
+                preferred_element_type=jnp.float32,
             )
+            if quantized:
+                hh = hh * scale_ref[layer, 1]
+            gates = gx + hh
             i = sigma(gates[:, 0 * width : 1 * width])
             f = sigma(gates[:, 1 * width : 2 * width])
             g = tanh(gates[:, 2 * width : 3 * width])
@@ -128,6 +151,7 @@ def lstm_stack(
     h0: jax.Array,     # (L, B, W)
     c0: jax.Array,     # (L, B, W) fp32
     *,
+    scales: jax.Array | None = None,  # (L, 2) fp32 [s_x, s_h], int8 only
     block_b: int | None = None,
     sigma: Callable = jax.nn.sigmoid,
     tanh: Callable = jnp.tanh,
@@ -137,6 +161,13 @@ def lstm_stack(
     """Run the fused L-layer wavefront. Shapes pre-padded by ops.py (W a lane
     multiple, B a block multiple on device).  Returns
     (hs_last: (T, B, W), h_final: (L, B, W), c_final fp32: (L, B, W)).
+
+    Weight storage may be narrower than the compute dtype: bf16 weights are
+    cast up tile-by-tile into the MXU; int8 weights additionally require
+    ``scales`` — per-layer symmetric dequant factors, kept in SMEM and
+    applied to the fp32 matmul accumulator (``(h @ q) * s``), so the
+    VMEM-resident weight arrays stay at 1 byte/element for the whole call.
+    The cell state ``c`` is carried fp32 regardless (paper Sec. IV-A).
 
     ``alias_state`` maps ``h0 -> h_final`` and ``c0 -> c_final`` via
     ``input_output_aliases``: the kernel may write the final state in place
@@ -151,11 +182,19 @@ def lstm_stack(
     n_layers = w_h.shape[0]
     assert w_h.shape == (n_layers, width, w4), (w_h.shape, width)
     assert w_x.shape == (n_layers, width, w4), (w_x.shape, width)
+    quantized = scales is not None
+    if w_h.dtype == jnp.int8 and not quantized:
+        raise ValueError(
+            "lstm_stack: int8 weights need per-layer dequant `scales`; pack "
+            "them with pack_stack(weight_dtype='int8') instead of casting"
+        )
     if block_b is None:
         block_b = batch
     assert batch % block_b == 0, (batch, block_b)
     n_b = batch // block_b
     n_s = t_len + n_layers - 1
+    if not quantized:  # uniform operand list; ones are never read in-kernel
+        scales = jnp.ones((n_layers, 2), jnp.float32)
 
     kernel = functools.partial(
         _lstm_stack_kernel,
@@ -164,6 +203,7 @@ def lstm_stack(
         width=width,
         sigma=sigma,
         tanh=tanh,
+        quantized=quantized,
     )
     grid = (n_b, n_s)
     t_last = t_len - 1
@@ -182,6 +222,10 @@ def lstm_stack(
         pl.BlockSpec((n_layers, width, w4), lambda b, s: (0, 0, 0)),
         pl.BlockSpec((n_layers, width, w4), lambda b, s: (0, 0, 0)),
         pl.BlockSpec((n_layers, 1, w4), lambda b, s: (0, 0, 0)),
+        # dequant scales: L*2 scalars, SMEM-resident (scalar loads, no VPU lane)
+        pl.BlockSpec(
+            (n_layers, 2), lambda b, s: (0, 0), memory_space=pltpu.SMEM
+        ),
         pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),
         pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),
     ]
@@ -210,8 +254,8 @@ def lstm_stack(
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
-        # operands: (xw0, w_x, w_h, b, h0, c0); outputs: (hs, h_f, c_f)
-        input_output_aliases={4: 1, 5: 2} if alias_state else {},
+        # operands: (xw0, w_x, w_h, b, scales, h0, c0); outputs: (hs, h_f, c_f)
+        input_output_aliases={5: 1, 6: 2} if alias_state else {},
         interpret=interpret,
         name="lstm_stack_wavefront",
-    )(xw0, w_x, w_h, b.reshape(n_layers, 1, w4), h0, c0)
+    )(xw0, w_x, w_h, b.reshape(n_layers, 1, w4), scales, h0, c0)

@@ -13,7 +13,11 @@ Public entry points:
   subsequent score call feeds the same ``PackedStack`` straight to
   ``lstm_stack_op``, so ``pack_lstm_stack`` (pad + scatter + stack) is
   traced exactly once per params identity instead of riding inside every
-  jitted score call.
+  jitted score call.  Packs carry a ``weight_dtype`` axis (fp32|bf16|int8):
+  int8 packs quantize per layer onto a power-of-two ``fixed_quant`` grid
+  and store the [s_x, s_h] dequant scales alongside the codes (the kernel
+  keeps them in SMEM); the cache keys on the weight dtype, so fp32 and
+  int8 packs of the same params are distinct entries.
 * ``lstm_stack_forward_fused(params_list, xs, cfgs, initial_state)`` —
   drop-in backend for ``core.lstm.lstm_stack_forward(..., impl="fused_stack")``:
   packs a heterogeneous stack (e.g. the GW autoencoder's (32, 8, 8, 32))
@@ -34,7 +38,14 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import ActivationSet, EXACT, kernel_safe
+from repro.core.quant import (
+    WEIGHT_DTYPES,
+    ActivationSet,
+    EXACT,
+    int8_symmetric_quant,
+    kernel_safe,
+    native_weight_dtype,
+)
 from repro.kernels.lstm_scan.ops import (
     LANES,
     _on_cpu,
@@ -44,13 +55,86 @@ from repro.kernels.lstm_scan.ops import (
 
 from .lstm_stack import lstm_stack
 
+#: weight storage dtype -> the jnp dtype the packed arrays must hold
+_WEIGHT_JNP = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def resolve_weight_dtype(cfg, override: str | None = None) -> str:
+    """Canonical weight-storage dtype for a layer config.
+
+    ``cfg.weight_dtype=None`` means native storage: weights live at the
+    compute dtype (the pre-quantization behaviour).  Explicit values are
+    validated: storage wider than compute ('fp32' weights under a bf16
+    compute config) is refused — it would silently downcast every tile on
+    the way into the MXU, the worst of both worlds.
+    """
+    wd = override if override is not None else getattr(cfg, "weight_dtype", None)
+    if wd is None:
+        native = native_weight_dtype(cfg.dtype)
+        if native is None:
+            raise ValueError(
+                f"no native weight storage for compute dtype "
+                f"{jnp.dtype(cfg.dtype)}; set weight_dtype explicitly "
+                f"(one of {WEIGHT_DTYPES})"
+            )
+        return native
+    if wd not in WEIGHT_DTYPES:
+        raise ValueError(
+            f"unknown weight_dtype {wd!r}; choose from {WEIGHT_DTYPES}"
+        )
+    _check_not_wider(wd, cfg.dtype)
+    return wd
+
+
+def _check_not_wider(weight_dtype: str, compute_dtype) -> None:
+    if weight_dtype == "fp32" and jnp.dtype(compute_dtype) != jnp.dtype(
+        jnp.float32
+    ):
+        raise ValueError(
+            f"weight_dtype='fp32' disagrees with compute dtype "
+            f"{jnp.dtype(compute_dtype)}: storage must not be wider than "
+            "compute; use 'bf16' or 'int8'"
+        )
+
+
+def check_packed_weight_dtype(stacked: dict, weight_dtype: str, compute_dtype) -> None:
+    """Refuse a stacked-weights/weight_dtype disagreement up front.
+
+    Without this the mismatch surfaces as a Pallas/Mosaic shape-or-dtype
+    failure deep inside the wavefront call (or, worse, a silent wrong-scale
+    matmul when int8 codes are fed through the unscaled path).
+    """
+    if weight_dtype not in _WEIGHT_JNP:
+        raise ValueError(
+            f"unknown weight_dtype {weight_dtype!r}; choose from {WEIGHT_DTYPES}"
+        )
+    want = jnp.dtype(_WEIGHT_JNP[weight_dtype])
+    have = jnp.dtype(stacked["w_h"].dtype)
+    if have != want:
+        raise ValueError(
+            f"packed stack stores {have} weights but weight_dtype="
+            f"{weight_dtype!r} was requested; re-pack via "
+            "pack_stack(..., weight_dtype=...) instead of reusing a pack "
+            "built for a different storage dtype"
+        )
+    if weight_dtype == "int8" and "scales" not in stacked:
+        raise ValueError(
+            "int8 packed stack is missing its per-layer dequant 'scales'; "
+            "pack with pack_stack(weight_dtype='int8'), do not cast weights "
+            "to int8 by hand"
+        )
+    # re-checked at the jit boundary as defense for hand-built stacked dicts
+    # (internal callers already validated via resolve_weight_dtype)
+    _check_not_wider(weight_dtype, compute_dtype)
+
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "acts", "interpret", "alias_state")
+    jax.jit,
+    static_argnames=("block_b", "acts", "interpret", "alias_state", "weight_dtype"),
 )
 def lstm_stack_op(
     xs: jax.Array,       # (B, T, W) layer-0 input, pre-padded to the pack width
-    stacked: dict,       # {"w_x": (L, W, 4W), "w_h": (L, W, 4W), "b": (L, 4W)}
+    stacked: dict,       # {"w_x": (L, W, 4W), "w_h": (L, W, 4W), "b": (L, 4W)[, "scales": (L, 2)]}
     h0: jax.Array,       # (L, B, W)
     c0: jax.Array,       # (L, B, W)
     *,
@@ -58,12 +142,15 @@ def lstm_stack_op(
     acts: ActivationSet = EXACT,
     interpret: bool | None = None,
     alias_state: bool = True,
+    weight_dtype: str = "fp32",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (hs_last: (B, T, W), h_final: (L, B, W), c_final fp32)."""
     if interpret is None:
         interpret = _on_cpu()
     batch, t_len, width = xs.shape
     assert stacked["w_h"].shape[1] == width, (stacked["w_h"].shape, width)
+    check_packed_weight_dtype(stacked, weight_dtype, h0.dtype)
+    quantized = weight_dtype == "int8"
 
     batch_p, block_b = choose_blocking(batch, block_b, interpret=interpret)
 
@@ -73,8 +160,16 @@ def lstm_stack_op(
     c0_p = jnp.pad(c0, ((0, 0), (0, batch_p - batch), (0, 0)))
 
     # sub-layer 1 for layer 0 (paper mvm_x): ONE big MXU matmul + bias,
-    # then time-major for the sequential wavefront axis
-    xw0 = (xs_p @ stacked["w_x"][0]).astype(jnp.float32) + stacked["b"][0]
+    # then time-major for the sequential wavefront axis.  Same dequant order
+    # as the kernel's inner layers: cast codes to the compute dtype, matmul,
+    # scale the fp32 result.
+    w0 = stacked["w_x"][0]
+    if w0.dtype != xs_p.dtype:
+        w0 = w0.astype(xs_p.dtype)
+    xw0 = (xs_p @ w0).astype(jnp.float32)
+    if quantized:
+        xw0 = xw0 * stacked["scales"][0, 0]
+    xw0 = xw0 + stacked["b"][0]
     xw0 = jnp.swapaxes(xw0, 0, 1)  # (T, Bp, 4W)
 
     acts_k = kernel_safe(acts)
@@ -85,6 +180,7 @@ def lstm_stack_op(
         stacked["b"].astype(jnp.float32),
         h0_p,
         c0_p.astype(jnp.float32),
+        scales=stacked["scales"] if quantized else None,
         block_b=block_b,
         sigma=acts_k.sigma,
         tanh=acts_k.tanh,
@@ -118,6 +214,9 @@ class PackedStack:
     dtype: Any
     cell_dtype: Any
     acts: ActivationSet
+    #: weight *storage* dtype in VMEM: fp32 | bf16 | int8 (int8 packs carry
+    #: per-layer dequant scales in ``stacked["scales"]``)
+    weight_dtype: str = "fp32"
     #: strong refs to the source param leaves — keep the cache key's ids
     #: valid and let lookups verify identity (see ``pack_stack_cached``)
     src_leaves: tuple = field(default=(), compare=False)
@@ -125,6 +224,11 @@ class PackedStack:
     @property
     def n_layers(self) -> int:
         return len(self.hidden)
+
+    @property
+    def packed_bytes(self) -> int:
+        """Bytes the packed stack occupies in VMEM (weights+bias+scales)."""
+        return sum(int(a.size) * a.dtype.itemsize for a in self.stacked.values())
 
     def zero_state(self, batch: int) -> tuple[jax.Array, jax.Array]:
         """Packed-layout zero state: h (L, B, W) compute dtype, c fp32."""
@@ -178,14 +282,31 @@ def _check_homogeneous(cfgs: Sequence) -> None:
     assert all(
         c.dtype == cfg0.dtype and c.cell_dtype == cfg0.cell_dtype for c in cfgs
     ), "fused_stack requires homogeneous dtypes across the segment"
+    assert all(
+        getattr(c, "weight_dtype", None) == getattr(cfg0, "weight_dtype", None)
+        for c in cfgs
+    ), "fused_stack requires a homogeneous weight_dtype across the segment"
 
 
-def pack_stack(params_list: Sequence[dict], cfgs: Sequence) -> PackedStack:
-    """Pack a (possibly heterogeneous) stack to the kernel's common width."""
+def pack_stack(
+    params_list: Sequence[dict], cfgs: Sequence,
+    weight_dtype: str | None = None,
+) -> PackedStack:
+    """Pack a (possibly heterogeneous) stack to the kernel's common width.
+
+    ``weight_dtype`` picks the VMEM storage for ``W_x``/``W_h`` (default:
+    the cfgs' ``weight_dtype``, falling back to native storage at the
+    compute dtype).  int8 packs quantize each layer's matrices to a
+    symmetric power-of-two grid (``core.quant.int8_symmetric_quant`` — the
+    ``fixed_quant`` <8, f> grid that covers the layer's range) and carry the
+    per-layer ``[s_x, s_h]`` scales in ``stacked["scales"]``; biases and the
+    cell carry stay fp32 (paper Sec. IV-A).
+    """
     from repro.core.pipeline import pack_lstm_stack
 
     _check_homogeneous(cfgs)
     cfg0 = cfgs[0]
+    wd = resolve_weight_dtype(cfg0, override=weight_dtype)
     in_dims = tuple(c.in_dim for c in cfgs)
     hidden = tuple(c.hidden for c in cfgs)
     width_p = _pack_width(cfgs)
@@ -193,9 +314,27 @@ def pack_stack(params_list: Sequence[dict], cfgs: Sequence) -> PackedStack:
         list(params_list), list(in_dims), list(hidden),
         d_target=width_p, h_target=width_p,
     )
+    if wd == "int8":
+        # per-layer symmetric quantization over the lane-padded matrices
+        # (zero padding cannot raise a layer's amax, so padded lanes do not
+        # distort real lanes' scales)
+        q_x, s_x = jax.vmap(int8_symmetric_quant)(stacked["w_x"])
+        q_h, s_h = jax.vmap(int8_symmetric_quant)(stacked["w_h"])
+        stacked = {
+            "w_x": q_x, "w_h": q_h, "b": stacked["b"],
+            "scales": jnp.stack([s_x, s_h], axis=1).astype(jnp.float32),
+        }
+    else:
+        store = _WEIGHT_JNP[wd]
+        stacked = {
+            "w_x": stacked["w_x"].astype(store),
+            "w_h": stacked["w_h"].astype(store),
+            "b": stacked["b"],
+        }
     return PackedStack(
         stacked=stacked, width_p=width_p, in_dims=in_dims, hidden=hidden,
         dtype=cfg0.dtype, cell_dtype=cfg0.cell_dtype, acts=cfg0.acts,
+        weight_dtype=wd,
         src_leaves=tuple(
             leaf for p in params_list for leaf in jax.tree_util.tree_leaves(p)
         ),
@@ -206,7 +345,8 @@ jax.tree_util.register_pytree_node(
     PackedStack,
     lambda ps: (
         (ps.stacked,),
-        (ps.width_p, ps.in_dims, ps.hidden, ps.dtype, ps.cell_dtype, ps.acts),
+        (ps.width_p, ps.in_dims, ps.hidden, ps.dtype, ps.cell_dtype, ps.acts,
+         ps.weight_dtype),
     ),
     lambda aux, ch: PackedStack(ch[0], *aux),
 )
@@ -234,12 +374,17 @@ def pack_stack_cached(params_list: Sequence[dict], cfgs: Sequence) -> PackedStac
     if any(isinstance(leaf, jax.core.Tracer) for leaf in leaves):
         return pack_stack(params_list, cfgs)
     # geometry AND semantics in the key: the same param leaves packed under
-    # different acts/dtypes are distinct PackedStacks (packed.acts drives
-    # the kernel's activation functions)
+    # different acts/dtypes/weight storage are distinct PackedStacks
+    # (packed.acts drives the kernel's activations, packed.weight_dtype its
+    # VMEM weight layout — an fp32 and an int8 pack of the same params must
+    # never collide)
     key = (
         tuple(id(leaf) for leaf in leaves),
         tuple((c.in_dim, c.hidden) for c in cfgs),
-        tuple((c.acts.name, c.dtype, c.cell_dtype) for c in cfgs),
+        tuple(
+            (c.acts.name, c.dtype, c.cell_dtype, resolve_weight_dtype(c))
+            for c in cfgs
+        ),
         _pack_width(cfgs),
     )
     hit = _PACK_CACHE.get(key)
@@ -293,10 +438,12 @@ def lstm_stack_forward_fused(
         want = (
             tuple(c.hidden for c in cfgs), tuple(c.in_dim for c in cfgs),
             cfg0.acts.name, cfg0.dtype, cfg0.cell_dtype,
+            resolve_weight_dtype(cfg0),
         )
         have = (
             packed.hidden, packed.in_dims,
             packed.acts.name, packed.dtype, packed.cell_dtype,
+            packed.weight_dtype,
         )
         # a mismatched pack silently computes with the pack's geometry and
         # activations, so this must hold even under python -O
@@ -310,6 +457,7 @@ def lstm_stack_forward_fused(
         h0, c0 = packed.pack_state(initial_state)
 
     hs, h_f, c_f = lstm_stack_op(
-        packed.pad_input(xs), packed.stacked, h0, c0, acts=packed.acts
+        packed.pad_input(xs), packed.stacked, h0, c0, acts=packed.acts,
+        weight_dtype=packed.weight_dtype,
     )
     return hs[..., : packed.hidden[-1]], packed.unpack_state(h_f, c_f)

@@ -3,6 +3,12 @@
 Same packed shapes and gate order [i,f,g,o] as the kernel; each layer runs a
 full ``lax.scan`` over time before the next starts — the exact schedule the
 wavefront kernel reorders (but must not renumber: tests assert equality).
+
+Quantized packs are handled with the kernel's exact operation order:
+weights are cast (not dequantized) to the compute dtype for the matmul and
+the per-layer scale multiplies the fp32 *accumulator* — ``(h @ q) * s``,
+not ``h @ (q * s)``.  The two differ in rounding, so the oracle must mirror
+the kernel's choice for the equivalence tests to hold tightly.
 """
 
 from __future__ import annotations
@@ -15,21 +21,27 @@ import jax.numpy as jnp
 
 def lstm_stack_ref(
     xw0: jax.Array,   # (T, B, 4W) fp32 — layer 0 mvm_x output + bias
-    w_x: jax.Array,   # (L, W, 4W)
-    w_h: jax.Array,   # (L, W, 4W)
+    w_x: jax.Array,   # (L, W, 4W) fp32/bf16/int8 codes
+    w_h: jax.Array,   # (L, W, 4W) fp32/bf16/int8 codes
     b: jax.Array,     # (L, 4W) fp32
     h0: jax.Array,    # (L, B, W)
     c0: jax.Array,    # (L, B, W) fp32
     *,
+    scales: jax.Array | None = None,  # (L, 2) fp32 [s_x, s_h], int8 packs
     sigma: Callable = jax.nn.sigmoid,
     tanh: Callable = jnp.tanh,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     n_layers, width = w_h.shape[0], w_h.shape[1]
+    compute = h0.dtype
 
-    def layer_scan(xw, wh, h_init, c_init):
+    def matmul_w(x, w, scale):
+        out = (x @ w.astype(compute)).astype(jnp.float32)
+        return out if scales is None else out * scale
+
+    def layer_scan(xw, wh, s_h, h_init, c_init):
         def step(carry, xw_t):
             h, c = carry
-            gates = xw_t + (h @ wh).astype(jnp.float32)
+            gates = xw_t + matmul_w(h, wh, s_h)
             i = sigma(gates[:, 0 * width : 1 * width])
             f = sigma(gates[:, 1 * width : 2 * width])
             g = tanh(gates[:, 2 * width : 3 * width])
@@ -46,9 +58,12 @@ def lstm_stack_ref(
     hs, h_fs, c_fs = None, [], []
     xw = xw0
     for layer in range(n_layers):
+        s_x, s_h = (None, None) if scales is None else (
+            scales[layer, 0], scales[layer, 1]
+        )
         if layer > 0:
-            xw = (hs @ w_x[layer]).astype(jnp.float32) + b[layer]
-        hs, h_f, c_f = layer_scan(xw, w_h[layer], h0[layer], c0[layer])
+            xw = matmul_w(hs, w_x[layer], s_x) + b[layer]
+        hs, h_f, c_f = layer_scan(xw, w_h[layer], s_h, h0[layer], c0[layer])
         h_fs.append(h_f)
         c_fs.append(c_f)
     return hs, jnp.stack(h_fs), jnp.stack(c_fs)

@@ -9,7 +9,10 @@ Anomaly mode (the paper's use case — persistent-state B=1 streaming on the
 fused stack, weights pre-packed at engine init, state donated per chunk):
 
     PYTHONPATH=src python -m repro.launch.serve --mode anomaly \
-        --gw-model gw_small --windows 50 --chunk 25
+        --gw-model gw_small --windows 50 --chunk 25 --weight-dtype int8
+
+``--weight-dtype {fp32,bf16,int8}`` picks the fused stack's VMEM weight
+storage (int8: per-layer symmetric scales in SMEM, fp32 cell carry kept).
 """
 
 from __future__ import annotations
@@ -41,6 +44,11 @@ def main():
     ap.add_argument("--chunk", type=int, default=0,
                     help="chunk length per push; 0 = full windows")
     ap.add_argument("--fpr", type=float, default=0.01)
+    ap.add_argument("--weight-dtype", choices=("fp32", "bf16", "int8"),
+                    default=None,
+                    help="fused-stack weight storage (anomaly mode); int8 "
+                         "keeps per-layer dequant scales in SMEM and shrinks "
+                         "VMEM-resident weights ~4x")
     args = ap.parse_args()
 
     if args.mode == "anomaly":
@@ -69,18 +77,23 @@ def main():
 
 def serve_anomaly(args):
     """Continuous B=1 strain scoring with resident state (paper Table III)."""
+    import dataclasses
+
     from repro.configs.gw import GW_MODELS
     from repro.core.autoencoder import init_autoencoder
     from repro.data.gw import GwDataConfig, GwDataset
     from repro.serve.engine import StreamingAnomalyEngine
 
     cfg = GW_MODELS[args.gw_model]
+    if args.weight_dtype is not None:
+        cfg = dataclasses.replace(cfg, weight_dtype=args.weight_dtype)
     params = init_autoencoder(jax.random.PRNGKey(0), cfg)
     ds = GwDataset(GwDataConfig(timesteps=cfg.timesteps))
 
     engine = StreamingAnomalyEngine(params, cfg, batch=1)
+    wd = engine._packed_enc.weight_dtype if engine._packed_enc else "n/a"
     print(f"{args.gw_model}: impl={engine.effective_impl} "
-          f"(requested fused_stack), window={engine.window}")
+          f"(requested fused_stack), weights={wd}, window={engine.window}")
     thr = engine.calibrate(ds.background(256), fpr=args.fpr)
     print(f"calibrated threshold ({args.fpr:.0%} FPR): {thr:.4f}")
 

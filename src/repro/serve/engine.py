@@ -53,6 +53,17 @@ from repro.models.api import get_model
 logger = logging.getLogger(__name__)
 
 
+def quantized_weight_storage(cfg: AutoencoderConfig) -> str | None:
+    """The first non-native weight storage the config requests, if any."""
+    from repro.core.quant import native_weight_dtype
+
+    native = native_weight_dtype(cfg.dtype)
+    for wd in (cfg.weight_dtype, cfg.dec_weight_dtype):
+        if wd is not None and wd != native:
+            return wd
+    return None
+
+
 def resolve_impl(
     cfg: AutoencoderConfig, impl: str | None
 ) -> tuple[AutoencoderConfig, str, str | None]:
@@ -65,20 +76,35 @@ def resolve_impl(
     that case the request is declined, ``cfg.impl`` is kept, and the reason
     is returned (and logged by the engines).  Set ``cfg.impl`` directly to
     opt in regardless.
+
+    Quantized weight storage (``cfg.weight_dtype``/``dec_weight_dtype``)
+    exists only on the fused packed stack, so a config that requests it but
+    resolves to any other backend is an error *here*, not a late Pallas (or
+    silent full-width) failure at score time.
     """
     from repro.core.quant import kernel_safe
 
     if impl is None or impl == cfg.impl:
-        return cfg, cfg.impl, None
-    kernel_impl = impl in ("kernel", "fused_stack")
-    if kernel_impl and kernel_safe(cfg.acts) is not cfg.acts:
+        cfg, effective, reason = cfg, cfg.impl, None
+    elif impl in ("kernel", "fused_stack") and kernel_safe(cfg.acts) is not cfg.acts:
         reason = (
             f"requested impl={impl!r} would swap acts={cfg.acts.name!r} for "
             f"its kernel-safe twin; keeping impl={cfg.impl!r} so scores stay "
             f"consistent with thresholds calibrated on it"
         )
-        return cfg, cfg.impl, reason
-    return replace(cfg, impl=impl), impl, None
+        effective = cfg.impl
+    else:
+        cfg, effective, reason = replace(cfg, impl=impl), impl, None
+    wd = quantized_weight_storage(cfg)
+    if wd is not None and effective != "fused_stack":
+        raise ValueError(
+            f"weight_dtype={wd!r} requires the fused_stack backend, but the "
+            f"engine resolved impl={effective!r}"
+            + (f" ({reason})" if reason else "")
+            + "; drop the quantized weight_dtype or fix the config so the "
+            "fused path is eligible"
+        )
+    return cfg, effective, reason
 
 
 @dataclass
@@ -226,7 +252,7 @@ class StreamingAnomalyEngine:
             def enc_step(packed, chunk, h, c):
                 _, h_f, c_f = lstm_stack_op(
                     packed.pad_input(chunk), packed.stacked, h, c,
-                    acts=packed.acts,
+                    acts=packed.acts, weight_dtype=packed.weight_dtype,
                 )
                 return h_f, c_f
 

@@ -1,0 +1,350 @@
+"""Quantized packed-weight fused stack (paper Sec. IV-A on the TPU path).
+
+The pack stores W_x/W_h at fp32/bf16/int8 while the kernel computes at the
+config dtype with an fp32 cell carry.  Invariants:
+
+* int8 packs live on a power-of-two symmetric grid: dequantized codes equal
+  ``fixed_quant(w, 8, f)`` bit-for-bit, and round-trip within one step;
+* quantized fused outputs track the fp32 fused path within fixed-point
+  tolerance, and match the XLA oracle run with the *same* quantized pack
+  (same cast-then-matmul-then-scale order) tightly;
+* mismatched pack/weight_dtype combinations raise clear ValueErrors, never
+  Pallas shape/dtype failures;
+* the pack cache keys on weight_dtype (fp32 and int8 packs of the same
+  params are distinct entries) and ``update_params`` evicts both;
+* both serve engines pick quantized stacks up from the config for free,
+  streaming chunked == one-shot included.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autoencoder import (
+    AutoencoderConfig,
+    autoencoder_forward,
+    init_autoencoder,
+)
+from repro.core.lstm import LstmConfig, init_lstm, lstm_stack_forward
+from repro.core.quant import (
+    PAPER_HW,
+    fixed_quant,
+    int8_dequant,
+    int8_symmetric_quant,
+)
+from repro.kernels.lstm_stack import lstm_stack, lstm_stack_op, lstm_stack_ref
+from repro.kernels.lstm_stack.ops import (
+    _PACK_CACHE,
+    pack_stack,
+    pack_stack_cached,
+    resolve_weight_dtype,
+)
+
+GW_NOMINAL_DIMS = [(1, 32), (32, 8), (8, 8), (8, 32)]
+
+
+def _mk_stack(key, dims, **cfg_kw):
+    cfgs = [LstmConfig(in_dim=lx, hidden=lh, **cfg_kw) for lx, lh in dims]
+    keys = jax.random.split(key, len(dims))
+    return [init_lstm(k, c) for k, c in zip(keys, cfgs)], cfgs
+
+
+class TestInt8Grid:
+    def test_roundtrip_within_one_step(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 0.7
+        q, scale = int8_symmetric_quant(w)
+        assert q.dtype == jnp.int8
+        err = jnp.abs(int8_dequant(q, scale) - w)
+        assert float(jnp.max(err)) <= float(scale) / 2 + 1e-12
+
+    def test_scale_is_power_of_two_and_covers_range(self):
+        for seed, mag in [(0, 0.3), (1, 5.0), (2, 300.0)]:
+            w = jax.random.normal(jax.random.PRNGKey(seed), (32, 32)) * mag
+            q, scale = int8_symmetric_quant(w)
+            f = np.log2(float(scale))
+            assert f == round(f), "scale must be a power of two"
+            assert float(jnp.max(jnp.abs(w))) <= 127 * float(scale)
+
+    def test_zero_tensor(self):
+        q, scale = int8_symmetric_quant(jnp.zeros((8, 8)))
+        assert float(scale) == 1.0
+        assert not np.any(np.asarray(q))
+
+    def test_pack_matches_fixed_quant_grid_bitforbit(self):
+        """Dequantized int8 pack == fixed_quant(w, 8, f) on the fp32 pack:
+        the packed serving path and the fixed-point accuracy-study path
+        share one quantization semantics (CPU, exact)."""
+        params, cfgs = _mk_stack(jax.random.PRNGKey(1), GW_NOMINAL_DIMS)
+        ps32 = pack_stack(params, cfgs, weight_dtype="fp32")
+        ps8 = pack_stack(params, cfgs, weight_dtype="int8")
+        assert ps8.weight_dtype == "int8"
+        assert ps8.stacked["w_x"].dtype == jnp.int8
+        assert ps8.stacked["b"].dtype == ps32.stacked["b"].dtype  # bias fp32
+        for layer in range(len(cfgs)):
+            for mi, m in enumerate(("w_x", "w_h")):
+                scale = ps8.stacked["scales"][layer, mi]
+                frac_bits = int(-np.log2(float(scale)))
+                np.testing.assert_array_equal(
+                    np.asarray(int8_dequant(ps8.stacked[m][layer], scale)),
+                    np.asarray(
+                        fixed_quant(ps32.stacked[m][layer], 8, frac_bits)
+                    ),
+                )
+
+    def test_packed_bytes_reduction(self):
+        params, cfgs = _mk_stack(jax.random.PRNGKey(2), GW_NOMINAL_DIMS)
+        b32 = pack_stack(params, cfgs, weight_dtype="fp32").packed_bytes
+        b16 = pack_stack(params, cfgs, weight_dtype="bf16").packed_bytes
+        b8 = pack_stack(params, cfgs, weight_dtype="int8").packed_bytes
+        assert b32 / b8 >= 2.0, "int8 pack must shrink VMEM bytes >= 2x"
+        assert b32 / b16 >= 1.5
+        assert b8 < b16 < b32
+
+
+class TestQuantizedKernel:
+    """Fused quantized outputs vs the fp32 fused path and the XLA oracle."""
+
+    def _packed_args(self, seed, n_layers, b, t, w):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        w_x32 = jax.random.normal(ks[1], (n_layers, w, 4 * w)) * 0.3
+        w_h32 = jax.random.normal(ks[2], (n_layers, w, 4 * w)) * 0.3
+        return (
+            jax.random.normal(ks[0], (t, b, 4 * w)),
+            w_x32,
+            w_h32,
+            jax.random.normal(ks[3], (n_layers, 4 * w)) * 0.1,
+            jax.random.normal(ks[4], (n_layers, b, w)) * 0.5,
+            jax.random.normal(ks[5], (n_layers, b, w)) * 0.5,
+        )
+
+    @pytest.mark.parametrize("n_layers,b,t,w", [(1, 1, 1, 4), (3, 4, 10, 8)])
+    def test_int8_kernel_matches_quantized_oracle(self, n_layers, b, t, w):
+        """Same int8 codes + scales through kernel and oracle: the dequant
+        order is identical, so this is tight (not a quantization-error
+        tolerance)."""
+        xw, w_x32, w_h32, bias, h0, c0 = self._packed_args(7, n_layers, b, t, w)
+        q_x, s_x = jax.vmap(int8_symmetric_quant)(w_x32)
+        q_h, s_h = jax.vmap(int8_symmetric_quant)(w_h32)
+        scales = jnp.stack([s_x, s_h], axis=1)
+        hs_k, hf_k, cf_k = lstm_stack(
+            xw, q_x, q_h, bias, h0, c0, scales=scales, interpret=True
+        )
+        hs_r, hf_r, cf_r = lstm_stack_ref(
+            xw, q_x, q_h, bias, h0, c0, scales=scales
+        )
+        np.testing.assert_allclose(hs_k, hs_r, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(hf_k, hf_r, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(cf_k, cf_r, rtol=1e-6, atol=1e-6)
+
+    def test_int8_missing_scales_raises(self):
+        xw, w_x32, w_h32, bias, h0, c0 = self._packed_args(8, 2, 2, 4, 4)
+        q_x, _ = jax.vmap(int8_symmetric_quant)(w_x32)
+        q_h, _ = jax.vmap(int8_symmetric_quant)(w_h32)
+        with pytest.raises(ValueError, match="scales"):
+            lstm_stack(xw, q_x, q_h, bias, h0, c0, interpret=True)
+
+    @pytest.mark.parametrize("wd,tol", [("bf16", 2e-2), ("int8", 2e-2)])
+    def test_fused_quant_tracks_fp32_fused(self, wd, tol):
+        """Fixed-point tolerance vs the fp32 fused path on the GW widths."""
+        params, cfgs = _mk_stack(jax.random.PRNGKey(3), GW_NOMINAL_DIMS)
+        xs = jax.random.normal(jax.random.PRNGKey(4), (3, 24, 1))
+        ref, finals_ref = lstm_stack_forward(params, xs, cfgs, impl="fused_stack")
+        out, finals = lstm_stack_forward(
+            params, xs, cfgs, impl="fused_stack", weight_dtype=wd
+        )
+        np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+        for (hf, cf), (hr, cr) in zip(finals, finals_ref):
+            np.testing.assert_allclose(hf, hr, rtol=tol, atol=tol)
+            np.testing.assert_allclose(cf, cr, rtol=tol, atol=tol)
+
+    def test_quant_state_threading_chunked_vs_oracle(self):
+        """Persistent-state streaming contract holds on the int8 pack."""
+        params, cfgs = _mk_stack(jax.random.PRNGKey(5), [(2, 12), (12, 8)])
+        xs = jax.random.normal(jax.random.PRNGKey(6), (2, 16, 2))
+        ref, finals_ref = lstm_stack_forward(
+            params, xs, cfgs, impl="fused_stack", weight_dtype="int8"
+        )
+        outs, state = [], None
+        for sl in (slice(0, 5), slice(5, 6), slice(6, 16)):
+            h, state = lstm_stack_forward(
+                params, xs[:, sl], cfgs, initial_state=state,
+                impl="fused_stack", weight_dtype="int8",
+            )
+            outs.append(h)
+        np.testing.assert_allclose(
+            jnp.concatenate(outs, axis=1), ref, rtol=1e-5, atol=1e-5
+        )
+        for (hf, cf), (hr, cr) in zip(state, finals_ref):
+            np.testing.assert_allclose(hf, hr, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(cf, cr, rtol=1e-5, atol=1e-5)
+
+    def test_autoencoder_segment_dtypes_can_differ(self):
+        """int8 encoder + fp32 decoder: segments pack independently."""
+        cfg32 = AutoencoderConfig(
+            hidden=(9, 9), latent_boundary=1, impl="fused_stack"
+        )
+        cfg_mix = dataclasses.replace(
+            cfg32, weight_dtype="int8", dec_weight_dtype="fp32"
+        )
+        params = init_autoencoder(jax.random.PRNGKey(9), cfg32)
+        x = jax.random.normal(jax.random.PRNGKey(10), (4, 20, 1))
+        ref = autoencoder_forward(params, x, cfg32)
+        mix = autoencoder_forward(params, x, cfg_mix)
+        np.testing.assert_allclose(mix, ref, rtol=3e-2, atol=3e-2)
+        wds = [c.weight_dtype for c in cfg_mix.layer_cfgs()]
+        assert wds == ["int8", "fp32"]
+
+
+class TestMismatchErrors:
+    """Clear errors, not Pallas shape/dtype failures (regression: satellite)."""
+
+    def _packed(self, wd):
+        params, cfgs = _mk_stack(jax.random.PRNGKey(11), [(2, 6), (6, 4)])
+        return params, cfgs, pack_stack(params, cfgs, weight_dtype=wd)
+
+    def test_int8_pack_under_fp32_request_raises(self):
+        _, _, ps = self._packed("int8")
+        xs = jax.random.normal(jax.random.PRNGKey(12), (2, 5, 2))
+        h0, c0 = ps.zero_state(2)
+        with pytest.raises(ValueError, match="re-pack"):
+            lstm_stack_op(
+                ps.pad_input(xs), ps.stacked, h0, c0, weight_dtype="fp32"
+            )
+
+    def test_fp32_pack_under_int8_request_raises(self):
+        _, _, ps = self._packed("fp32")
+        xs = jax.random.normal(jax.random.PRNGKey(13), (2, 5, 2))
+        h0, c0 = ps.zero_state(2)
+        with pytest.raises(ValueError, match="weight_dtype='int8'"):
+            lstm_stack_op(
+                ps.pad_input(xs), ps.stacked, h0, c0, weight_dtype="int8"
+            )
+
+    def test_forward_fused_rejects_mismatched_pack(self):
+        params, cfgs, ps8 = self._packed("int8")
+        xs = jax.random.normal(jax.random.PRNGKey(14), (2, 5, 2))
+        # cfgs resolve to fp32 native storage, the pack is int8
+        with pytest.raises(ValueError, match="mismatches"):
+            lstm_stack_forward(
+                params, xs, cfgs, impl="fused_stack", packed=ps8
+            )
+
+    def test_non_fused_impl_rejects_quantized(self):
+        params, cfgs, _ = self._packed("fp32")
+        xs = jax.random.normal(jax.random.PRNGKey(15), (2, 5, 2))
+        for impl in ("naive", "split", "kernel"):
+            with pytest.raises(ValueError, match="fused_stack"):
+                lstm_stack_forward(
+                    params, xs, cfgs, impl=impl, weight_dtype="int8"
+                )
+
+    def test_fp32_storage_under_bf16_compute_raises(self):
+        cfg = LstmConfig(in_dim=2, hidden=4, dtype=jnp.bfloat16,
+                         weight_dtype="fp32")
+        with pytest.raises(ValueError, match="wider than compute"):
+            resolve_weight_dtype(cfg)
+
+    def test_unknown_weight_dtype_raises(self):
+        params, cfgs = _mk_stack(jax.random.PRNGKey(16), [(2, 4)])
+        with pytest.raises(ValueError, match="unknown weight_dtype"):
+            pack_stack(params, cfgs, weight_dtype="int4")
+
+
+class TestQuantPackCache:
+    def test_distinct_entries_per_weight_dtype(self):
+        params, cfgs32 = _mk_stack(jax.random.PRNGKey(17), [(2, 6), (6, 4)])
+        cfgs8 = [dataclasses.replace(c, weight_dtype="int8") for c in cfgs32]
+        p32 = pack_stack_cached(params, cfgs32)
+        p8 = pack_stack_cached(params, cfgs8)
+        assert p32 is not p8
+        assert p32.weight_dtype == "fp32" and p8.weight_dtype == "int8"
+        # hits return the same objects
+        assert pack_stack_cached(params, cfgs32) is p32
+        assert pack_stack_cached(params, cfgs8) is p8
+
+    def test_update_params_evicts_both_dtypes(self):
+        from repro.serve.engine import StreamingAnomalyEngine
+
+        cfg8 = AutoencoderConfig(
+            hidden=(9, 9), latent_boundary=1, timesteps=16,
+            weight_dtype="int8",
+        )
+        params = init_autoencoder(jax.random.PRNGKey(18), cfg8)
+        eng = StreamingAnomalyEngine(params, cfg8, batch=1, window=16)
+        assert eng._packed_enc.weight_dtype == "int8"
+        old_entries = [v for v in _PACK_CACHE.values()
+                       if v is eng._packed_enc or v is eng._packed_dec]
+        assert old_entries, "engine packs must be cache-resident"
+        params2 = init_autoencoder(jax.random.PRNGKey(19), cfg8)
+        eng.update_params(params2)
+        for stale in old_entries:
+            assert all(v is not stale for v in _PACK_CACHE.values()), (
+                "update_params must evict superseded quantized packs"
+            )
+
+    def test_int8_roundtrip_through_cache(self):
+        """Cached pack's dequantized weights stay within one grid step of
+        the source params (pack -> unpack round-trip)."""
+        params, cfgs32 = _mk_stack(jax.random.PRNGKey(20), [(3, 8), (8, 8)])
+        cfgs8 = [dataclasses.replace(c, weight_dtype="int8") for c in cfgs32]
+        ps = pack_stack_cached(params, cfgs8)
+        for layer, (p, c) in enumerate(zip(params, cfgs32)):
+            for mi, m in enumerate(("w_x", "w_h")):
+                scale = float(ps.stacked["scales"][layer, mi])
+                rows = p[m].shape[0]
+                deq = np.asarray(
+                    int8_dequant(ps.stacked[m][layer], scale)
+                ).reshape(ps.width_p, 4, ps.width_p)[:rows, :, : c.hidden]
+                src = np.asarray(p[m]).reshape(rows, 4, c.hidden)
+                assert np.max(np.abs(deq - src)) <= scale / 2 + 1e-12
+
+
+class TestQuantServing:
+    """Quantized serving for free: both engines, straight from the config."""
+
+    def _cfg_params(self, wd):
+        cfg = AutoencoderConfig(
+            hidden=(9, 9), latent_boundary=1, timesteps=20, weight_dtype=wd
+        )
+        params = init_autoencoder(jax.random.PRNGKey(21), cfg)
+        return cfg, params
+
+    @pytest.mark.parametrize("wd", ["bf16", "int8"])
+    def test_streaming_chunked_equals_oneshot(self, wd):
+        from repro.serve.engine import AnomalyStreamEngine, StreamingAnomalyEngine
+
+        cfg, params = self._cfg_params(wd)
+        oneshot = AnomalyStreamEngine(params, cfg)
+        assert oneshot.effective_impl == "fused_stack"
+        stream = StreamingAnomalyEngine(params, cfg, batch=2, window=20)
+        assert stream._packed_enc.weight_dtype == wd
+        x = np.random.RandomState(3).randn(2, 20, 1).astype("float32")
+        want = oneshot.score(x)
+        got = []
+        for pos in range(0, 20, 5):
+            got += stream.push(x[:, pos : pos + 5])
+        np.testing.assert_allclose(got[0], want, rtol=1e-5, atol=1e-6)
+
+    def test_int8_scores_near_fp32(self):
+        from repro.serve.engine import AnomalyStreamEngine
+
+        cfg8, params = self._cfg_params("int8")
+        cfg32 = dataclasses.replace(cfg8, weight_dtype=None)
+        x = np.random.RandomState(4).randn(4, 20, 1).astype("float32")
+        s8 = AnomalyStreamEngine(params, cfg8).score(x)
+        s32 = AnomalyStreamEngine(params, cfg32).score(x)
+        np.testing.assert_allclose(s8, s32, rtol=0.1, atol=1e-3)
+
+    def test_quantized_nonfused_resolution_raises(self):
+        from repro.serve.engine import AnomalyStreamEngine
+
+        cfg, params = self._cfg_params("int8")
+        # PAPER_HW acts decline the fused upgrade -> int8 cannot be served
+        cfg_hw = dataclasses.replace(cfg, acts=PAPER_HW)
+        with pytest.raises(ValueError, match="fused_stack backend"):
+            AnomalyStreamEngine(params, cfg_hw)
+        with pytest.raises(ValueError, match="fused_stack backend"):
+            AnomalyStreamEngine(params, cfg, impl="split")
