@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve test-quant bench-kernels bench-stream bench-quant bench
+.PHONY: test test-fast test-serve test-quant test-exec bench-kernels bench-stream bench-quant bench-exec bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -22,6 +22,10 @@ test-serve:
 test-quant:
 	$(PYTHON) -m pytest -x -q tests/test_quant_stack.py
 
+# the plan/bind/execute API (plans, executors, sharded fused wavefront)
+test-exec:
+	$(PYTHON) -m pytest -x -q tests/test_executor.py
+
 # kernel + pipeline + streaming-serve rows, with the machine-readable artifact
 bench-kernels:
 	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance,stream --json BENCH_kernels.json
@@ -34,6 +38,11 @@ bench-stream:
 # merged into the shared artifact next to the kernel rows
 bench-quant:
 	$(PYTHON) -m benchmarks.run --only quant --json BENCH_kernels.json --merge
+
+# exec.* rows (dispatch overhead, pack gate, sharded wavefront) merged
+# into the shared artifact next to the kernel + quant rows
+bench-exec:
+	$(PYTHON) -m benchmarks.run --only exec --json BENCH_kernels.json --merge
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

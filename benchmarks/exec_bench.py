@@ -1,0 +1,154 @@
+"""Executor API rows: dispatch overhead, steady-state pack gate, sharding.
+
+Three claims the plan/bind/execute redesign must keep true, as rows in the
+shared ``BENCH_kernels.json`` artifact (``make bench-exec`` merges them):
+
+* ``exec.bound_call_us`` vs ``exec.direct_call_us`` — a jitted call through
+  a bound ``StackExecutor`` (executor as a pytree argument) against the
+  kernel-level ``lstm_stack_forward_fused`` jitted directly: both lower to
+  the same fused kernel, so the executor indirection must cost ~nothing
+  (``exec.dispatch_ratio`` row; interpret-mode CPU noise dominates it).
+* ``exec.packs_steady`` — steady-state executor calls re-trace and re-pack
+  ZERO times (reuses ``core.pipeline.PACK_TRACE_COUNT``; hard gate like the
+  streaming benchmark's).
+* ``exec.sharded_wavefront_us`` — the ``fused_stack_sharded`` backend on a
+  2-device CPU mesh (subprocess, like tests/test_pipeline.py) alongside the
+  local fused backend, gated on bit-equality.  Interpret-mode timings are
+  correctness-grade; on real hardware the sharded win is VMEM capacity and
+  per-stage weight residency, not CPU wall clock.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core.executor import plan_stack
+from repro.core.lstm import LstmConfig, init_lstm
+from repro.kernels.lstm_stack.ops import lstm_stack_forward_fused
+
+DIMS = [(1, 32), (32, 32), (32, 32), (32, 32)]
+
+
+def _timeit(f, *a, n=20):
+    jax.block_until_ready(f(*a))  # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.executor import plan_stack
+from repro.core.lstm import LstmConfig, init_lstm
+
+dims = [(1, 32), (32, 32), (32, 32), (32, 32)]
+cfgs = [LstmConfig(in_dim=a, hidden=b) for a, b in dims]
+keys = jax.random.split(jax.random.PRNGKey(0), len(dims))
+params = [init_lstm(k, c) for k, c in zip(keys, cfgs)]
+xs = jax.random.normal(jax.random.PRNGKey(1), (8, 100, 1))
+
+local = plan_stack(cfgs, impl="fused_stack").bind(params)
+sharded = plan_stack(cfgs, impl="fused_stack", placement="sharded").bind(params)
+run_ex = jax.jit(lambda ex, x: ex(x, return_state=False))
+
+def timeit(ex, n=5):
+    jax.block_until_ready(run_ex(ex, xs))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = run_ex(ex, xs)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+us_l = timeit(local)
+us_s = timeit(sharded)
+equal = int((np.asarray(run_ex(sharded, xs)) == np.asarray(run_ex(local, xs))).all())
+print(f"SHARDED_ROW us_sharded={us_s:.1f} us_local={us_l:.1f} equal={equal}")
+"""
+
+
+def _sharded_row() -> tuple:
+    import os
+
+    from repro.launch.subproc import child_env
+
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT],
+        capture_output=True, text=True, timeout=600, env=child_env(),
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    line = next(
+        (ln for ln in r.stdout.splitlines() if ln.startswith("SHARDED_ROW")),
+        None,
+    )
+    if line is None:
+        raise RuntimeError(
+            f"sharded wavefront subprocess produced no row: {r.stderr[-2000:]}"
+        )
+    kv = dict(tok.split("=") for tok in line.split()[1:])
+    us_s, us_l, equal = float(kv["us_sharded"]), float(kv["us_local"]), int(kv["equal"])
+    print(f"fused_stack_sharded (2-dev CPU mesh, 4L W32 T100): {us_s:.0f}us "
+          f"vs local fused {us_l:.0f}us, bit-equal={'OK' if equal else 'FAIL'}")
+    if not equal:  # hard gate: the sharded backend must match local exactly
+        raise RuntimeError(
+            "fused_stack_sharded diverged from the local fused backend"
+        )
+    return ("exec.sharded_wavefront_us", us_s,
+            f"local={us_l:.0f}us|equal={equal}")
+
+
+def run() -> list[tuple]:
+    rows = []
+    print("\n== executor API: dispatch overhead + pack/trace gates ==")
+    cfgs = [LstmConfig(in_dim=a, hidden=b) for a, b in DIMS]
+    keys = jax.random.split(jax.random.PRNGKey(0), len(DIMS))
+    params = [init_lstm(k, c) for k, c in zip(keys, cfgs)]
+    xs = jax.random.normal(jax.random.PRNGKey(1), (8, 100, 1))
+
+    ex = plan_stack(cfgs, impl="fused_stack").bind(params)
+    f_exec = jax.jit(lambda e, x: e(x, return_state=False))
+    f_direct = jax.jit(
+        lambda ps, x: lstm_stack_forward_fused(ps, x, cfgs)[0]
+    )
+    us_exec = _timeit(f_exec, ex, xs)
+    us_direct = _timeit(f_direct, params, xs)
+    ratio = us_exec / us_direct
+    print(f"bound executor call : {us_exec:8.0f} us")
+    print(f"direct shim call    : {us_direct:8.0f} us  "
+          f"(executor/direct = {ratio:.3f}x)")
+    rows.append(("exec.bound_call_us", us_exec, ""))
+    rows.append(("exec.direct_call_us", us_direct, ""))
+    rows.append(("exec.dispatch_ratio", 0.0, f"ratio={ratio:.3f}"))
+
+    # steady-state: repeated bound-executor calls must re-pack zero times
+    before = pipeline.PACK_TRACE_COUNT
+    for _ in range(5):
+        jax.block_until_ready(f_exec(ex, xs))
+    packs_steady = pipeline.PACK_TRACE_COUNT - before
+    ok = packs_steady == 0
+    print(f"pack traces across 5 steady-state executor calls: {packs_steady} "
+          f"({'OK' if ok else 'REGRESSION'})")
+    rows.append(("exec.packs_steady", 0.0,
+                 f"packs_steady={packs_steady}|ok={int(ok)}"))
+    if not ok:  # hard gate, like bench.stream_b1_vs_batch
+        raise RuntimeError(
+            f"steady-state executor calls re-traced pack_lstm_stack "
+            f"{packs_steady}x — the bind-once contract regressed"
+        )
+
+    rows.append(_sharded_row())
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -20,7 +20,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.lstm import LstmConfig, init_lstm, lstm_forward, lstm_stack_forward
+from repro.core.executor import plan_stack
+from repro.core.lstm import LstmConfig, init_lstm, lstm_forward
 from repro.core.pipeline import pack_uniform, pipeline_lstm_stack, wavefront
 from repro.core.stage_balance import (
     lstm_layer_cost,
@@ -96,16 +97,15 @@ def run() -> list[tuple]:
     # Same schedule as (2) at timestep granularity (C=1): grid T + L - 1,
     # hand-off in VMEM.  Compared against the XLA-level executions above
     # and the per-layer kernel path (L pallas_calls, HBM between layers).
-    fused_j = jax.jit(
-        lambda ps, x: lstm_stack_forward(ps, x, cfgs, impl="fused_stack")[0]
-    )
-    perlayer_j = jax.jit(
-        lambda ps, x: lstm_stack_forward(ps, x, cfgs, impl="kernel")[0]
-    )
-    jax.block_until_ready(fused_j(params, xs))
-    jax.block_until_ready(perlayer_j(params, xs))
-    t_fused = timeit(fused_j, params, xs, n=5)
-    t_pl = timeit(perlayer_j, params, xs, n=5)
+    fused_ex = plan_stack(cfgs, impl="fused_stack").bind(params)
+    perlayer_ex = plan_stack(cfgs, impl="kernel").bind(params)
+    # ONE jitted entry point serves both backends: the plan is static aux
+    # data of the executor pytree, so each plan keys its own trace
+    run_ex = jax.jit(lambda ex, x: ex(x, return_state=False))
+    jax.block_until_ready(run_ex(fused_ex, xs))
+    jax.block_until_ready(run_ex(perlayer_ex, xs))
+    t_fused = timeit(run_ex, fused_ex, xs, n=5)
+    t_pl = timeit(run_ex, perlayer_ex, xs, n=5)
     print(f"fused-stack kernel (4L, B8, T400): {t_fused:.0f}us vs "
           f"per-layer kernel {t_pl:.0f}us "
           f"(grid {400 + 4 - 1} vs 4x{400} steps; interpret-mode timings "

@@ -35,6 +35,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        exec_bench,
         fig8,
         fig10,
         kernels_bench,
@@ -57,6 +58,7 @@ def main() -> None:
         "pipeline_balance": pipeline_balance.run,
         "stream": stream_latency.run,
         "quant": quant_bench.run,
+        "exec": exec_bench.run,
         "roofline_table": lambda: roofline_table.run(args.rundir),
     }
     if args.only:

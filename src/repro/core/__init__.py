@@ -4,6 +4,8 @@ Layers:
   ii_model / balance   — the paper's analytic model & DSE solver (Eqs. 1-7)
   stage_balance        — the same min-max optimization with TPU roofline costs
   lstm / autoencoder   — split-sublayer LSTM + the GW anomaly-detection model
+  backends / executor  — plan/bind/execute API: one backend table, one
+                         call-time surface for every LSTM execution path
   pipeline             — coarse-grained time-wavefront pipeline (shard_map)
   quant                — bf16/fixed quantization + LUT/PWL activations
 """
@@ -21,6 +23,8 @@ from .ii_model import (  # noqa: F401
 )
 from .balance import solve_min_ii, pareto_frontier, table2_designs  # noqa: F401
 from .lstm import LstmConfig, init_lstm, lstm_forward, zero_state  # noqa: F401
+from .executor import StackExecutor, StackPlan, plan_stack  # noqa: F401
+from .backends import available_backends, resolve_impl  # noqa: F401
 from .autoencoder import (  # noqa: F401
     AutoencoderConfig,
     GW_NOMINAL_CONFIG,

@@ -26,7 +26,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from .lstm import LstmConfig, init_lstm, lstm_stack_forward
+from .lstm import LstmConfig, init_lstm
 from .quant import EXACT, ActivationSet
 
 Params = dict[str, Any]
@@ -116,30 +116,68 @@ def decoder_layers(params: Params, cfg: AutoencoderConfig):
     )
 
 
+def _segment_executor(
+    params: Params, cfg: AutoencoderConfig, segment: str,
+    *, placement: str = "local", mesh: Any = None, impl: str | None = None,
+):
+    """Plan + bind ONE segment ("enc" | "dec") — encode/decode build only
+    the executor they run, so a one-shot forward never packs the other
+    segment's weights into its trace."""
+    from .executor import plan_stack
+
+    plist, cfgs = (
+        encoder_layers(params, cfg) if segment == "enc"
+        else decoder_layers(params, cfg)
+    )
+    impl = cfg.impl if impl is None else impl
+    return plan_stack(
+        cfgs, impl=impl, placement=placement, mesh=mesh
+    ).bind(plist)
+
+
+def segment_executors(
+    params: Params, cfg: AutoencoderConfig,
+    *, placement: str = "local", mesh: Any = None, impl: str | None = None,
+):
+    """(encoder, decoder) ``StackExecutor``s for an autoencoder config.
+
+    The one place the autoencoder turns configs into execution: both
+    segments get their own plan (they pack independently — the sync
+    boundary between them is the ``ii_model.Segment`` semantics) and are
+    bound once per params identity.  Serving engines call this at init and
+    pass the executors through their jitted steps; one-shot callers get the
+    same executors implicitly via ``encode``/``decode``.
+    """
+    kw = dict(placement=placement, mesh=mesh, impl=impl)
+    return (
+        _segment_executor(params, cfg, "enc", **kw),
+        _segment_executor(params, cfg, "dec", **kw),
+    )
+
+
 def encode(
     params: Params, x: jax.Array, cfg: AutoencoderConfig,
     initial_state: SegmentState | None = None,
-    *, return_state: bool = False, packed: Any = None,
+    *, return_state: bool = False, executor: Any = None,
 ) -> Any:
     """Run the encoder segment. x: (B, T, input_dim) -> (B, T, h_enc_last).
 
     ``initial_state``/``return_state`` thread the per-layer (h, c) finals
     so a streaming caller can push a window chunk-by-chunk: the encoder is
     causal, so K chunked calls that carry state equal one full-window call.
-    ``packed`` short-circuits weight packing on the fused path (serve).
+    ``executor`` is an optional pre-bound ``StackExecutor`` (the serve path
+    binds once at engine init); default: plan from ``cfg.impl`` per call.
     """
-    plist, cfgs = encoder_layers(params, cfg)
-    return lstm_stack_forward(
-        plist, x, cfgs, initial_state, impl=cfg.impl,
-        return_state=return_state, packed=packed,
-    )
+    if executor is None:
+        executor = _segment_executor(params, cfg, "enc")
+    return executor(x, initial_state, return_state=return_state)
 
 
 def decode(
     params: Params, latent: jax.Array, cfg: AutoencoderConfig,
     t: int | None = None,
     initial_state: SegmentState | None = None,
-    *, return_state: bool = False, packed: Any = None,
+    *, return_state: bool = False, executor: Any = None,
 ) -> Any:
     """Decoder segment + dense head. latent: (B, h_latent) -> (B, T, input_dim).
 
@@ -148,14 +186,12 @@ def decode(
     calls this once per completed window.
     """
     t = cfg.timesteps if t is None else t
-    plist, cfgs = decoder_layers(params, cfg)
+    if executor is None:
+        executor = _segment_executor(params, cfg, "dec")
     h_seq = jnp.broadcast_to(
         latent[:, None, :], (latent.shape[0], t, latent.shape[1])
     )
-    out = lstm_stack_forward(
-        plist, h_seq, cfgs, initial_state, impl=cfg.impl,
-        return_state=return_state, packed=packed,
-    )
+    out = executor(h_seq, initial_state, return_state=return_state)
     h_seq, finals = out if return_state else (out, None)
     # ---- TimeDistributed dense head ----------------------------------------
     rec = h_seq.astype(cfg.dtype) @ params["dense"]["w"] + params["dense"]["b"]
@@ -164,33 +200,33 @@ def decode(
 
 def autoencoder_forward(
     params: Params, x: jax.Array, cfg: AutoencoderConfig,
-    *, packed_enc: Any = None, packed_dec: Any = None,
+    *, exec_enc: Any = None, exec_dec: Any = None,
 ) -> jax.Array:
     """Reconstruct x. x: (B, T, input_dim) -> (B, T, input_dim).
 
-    ``packed_enc``/``packed_dec`` are optional pre-built ``PackedStack``s
-    for the fused segments (the serve path packs once at engine init).
+    ``exec_enc``/``exec_dec`` are optional pre-bound ``StackExecutor``s for
+    the two segments (the serve path binds once at engine init).
     """
     # The encoder->decoder bottleneck is the ii_model.Segment sync boundary:
     # only the final latent crosses, so each segment runs (and, under
     # impl="fused_stack", wavefront-fuses) independently.
-    h_seq = encode(params, x, cfg, packed=packed_enc)
+    h_seq = encode(params, x, cfg, executor=exec_enc)
     # bottleneck: only the last hidden vector crosses (RepeatVector)
     latent = h_seq[:, -1, :]
-    rec = decode(params, latent, cfg, t=x.shape[1], packed=packed_dec)
+    rec = decode(params, latent, cfg, t=x.shape[1], executor=exec_dec)
     return rec.astype(x.dtype)
 
 
 def reconstruction_error_from_latent(
     params: Params, latent: jax.Array, x: jax.Array, cfg: AutoencoderConfig,
-    *, packed_dec: Any = None,
+    *, exec_dec: Any = None,
 ) -> jax.Array:
     """Anomaly score given an already-computed latent: decode + fp32 MSE
     against x.  The single definition of the score tail — one-shot scoring
     and the streaming engine (whose latent comes from resident encoder
     state) must agree bit-for-bit, so both route through here. (B,)"""
     rec = decode(
-        params, latent, cfg, t=x.shape[1], packed=packed_dec
+        params, latent, cfg, t=x.shape[1], executor=exec_dec
     ).astype(x.dtype)
     err = (rec.astype(jnp.float32) - x.astype(jnp.float32)) ** 2
     return jnp.mean(err, axis=(1, 2))
@@ -198,12 +234,12 @@ def reconstruction_error_from_latent(
 
 def reconstruction_error(
     params: Params, x: jax.Array, cfg: AutoencoderConfig,
-    *, packed_enc: Any = None, packed_dec: Any = None,
+    *, exec_enc: Any = None, exec_dec: Any = None,
 ) -> jax.Array:
     """Per-example anomaly score: mean squared reconstruction error. (B,)"""
-    h_seq = encode(params, x, cfg, packed=packed_enc)
+    h_seq = encode(params, x, cfg, executor=exec_enc)
     return reconstruction_error_from_latent(
-        params, h_seq[:, -1, :], x, cfg, packed_dec=packed_dec
+        params, h_seq[:, -1, :], x, cfg, exec_dec=exec_dec
     )
 
 

@@ -1,0 +1,473 @@
+"""Plan / bind / execute: the one call surface for every LSTM backend.
+
+The paper's deployment model makes every decision at *compile* time — reuse
+factors, precision, placement are fixed once, then a fixed low-latency
+engine streams data (hls4ml's RNN flow has the same shape: configure,
+synthesize, stream).  This module is that lifecycle for the TPU
+reproduction:
+
+    plan = plan_stack(cfgs, impl="fused_stack", weight_dtype="int8",
+                      placement="local")        # resolve ONCE (cached)
+    ex = plan.bind(params_list)                 # pack weights exactly once
+    h_seq, finals = ex(xs)                      # the only call-time surface
+    state = ex.zero_state(batch)                # streaming serving loop:
+    state = ex.step(chunk, state)               #   native-layout hot path
+
+``plan_stack`` resolves backend legality (the rules live in
+``core.backends``), weight-storage dtype, packing strategy and placement
+exactly once and caches the plan — call-time code never re-checks
+impl-dependent kwargs, never ``dataclasses.replace``s configs, and never
+re-packs weights.  ``StackExecutor`` is a registered pytree (params/packed
+are leaves, the plan is static aux data), so serving engines pass bound
+executors straight through ``jax.jit`` boundaries and a params swap is a
+re-``bind`` — the jitted step re-traces zero times.
+
+Backends (see ``core.backends.BACKENDS``):
+
+    naive / split / kernel   layer-by-layer (XLA scans / per-layer Pallas)
+    fused_stack              whole segment in ONE Pallas wavefront call
+    fused_stack_sharded      stages on mesh devices, each stage's body the
+                             fused Pallas kernel, ppermute carrying only
+                             segment-boundary hidden chunks
+    wavefront                XLA-level single-host pipeline (vmap + roll)
+
+``core.lstm.lstm_stack_forward`` survives as a deprecated shim that builds
+a (cached) plan per call, so pre-executor call sites keep working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .backends import (
+    BackendSpec,
+    IDENTITY,
+    check_weight_storage,
+    get_backend,
+    register_backend,
+    requested_weight_storage,
+)
+from .lstm import LstmConfig, lstm_forward, zero_state as layer_zero_state
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# StackPlan — everything resolved, nothing bound
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StackPlan:
+    """A fully-resolved execution plan for one LSTM segment.
+
+    Immutable and hashable: it rides as the static aux data of the
+    ``StackExecutor`` pytree, so two executors with equal plans share jit
+    traces.  ``cfgs`` already carry the resolved ``weight_dtype`` — the
+    per-call ``dataclasses.replace`` the old dispatch did is paid once,
+    here, at plan time.
+    """
+
+    cfgs: tuple[LstmConfig, ...]
+    impl: str
+    #: resolved weight *storage* ("fp32"|"bf16"|"int8") for packed
+    #: backends; None for layer-by-layer backends (native storage)
+    weight_dtype: str | None = None
+    placement: str = "local"
+    #: jax Mesh with a "stage" axis (sharded placement only)
+    mesh: Any = None
+    #: time chunks per wavefront tick (sharded/wavefront; None = auto)
+    n_chunks: int | None = None
+
+    @property
+    def backend(self) -> BackendSpec:
+        return get_backend(self.impl)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.cfgs)
+
+    @property
+    def hidden(self) -> tuple[int, ...]:
+        return tuple(c.hidden for c in self.cfgs)
+
+    def bind(self, params_list: Sequence[Params], *,
+             packed: Any = None) -> "StackExecutor":
+        """Bind parameters: pack weights exactly once, return the executor.
+
+        Packing goes through ``pack_stack_cached`` (identity-keyed), so
+        binding the same param leaves twice reuses the same ``PackedStack``
+        and binding under a jit trace packs in-trace without touching the
+        cache.  An explicitly supplied ``packed`` is validated against the
+        plan's configs here, at bind time — never deep inside a Pallas call.
+        """
+        spec = self.backend
+        params = tuple(params_list)
+        if packed is not None and not spec.packs:
+            raise ValueError(
+                f"packed weights only apply to packing backends "
+                f"(impl={self.impl!r})"
+            )
+        if spec.packs and self.cfgs:
+            from repro.kernels.lstm_stack.ops import (
+                check_packed_matches_cfgs,
+                pack_stack_cached,
+            )
+
+            if packed is None:
+                packed = pack_stack_cached(list(params), list(self.cfgs))
+            else:
+                check_packed_matches_cfgs(packed, self.cfgs)
+        return StackExecutor(self, params, packed)
+
+    def describe(self) -> str:
+        """One-line human summary (the launch --plan-only smoke prints it)."""
+        dims = "->".join(str(c.hidden) for c in self.cfgs) or "(identity)"
+        return (
+            f"impl={self.impl} placement={self.placement} "
+            f"layers={self.n_layers} [{dims}] "
+            f"weight_dtype={self.weight_dtype or 'native'}"
+        )
+
+
+def _default_stage_mesh(n_layers: int):
+    """Largest device count that divides the stack into whole sub-stacks."""
+    n = max(1, min(len(jax.devices()), n_layers))
+    while n > 1 and n_layers % n:
+        n -= 1
+    return jax.make_mesh((n,), ("stage",))
+
+
+@functools.lru_cache(maxsize=128)
+def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
+                       weight_dtype: str | None, placement: str,
+                       mesh, n_chunks: int | None) -> StackPlan:
+    get_backend(impl)  # raises for unknown impl, even on empty segments
+    if placement not in ("local", "sharded"):
+        raise ValueError(
+            f"unknown placement {placement!r}; choose 'local' or 'sharded'"
+        )
+    if not cfgs:  # empty segment (e.g. latent_boundary=0): identity plan
+        return StackPlan(cfgs=(), impl=IDENTITY)
+
+    # -- placement normalization -------------------------------------------
+    if impl == "fused_stack_sharded":
+        placement = "sharded"
+    if placement == "sharded":
+        if impl in ("fused_stack", "fused_stack_sharded"):
+            impl = "fused_stack_sharded"
+        else:
+            raise ValueError(
+                f"placement='sharded' requires the fused_stack backend "
+                f"(got impl={impl!r}); only fused sub-stacks can place "
+                "pipeline stages on mesh devices"
+            )
+    elif mesh is not None:
+        # an explicit stage mesh under local placement would be silently
+        # ignored — that can only be a forgotten placement='sharded'
+        raise ValueError(
+            "a stage mesh was supplied but placement='local'; pass "
+            "placement='sharded' to place sub-stacks on mesh devices"
+        )
+    spec = get_backend(impl)
+
+    # -- weight-storage resolution (ONCE, not per traced call) -------------
+    if weight_dtype is not None:
+        cfgs = tuple(
+            c if c.weight_dtype == weight_dtype
+            else dataclasses.replace(c, weight_dtype=weight_dtype)
+            for c in cfgs
+        )
+    # quantized storage is only legal on backends that apply the scales
+    # (no-op when the backend is quantized-capable — the table decides)
+    check_weight_storage(requested_weight_storage(cfgs), impl)
+    if spec.packs:
+        from repro.kernels.lstm_stack.ops import (
+            _check_homogeneous,
+            resolve_weight_dtype,
+        )
+
+        _check_homogeneous(cfgs)
+        resolved_wd = resolve_weight_dtype(cfgs[0])
+    else:
+        resolved_wd = None
+
+    # -- placement resolution ----------------------------------------------
+    if placement == "sharded":
+        if mesh is None:
+            mesh = _default_stage_mesh(len(cfgs))
+        n_stages = mesh.shape["stage"]
+        if len(cfgs) % n_stages:
+            raise ValueError(
+                f"sharded placement needs the {len(cfgs)}-layer stack to "
+                f"split into whole sub-stacks across {n_stages} stage "
+                "devices; pass a mesh whose 'stage' axis divides the layer "
+                "count"
+            )
+    else:
+        mesh = None
+
+    return StackPlan(
+        cfgs=cfgs, impl=impl, weight_dtype=resolved_wd,
+        placement=placement, mesh=mesh, n_chunks=n_chunks,
+    )
+
+
+def plan_stack(cfgs: Sequence[LstmConfig], impl: str = "split", *,
+               weight_dtype: str | None = None, placement: str = "local",
+               mesh=None, n_chunks: int | None = None) -> StackPlan:
+    """Resolve an execution plan for a stacked LSTM segment — exactly once.
+
+    All impl-dependent legality lives here (plan time), not at call time:
+    unknown backends, quantized storage on a non-fused backend, storage
+    wider than compute, heterogeneous fused segments, and non-divisible
+    sharded stage splits all raise *now*.  Plans are cached on their full
+    argument tuple, so hot paths (including the deprecated
+    ``lstm_stack_forward`` shim) re-resolve nothing.
+    """
+    return _plan_stack_cached(
+        tuple(cfgs), impl, weight_dtype, placement, mesh, n_chunks
+    )
+
+
+# ---------------------------------------------------------------------------
+# StackExecutor — bound and ready to run
+# ---------------------------------------------------------------------------
+
+class StackExecutor:
+    """A plan bound to parameters: the only call-time surface.
+
+    Registered as a pytree — ``params``/``packed`` are leaves, the plan is
+    static — so engines pass executors through ``jax.jit`` boundaries and
+    donate state without re-tracing.  Construct via ``StackPlan.bind``.
+    """
+
+    __slots__ = ("plan", "params", "packed")
+
+    def __init__(self, plan: StackPlan, params: tuple,
+                 packed: Any = None) -> None:
+        self.plan = plan
+        self.params = params
+        self.packed = packed
+
+    # -- full-sequence execution -------------------------------------------
+
+    def __call__(self, xs: jax.Array, initial_state=None, *,
+                 return_state: bool = True):
+        """Run the segment. xs: (B, T, in_dim) -> (B, T, hidden[-1]).
+
+        ``initial_state``/finals are the portable per-layer
+        ``[(h, c), ...]`` at real widths — identical across backends, so
+        feeding one backend's finals as another's initial state is exact.
+        """
+        h_seq, finals = self.plan.backend.forward(self, xs, initial_state)
+        if not return_state:
+            return h_seq
+        if finals is None:
+            raise ValueError(
+                f"impl={self.plan.impl!r} does not thread per-layer state; "
+                "call with return_state=False (and no initial_state)"
+            )
+        return h_seq, finals
+
+    # -- streaming-serving hot path (backend-native state layout) ----------
+
+    def _require_stateful(self) -> None:
+        if not self.plan.backend.stateful:
+            raise ValueError(
+                f"impl={self.plan.impl!r} does not thread per-layer state; "
+                "the streaming surfaces (zero_state/step/last_hidden) need "
+                "a stateful backend such as 'fused_stack'"
+            )
+
+    def zero_state(self, batch: int):
+        """Backend-native zero state in the registered ``state_layout``
+        ("packed": the bound stack's (L, B, W) pair; "layers": per-layer
+        [(h, c), ...] at real widths) — the layout ``step`` carries,
+        donation-friendly."""
+        self._require_stateful()
+        plan = self.plan
+        if plan.impl == IDENTITY:
+            return []
+        if plan.backend.state_layout == "packed":
+            return self.packed.zero_state(batch)
+        return [layer_zero_state(batch, c) for c in plan.cfgs]
+
+    def step(self, xs: jax.Array, state):
+        """Advance native state by one chunk; returns only the new state
+        (the streaming engines' per-push call — no hidden sequence
+        materialized for the caller).  Dispatches on the backend's
+        registered ``step`` hook; backends without one run their
+        ``forward`` with portable state."""
+        self._require_stateful()
+        plan = self.plan
+        if plan.impl == IDENTITY:
+            return state
+        spec = plan.backend
+        if spec.step is not None:
+            return spec.step(self, xs, state)
+        _, finals = spec.forward(self, xs, state)
+        return finals
+
+    def last_hidden(self, state) -> jax.Array:
+        """Last layer's current hidden at real width — the latent the GW
+        autoencoder's RepeatVector bridge consumes."""
+        self._require_stateful()
+        plan = self.plan
+        if plan.impl == IDENTITY:
+            raise ValueError("identity executor has no hidden state")
+        if plan.backend.state_layout == "packed":
+            h, _ = state
+            return h[-1, :, : plan.hidden[-1]]
+        return state[-1][0]
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def update_params(self, params_list: Sequence[Params]) -> "StackExecutor":
+        """Re-bind on new parameters and evict this executor's superseded
+        pack from the identity cache (long-lived servers must not leak
+        strong refs to dead param leaves)."""
+        new = self.plan.bind(params_list)
+        if self.packed is not None and new.packed is not self.packed:
+            from repro.kernels.lstm_stack.ops import pack_cache_evict
+
+            pack_cache_evict(self.packed)
+        return new
+
+    @property
+    def packed_bytes(self) -> int:
+        """Bytes the bound pack occupies (0 for non-packing backends)."""
+        return self.packed.packed_bytes if self.packed is not None else 0
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"StackExecutor({self.plan.describe()})"
+
+
+jax.tree_util.register_pytree_node(
+    StackExecutor,
+    lambda ex: ((ex.params, ex.packed), ex.plan),
+    lambda plan, ch: StackExecutor(plan, ch[0], ch[1]),
+)
+
+
+# ---------------------------------------------------------------------------
+# backend forward implementations
+# ---------------------------------------------------------------------------
+
+def _forward_identity(ex: StackExecutor, xs, state):
+    return xs, (state if state is not None else [])
+
+
+def _forward_layerwise(ex: StackExecutor, xs, state):
+    h_seq, finals = xs, []
+    for i, (p, cfg) in enumerate(zip(ex.params, ex.plan.cfgs)):
+        s = None if state is None else state[i]
+        h_seq, final = lstm_forward(p, h_seq, cfg, s, impl=ex.plan.impl)
+        finals.append(final)
+    return h_seq, finals
+
+
+def _forward_fused(ex: StackExecutor, xs, state):
+    from repro.kernels.lstm_stack.ops import lstm_stack_forward_fused
+
+    # bind() already validated the pack against the plan's cfgs; the helper
+    # is the single fused dispatch shared with the deprecated shim
+    return lstm_stack_forward_fused(
+        list(ex.params), xs, list(ex.plan.cfgs), state, packed=ex.packed
+    )
+
+
+def _resolve_n_chunks(plan: StackPlan, t_len: int) -> int:
+    n_stages = plan.mesh.shape["stage"]
+    if plan.n_chunks is not None:
+        if t_len % plan.n_chunks:
+            raise ValueError(
+                f"n_chunks={plan.n_chunks} does not divide T={t_len}"
+            )
+        return plan.n_chunks
+    # auto: one chunk per stage keeps the wavefront balanced; fall back to
+    # a single chunk (coarse hand-off) when T does not split evenly
+    return n_stages if t_len % n_stages == 0 else 1
+
+
+def _sharded_call(ex: StackExecutor, xs, h0, c0):
+    from repro.core.pipeline import wavefront_shard_map_fused
+
+    packed = ex.packed
+    return wavefront_shard_map_fused(
+        packed, packed.pad_input(xs), h0, c0,
+        n_chunks=_resolve_n_chunks(ex.plan, xs.shape[1]),
+        mesh=ex.plan.mesh,
+    )
+
+
+def _forward_sharded(ex: StackExecutor, xs, state):
+    packed = ex.packed
+    if state is None:
+        h0, c0 = packed.zero_state(xs.shape[0])
+    else:
+        h0, c0 = packed.pack_state(state)
+    hs, h_f, c_f = _sharded_call(ex, xs, h0, c0)
+    return hs[..., : packed.hidden[-1]], packed.unpack_state(h_f, c_f)
+
+
+def _step_fused(ex: StackExecutor, xs, state):
+    from repro.kernels.lstm_stack.ops import lstm_stack_op
+
+    h, c = state
+    _, h_f, c_f = lstm_stack_op(
+        ex.packed.pad_input(xs), ex.packed.stacked, h, c,
+        acts=ex.packed.acts, weight_dtype=ex.packed.weight_dtype,
+    )
+    return h_f, c_f
+
+
+def _step_sharded(ex: StackExecutor, xs, state):
+    h, c = state
+    _, h_f, c_f = _sharded_call(ex, xs, h, c)
+    return h_f, c_f
+
+
+def _forward_wavefront(ex: StackExecutor, xs, state):
+    from repro.core.pipeline import pack_uniform, wavefront
+
+    if state is not None:
+        raise ValueError(
+            "impl='wavefront' does not thread state; use 'fused_stack' (or "
+            "a layer-by-layer backend) for the streaming path"
+        )
+    cfgs = ex.plan.cfgs
+    # exact max-width pack (NOT the Pallas lane-rounded PackedStack: the
+    # XLA-level wavefront gains nothing from 128-lane padding and would pay
+    # its FLOPs — W=128 vs W=32 is ~16x on the nominal GW stack)
+    stacked, width = pack_uniform(
+        list(ex.params), [c.in_dim for c in cfgs], [c.hidden for c in cfgs]
+    )
+    xs_p = jnp.pad(xs, ((0, 0), (0, 0), (0, width - xs.shape[-1])))
+    n_chunks = ex.plan.n_chunks if ex.plan.n_chunks is not None else 1
+    out = wavefront(stacked, xs_p, n_chunks, cfgs[0].acts)
+    return out[..., : cfgs[-1].hidden], None
+
+
+register_backend(BackendSpec(
+    name=IDENTITY, forward=_forward_identity))
+register_backend(BackendSpec(
+    name="naive", forward=_forward_layerwise))
+register_backend(BackendSpec(
+    name="split", forward=_forward_layerwise))
+register_backend(BackendSpec(
+    name="kernel", kernel_acts=True, forward=_forward_layerwise))
+register_backend(BackendSpec(
+    name="fused_stack", packs=True, quantized=True, kernel_acts=True,
+    state_layout="packed", forward=_forward_fused, step=_step_fused))
+register_backend(BackendSpec(
+    name="fused_stack_sharded", packs=True, quantized=True,
+    kernel_acts=True, sharded=True, state_layout="packed",
+    forward=_forward_sharded, step=_step_sharded))
+register_backend(BackendSpec(
+    name="wavefront", stateful=False, forward=_forward_wavefront))

@@ -174,27 +174,24 @@ def lstm_stack_forward(
     packed: Any = None,
     weight_dtype: str | None = None,
 ) -> Any:
-    """Run L cascaded LSTM layers (one pipeline segment, no sync boundary).
+    """DEPRECATED shim: run L cascaded LSTM layers (one pipeline segment).
 
-    Dispatch: impl in {naive, split, kernel, fused_stack}.  The first three
-    execute layer-by-layer, each layer a full pass over the sequence (its
-    hidden sequence round-trips HBM before the next layer starts).
-    ``fused_stack`` runs the whole segment as a single Pallas wavefront
-    kernel (paper Fig. 7): layer l+1 consumes h_t one kernel step after
-    layer l emits it, and no intermediate hidden sequence leaves the chip.
+    New code should plan once and execute many times::
 
-    Persistent-state contract (the streaming serve path): ``initial_state``
-    is a per-layer ``[(h, c), ...]`` at real layer widths (None = zeros);
-    feeding the returned finals back as the next call's ``initial_state``
-    continues the sequence exactly — running T steps twice equals one
-    2T-step pass (tested).  ``packed`` is an optional pre-built
-    ``kernels.lstm_stack.PackedStack`` (fused path only): pass it to skip
-    re-packing the weights inside a jitted serving step.
+        from repro.core.executor import plan_stack
+        ex = plan_stack(cfgs, impl="fused_stack").bind(params_list)
+        h_seq, finals = ex(xs)
 
-    ``weight_dtype`` overrides the layer configs' weight storage for the
-    fused packed stack ("fp32" | "bf16" | "int8"); quantized storage exists
-    only on the fused path — requesting it under any other impl raises
-    instead of silently scoring with full-width weights.
+    This wrapper builds that plan per call (``plan_stack`` is cached on the
+    full argument tuple, so legality resolution and the ``weight_dtype``
+    config rewrite are NOT re-done per traced call) and keeps the original
+    call-time surface alive for existing callers and tests: impl in
+    {naive, split, kernel, fused_stack, fused_stack_sharded, wavefront},
+    ``initial_state``/finals as per-layer ``[(h, c), ...]`` at real layer
+    widths, optional pre-built ``packed`` (fused path only), and a
+    ``weight_dtype`` storage override ("fp32" | "bf16" | "int8") that is
+    legal only on the fused backends — anything illegal raises at plan
+    time, never deep inside a Pallas call.
 
     Returns last layer's hidden sequence (B, T, hidden[-1]); with
     ``return_state`` (default) also the per-layer (h_final, c_final) list —
@@ -202,37 +199,11 @@ def lstm_stack_forward(
     """
     if not cfgs:  # empty segment (e.g. latent_boundary=0): identity
         return (xs, []) if return_state else xs
-    if weight_dtype is not None:
-        import dataclasses
+    from .executor import plan_stack
 
-        cfgs = [dataclasses.replace(c, weight_dtype=weight_dtype) for c in cfgs]
-    if impl == "fused_stack":
-        from repro.kernels.lstm_stack import ops as kops
-
-        h_seq, finals = kops.lstm_stack_forward_fused(
-            params_list, xs, cfgs, initial_state, packed=packed
-        )
-        return (h_seq, finals) if return_state else h_seq
-    assert packed is None, "packed weights only apply to impl='fused_stack'"
-    from .quant import native_weight_dtype
-
-    quantized = [
-        c.weight_dtype for c in cfgs
-        if c.weight_dtype is not None
-        and c.weight_dtype != native_weight_dtype(c.dtype)
-    ]
-    if quantized:
-        raise ValueError(
-            f"weight_dtype={quantized[0]!r} requires impl='fused_stack' "
-            f"(got impl={impl!r}): quantized packed weights only exist on "
-            "the fused wavefront path"
-        )
-    h_seq, finals = xs, []
-    for i, (p, cfg) in enumerate(zip(params_list, cfgs)):
-        state = None if initial_state is None else initial_state[i]
-        h_seq, final = lstm_forward(p, h_seq, cfg, state, impl=impl)
-        finals.append(final)
-    return (h_seq, finals) if return_state else h_seq
+    plan = plan_stack(cfgs, impl=impl, weight_dtype=weight_dtype)
+    executor = plan.bind(params_list, packed=packed)
+    return executor(xs, initial_state, return_state=return_state)
 
 
 def zero_state(batch: int, cfg: LstmConfig) -> tuple[jax.Array, jax.Array]:

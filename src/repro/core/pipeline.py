@@ -221,6 +221,96 @@ def wavefront_shard_map(
 
 
 # ---------------------------------------------------------------------------
+# distributed wavefront over FUSED sub-stacks (each stage = one Pallas call)
+# ---------------------------------------------------------------------------
+
+def wavefront_shard_map_fused(
+    packed,                 # kernels.lstm_stack.PackedStack for the WHOLE stack
+    xs_p: jax.Array,        # (B, T, W) input, pre-padded to the pack width
+    h0: jax.Array,          # (L, B, W) packed-layout initial hidden
+    c0: jax.Array,          # (L, B, W) fp32 initial cell
+    n_chunks: int,
+    mesh,
+    axis: str = "stage",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The ``wavefront_shard_map`` schedule with the fused Pallas stack
+    kernel as every stage's body (backend ``fused_stack_sharded``).
+
+    The L-layer pack splits into ``n_stages`` contiguous sub-stacks along
+    its leading layer axis (shard_map's P("stage") sharding of the packed
+    weight arrays does the split — quantized int8 packs shard their
+    per-layer scales the same way).  Per tick each device advances its
+    whole sub-stack over one chunk of timesteps in ONE ``pallas_call``
+    (weights and per-layer (h, c) VMEM-resident inside the stage), and
+    ``ppermute`` carries only the segment-boundary hidden chunk
+    ``(B, ct, W)`` to the next stage — no inner layer's hidden sequence
+    ever crosses devices.
+
+    Bit-for-bit equal to the local ``fused_stack`` backend (tested on a
+    CPU mesh): chunked sub-stack execution performs the identical per-step
+    math in the identical order; only *where* each (layer, chunk) cell
+    evaluates changes.  Returns (hs_last (B, T, W), h_final (L, B, W),
+    c_final fp32 (L, B, W)).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels.lstm_stack.ops import lstm_stack_op
+
+    n_stages = mesh.shape[axis]
+    n_layers = packed.n_layers
+    assert n_layers % n_stages == 0, (n_layers, n_stages)
+    b, t, w = xs_p.shape
+    assert t % n_chunks == 0, (t, n_chunks)
+    ct = t // n_chunks
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+    acts, weight_dtype = packed.acts, packed.weight_dtype
+
+    def program(stacked_local, h0_l, c0_l, xs_local):
+        # stacked_local: this stage's contiguous sub-stack (L/S, W, 4W);
+        # xs_local is the full input on every stage, masked by stage id
+        # (same scheme as wavefront_shard_map)
+        sid = jax.lax.axis_index(axis)
+        chunks = xs_local.reshape(b, n_chunks, ct, w)
+
+        def tick(carry, k):
+            h, c, inbox = carry
+            x_k = jax.lax.dynamic_index_in_dim(
+                chunks, jnp.clip(k, 0, n_chunks - 1), 1, keepdims=False
+            )
+            feed = jnp.where(sid == 0, x_k, inbox)
+            # the stage body: the whole sub-stack, one Pallas wavefront call
+            hs, h_new, c_new = lstm_stack_op(
+                feed, stacked_local, h, c,
+                acts=acts, weight_dtype=weight_dtype,
+            )
+            # idle stages (fill/drain ticks) must not advance their state
+            active = (sid <= k) & (k < sid + n_chunks)
+            h = jnp.where(active, h_new, h)
+            c = jnp.where(active, c_new, c)
+            # only the segment-BOUNDARY hidden chunk crosses devices
+            inbox_next = jax.lax.ppermute(hs, axis, perm)
+            return (h, c, inbox_next), hs
+
+        inbox0 = jnp.zeros((b, ct, w), h0_l.dtype)
+        n_ticks = n_chunks + n_stages - 1
+        (h, c, _), outs = jax.lax.scan(
+            tick, (h0_l, c0_l, inbox0), jnp.arange(n_ticks)
+        )
+        return outs[None], h, c  # (1, ticks, B, ct, W), (L/S, B, W) x2
+
+    out_ticks, h_f, c_f = shard_map(
+        program,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=(P(axis), P(axis), P(axis)),
+        check_rep=False,
+    )(packed.stacked, h0, c0, xs_p)
+    valid = out_ticks[-1, n_stages - 1:]
+    return jnp.moveaxis(valid, 0, 1).reshape(b, t, w), h_f, c_f
+
+
+# ---------------------------------------------------------------------------
 # convenience: run a whole (possibly heterogeneous) LSTM stack
 # ---------------------------------------------------------------------------
 
@@ -246,10 +336,19 @@ def pipeline_lstm_stack(
     n_chunks: int,
     acts: ActivationSet = EXACT,
 ) -> jax.Array:
-    """Wavefront the stack; returns last layer's (B, T, hidden[-1])."""
-    in_dims = [c.in_dim for c in cfgs]
-    hidden = [c.hidden for c in cfgs]
-    stacked, width = pack_uniform(params_list, in_dims, hidden)
-    xs_p = jnp.pad(xs, ((0, 0), (0, 0), (0, width - xs.shape[-1])))
-    out = wavefront(stacked, xs_p, n_chunks, acts)
-    return out[..., : hidden[-1]]
+    """Wavefront the stack; returns last layer's (B, T, hidden[-1]).
+
+    A call site of the executor API: builds a (cached) ``wavefront`` plan
+    and executes it.  The wavefront backend packs per call at the exact
+    max width (``pack_uniform`` — no Pallas lane rounding), matching this
+    function's historical behavior; bind-once packing is a property of the
+    fused backends, not this XLA-level reference path.
+    """
+    import dataclasses
+
+    from repro.core.executor import plan_stack
+
+    if any(c.acts is not acts for c in cfgs):
+        cfgs = [dataclasses.replace(c, acts=acts) for c in cfgs]
+    plan = plan_stack(cfgs, impl="wavefront", n_chunks=n_chunks)
+    return plan.bind(params_list)(xs, return_state=False)

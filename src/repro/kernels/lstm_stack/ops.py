@@ -413,6 +413,27 @@ def pack_cache_evict(*packs: PackedStack | None) -> None:
         del _PACK_CACHE[key]
 
 
+def check_packed_matches_cfgs(packed: PackedStack, cfgs: Sequence) -> None:
+    """Refuse a ``PackedStack`` built for different configs (geometry,
+    activations, dtypes or weight storage).  A mismatched pack silently
+    computes with the pack's semantics, so this must hold even under
+    python -O — the executor runs it once at bind time."""
+    _check_homogeneous(cfgs)
+    cfg0 = cfgs[0]
+    want = (
+        tuple(c.hidden for c in cfgs), tuple(c.in_dim for c in cfgs),
+        cfg0.acts.name, cfg0.dtype, cfg0.cell_dtype,
+        resolve_weight_dtype(cfg0),
+    )
+    have = (
+        packed.hidden, packed.in_dims,
+        packed.acts.name, packed.dtype, packed.cell_dtype,
+        packed.weight_dtype,
+    )
+    if want != have:
+        raise ValueError(f"packed stack mismatches cfgs: {have} != {want}")
+
+
 def lstm_stack_forward_fused(
     params_list: Sequence[dict[str, Any]],
     xs: jax.Array,  # (B, T, in_dim of layer 0)
@@ -433,22 +454,7 @@ def lstm_stack_forward_fused(
     if packed is None:
         packed = pack_stack_cached(params_list, cfgs)
     else:
-        _check_homogeneous(cfgs)
-        cfg0 = cfgs[0]
-        want = (
-            tuple(c.hidden for c in cfgs), tuple(c.in_dim for c in cfgs),
-            cfg0.acts.name, cfg0.dtype, cfg0.cell_dtype,
-            resolve_weight_dtype(cfg0),
-        )
-        have = (
-            packed.hidden, packed.in_dims,
-            packed.acts.name, packed.dtype, packed.cell_dtype,
-            packed.weight_dtype,
-        )
-        # a mismatched pack silently computes with the pack's geometry and
-        # activations, so this must hold even under python -O
-        if want != have:
-            raise ValueError(f"packed stack mismatches cfgs: {have} != {want}")
+        check_packed_matches_cfgs(packed, cfgs)
     batch = xs.shape[0]
 
     if initial_state is None:

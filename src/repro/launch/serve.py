@@ -13,6 +13,11 @@ fused stack, weights pre-packed at engine init, state donated per chunk):
 
 ``--weight-dtype {fp32,bf16,int8}`` picks the fused stack's VMEM weight
 storage (int8: per-layer symmetric scales in SMEM, fp32 cell carry kept).
+``--placement {local,sharded}`` routes through ``plan_stack``: sharded
+places fused sub-stacks on mesh devices (``fused_stack_sharded``).
+``--plan-only`` prints the resolved execution plan for both segments
+(backend, placement, weight dtype, pack bytes) and exits without scoring —
+the dryrun-style smoke for serving configs.
 """
 
 from __future__ import annotations
@@ -49,6 +54,14 @@ def main():
                     help="fused-stack weight storage (anomaly mode); int8 "
                          "keeps per-layer dequant scales in SMEM and shrinks "
                          "VMEM-resident weights ~4x")
+    ap.add_argument("--placement", choices=("local", "sharded"),
+                    default="local",
+                    help="fused-stack stage placement (anomaly mode): "
+                         "'sharded' runs fused sub-stacks on mesh devices "
+                         "with ppermute hand-off (fused_stack_sharded)")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="resolve and print the execution plan (backend, "
+                         "weight dtype, pack bytes) without scoring")
     args = ap.parse_args()
 
     if args.mode == "anomaly":
@@ -88,12 +101,19 @@ def serve_anomaly(args):
     if args.weight_dtype is not None:
         cfg = dataclasses.replace(cfg, weight_dtype=args.weight_dtype)
     params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+
+    if args.plan_only:
+        return print_plan(args, params, cfg)
+
     ds = GwDataset(GwDataConfig(timesteps=cfg.timesteps))
 
-    engine = StreamingAnomalyEngine(params, cfg, batch=1)
+    engine = StreamingAnomalyEngine(
+        params, cfg, batch=1, placement=args.placement
+    )
     wd = engine._packed_enc.weight_dtype if engine._packed_enc else "n/a"
     print(f"{args.gw_model}: impl={engine.effective_impl} "
-          f"(requested fused_stack), weights={wd}, window={engine.window}")
+          f"(requested fused_stack), placement={args.placement}, "
+          f"weights={wd}, window={engine.window}")
     thr = engine.calibrate(ds.background(256), fpr=args.fpr)
     print(f"calibrated threshold ({args.fpr:.0%} FPR): {thr:.4f}")
 
@@ -113,6 +133,29 @@ def serve_anomaly(args):
     print(f"{args.windows} windows ({chunk}-sample chunks): "
           f"{flagged} flagged; latency p50={np.percentile(lat_us, 50):.0f}us "
           f"p99={np.percentile(lat_us, 99):.0f}us on this host")
+
+
+def print_plan(args, params, cfg) -> None:
+    """Dryrun-style smoke: resolve both segment plans, bind, print, exit.
+
+    Exercises the full plan->bind path (legality, packing, placement) so a
+    bad serving config fails here with a plan-time error — but never runs
+    a scoring step.
+    """
+    from repro.core.backends import resolve_impl
+    from repro.core.autoencoder import segment_executors
+
+    cfg, effective, reason = resolve_impl(cfg, "fused_stack")
+    if reason is not None:
+        print(f"note: {reason}")
+    exec_enc, exec_dec = segment_executors(
+        params, cfg, impl=effective, placement=args.placement
+    )
+    print(f"{args.gw_model}: resolved serving plan "
+          f"(window={cfg.timesteps}, requested fused_stack)")
+    for name, ex in (("encoder", exec_enc), ("decoder", exec_dec)):
+        print(f"  {name}: {ex.plan.describe()} "
+              f"pack_bytes={ex.packed_bytes}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+"""Child-process environment for multi-device CPU-mesh smokes.
+
+Tests and benchmarks that need more than one device spawn a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag must
+be set before jax imports).  The child env has to thread platform
+selection through: without e.g. ``JAX_PLATFORMS=cpu`` jax probes for
+accelerator plugins in the sandboxed child and can stall or hang (this bit
+test_pipeline/test_launch_sharding once — the dryrun smoke went
+472s -> 12s).  One helper so every spawning site threads the same vars.
+"""
+
+from __future__ import annotations
+
+import os
+
+#: platform/temp vars that must survive into jax child processes
+PASS_THROUGH = ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "TMPDIR")
+
+
+def child_env(pythonpath: str = "src") -> dict[str, str]:
+    """Minimal env for a jax subprocess run from the repo root."""
+    env = {
+        "PYTHONPATH": pythonpath,
+        "PATH": "/usr/bin:/bin",
+        "HOME": os.environ.get("HOME", "/root"),
+    }
+    for var in PASS_THROUGH:
+        if var in os.environ:
+            env[var] = os.environ[var]
+    return env

@@ -33,7 +33,7 @@ automatically; use ``update_params`` to swap params on a live engine.
 from __future__ import annotations
 
 import logging
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -42,69 +42,19 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.autoencoder import (
     AutoencoderConfig,
-    decoder_layers,
-    encode,
-    encoder_layers,
     reconstruction_error,
     reconstruction_error_from_latent,
+    segment_executors,
+)
+# the legality rules live in core.backends now; the old names stay
+# importable from here (several tests and downstream callers do)
+from repro.core.backends import (  # noqa: F401  (re-exports)
+    quantized_weight_storage,
+    resolve_impl,
 )
 from repro.models.api import get_model
 
 logger = logging.getLogger(__name__)
-
-
-def quantized_weight_storage(cfg: AutoencoderConfig) -> str | None:
-    """The first non-native weight storage the config requests, if any."""
-    from repro.core.quant import native_weight_dtype
-
-    native = native_weight_dtype(cfg.dtype)
-    for wd in (cfg.weight_dtype, cfg.dec_weight_dtype):
-        if wd is not None and wd != native:
-            return wd
-    return None
-
-
-def resolve_impl(
-    cfg: AutoencoderConfig, impl: str | None
-) -> tuple[AutoencoderConfig, str, str | None]:
-    """Resolve a requested inference backend against kernel-safety.
-
-    Returns ``(cfg, effective_impl, fallback_reason)``.  Kernel backends
-    (``kernel``/``fused_stack``) swap non-kernel-safe activations (e.g.
-    PAPER_HW's LUT sigmoid) for their PWL twins in-kernel, which would make
-    scores inconsistent with thresholds calibrated on ``cfg.impl`` — in
-    that case the request is declined, ``cfg.impl`` is kept, and the reason
-    is returned (and logged by the engines).  Set ``cfg.impl`` directly to
-    opt in regardless.
-
-    Quantized weight storage (``cfg.weight_dtype``/``dec_weight_dtype``)
-    exists only on the fused packed stack, so a config that requests it but
-    resolves to any other backend is an error *here*, not a late Pallas (or
-    silent full-width) failure at score time.
-    """
-    from repro.core.quant import kernel_safe
-
-    if impl is None or impl == cfg.impl:
-        cfg, effective, reason = cfg, cfg.impl, None
-    elif impl in ("kernel", "fused_stack") and kernel_safe(cfg.acts) is not cfg.acts:
-        reason = (
-            f"requested impl={impl!r} would swap acts={cfg.acts.name!r} for "
-            f"its kernel-safe twin; keeping impl={cfg.impl!r} so scores stay "
-            f"consistent with thresholds calibrated on it"
-        )
-        effective = cfg.impl
-    else:
-        cfg, effective, reason = replace(cfg, impl=impl), impl, None
-    wd = quantized_weight_storage(cfg)
-    if wd is not None and effective != "fused_stack":
-        raise ValueError(
-            f"weight_dtype={wd!r} requires the fused_stack backend, but the "
-            f"engine resolved impl={effective!r}"
-            + (f" ({reason})" if reason else "")
-            + "; drop the quantized weight_dtype or fix the config so the "
-            "fused path is eligible"
-        )
-    return cfg, effective, reason
 
 
 @dataclass
@@ -121,6 +71,9 @@ class AnomalyStreamEngine:
     #: actually taken is exposed as ``effective_impl`` (and the fallback is
     #: logged), so serving configs can assert what they run.
     impl: str | None = "fused_stack"
+    #: stage placement for the fused path: "local" (one device) or
+    #: "sharded" (sub-stacks on mesh devices, ``fused_stack_sharded``)
+    placement: str = "local"
     #: backend the engine actually runs (output-only, set in __post_init__).
     effective_impl: str = field(init=False, default="")
     #: non-None iff the requested impl was declined (the logged reason).
@@ -134,23 +87,21 @@ class AnomalyStreamEngine:
             logger.warning("AnomalyStreamEngine: %s", self.fallback_reason)
 
         self._score = jax.jit(
-            lambda p, packed_enc, packed_dec, x: reconstruction_error(
-                p, x, self.cfg, packed_enc=packed_enc, packed_dec=packed_dec
+            lambda p, ex_enc, ex_dec, x: reconstruction_error(
+                p, x, self.cfg, exec_enc=ex_enc, exec_dec=ex_dec
             )
         )
+        # plan + bind eagerly: an illegal impl/placement/weight_dtype combo
+        # must raise at construction (plan time), not on the first score()
+        self._execs()
 
-    def _packs(self):
-        """Current params' packed stacks (identity-cached, built eagerly —
-        never traced into the score graph; re-packs if params were swapped)."""
-        if self.effective_impl != "fused_stack":
-            return None, None
-        from repro.kernels.lstm_stack.ops import pack_stack_cached
-
-        enc_p, enc_cfgs = encoder_layers(self.params, self.cfg)
-        dec_p, dec_cfgs = decoder_layers(self.params, self.cfg)
-        return (
-            pack_stack_cached(enc_p, enc_cfgs) if enc_cfgs else None,
-            pack_stack_cached(dec_p, dec_cfgs) if dec_cfgs else None,
+    def _execs(self):
+        """Current params' bound segment executors (plan cached, pack
+        identity-cached, built eagerly — never traced into the score
+        graph; re-binds automatically if params were swapped)."""
+        return segment_executors(
+            self.params, self.cfg,
+            impl=self.effective_impl, placement=self.placement,
         )
 
     def calibrate(self, background: np.ndarray, fpr: float = 0.01):
@@ -161,9 +112,9 @@ class AnomalyStreamEngine:
         return self.threshold
 
     def score(self, windows: np.ndarray) -> np.ndarray:
-        packed_enc, packed_dec = self._packs()
+        exec_enc, exec_dec = self._execs()
         return np.asarray(
-            self._score(self.params, packed_enc, packed_dec,
+            self._score(self.params, exec_enc, exec_dec,
                         jnp.asarray(windows))
         )
 
@@ -207,6 +158,7 @@ class StreamingAnomalyEngine:
         batch: int = 1,
         window: int | None = None,
         impl: str | None = "fused_stack",
+        placement: str = "local",
         carry_state: bool = False,
         donate: bool = True,
         threshold: float = float("inf"),
@@ -220,6 +172,7 @@ class StreamingAnomalyEngine:
             raise ValueError("streaming engine needs >= 1 encoder layer")
         self._params = params
         self.batch = batch
+        self.placement = placement
         self.window = int(window or self.cfg.timesteps)
         self.carry_state = carry_state
         self.threshold = threshold
@@ -230,65 +183,46 @@ class StreamingAnomalyEngine:
     # -- engine construction -------------------------------------------------
 
     def _build(self) -> None:
+        """Plan + bind both segments; everything else is jit plumbing.
+
+        The executors are pytrees (weights/packs are leaves, the plan is
+        static), so they ride through the jitted steps as arguments — a
+        params swap re-binds and re-traces nothing.
+        """
         cfg = self.cfg
-        enc_params, enc_cfgs = encoder_layers(self.params, cfg)
-        dec_params, dec_cfgs = decoder_layers(self.params, cfg)
-        self._enc_cfgs = enc_cfgs
-        self._enc_hidden_last = enc_cfgs[-1].hidden
-        self._fused = self.effective_impl == "fused_stack"
-        donate = self._donate
+        self._exec_enc, self._exec_dec = segment_executors(
+            self.params, cfg,
+            impl=self.effective_impl, placement=self.placement,
+        )
 
-        if self._fused:
-            from repro.kernels.lstm_stack.ops import (
-                lstm_stack_op,
-                pack_stack_cached,
-            )
+        def enc_step(ex, state, chunk):
+            return ex.step(chunk, state)
 
-            self._packed_enc = pack_stack_cached(enc_params, enc_cfgs)
-            self._packed_dec = (
-                pack_stack_cached(dec_params, dec_cfgs) if dec_cfgs else None
-            )
-
-            def enc_step(packed, chunk, h, c):
-                _, h_f, c_f = lstm_stack_op(
-                    packed.pad_input(chunk), packed.stacked, h, c,
-                    acts=packed.acts, weight_dtype=packed.weight_dtype,
-                )
-                return h_f, c_f
-
-            self._enc_step = jax.jit(
-                enc_step, donate_argnums=(2, 3) if donate else ()
-            )
-        else:
-            self._packed_enc = self._packed_dec = None
-
-            def enc_step(params, chunk, state):
-                _, finals = encode(
-                    params, chunk, cfg, initial_state=state, return_state=True
-                )
-                return finals
-
-            self._enc_step = jax.jit(
-                enc_step, donate_argnums=(2,) if donate else ()
-            )
-
+        self._enc_step = jax.jit(
+            enc_step, donate_argnums=(1,) if self._donate else ()
+        )
         self._score_window = jax.jit(
-            lambda params, packed_dec, latent, x: reconstruction_error_from_latent(
-                params, latent, x, cfg, packed_dec=packed_dec
+            lambda params, ex_dec, latent, x: reconstruction_error_from_latent(
+                params, latent, x, cfg, exec_dec=ex_dec
             )
         )
         self._score_batch = jax.jit(
-            lambda params, packed_enc, packed_dec, x: reconstruction_error(
-                params, x, cfg, packed_enc=packed_enc, packed_dec=packed_dec
+            lambda params, ex_enc, ex_dec, x: reconstruction_error(
+                params, x, cfg, exec_enc=ex_enc, exec_dec=ex_dec
             )
         )
 
-    def _zero_state(self):
-        if self._fused:
-            return self._packed_enc.zero_state(self.batch)
-        from repro.core.lstm import zero_state
+    @property
+    def _packed_enc(self):
+        """The encoder's bound ``PackedStack`` (None off the packed paths)."""
+        return self._exec_enc.packed
 
-        return [zero_state(self.batch, c) for c in self._enc_cfgs]
+    @property
+    def _packed_dec(self):
+        return self._exec_dec.packed
+
+    def _zero_state(self):
+        return self._exec_enc.zero_state(self.batch)
 
     # -- state lifecycle -----------------------------------------------------
 
@@ -309,17 +243,21 @@ class StreamingAnomalyEngine:
         self.update_params(params)
 
     def update_params(self, params: dict) -> None:
-        """Swap params on a live engine: re-pack (the identity cache misses
-        on the new leaves), evict the superseded packs, reset stream state."""
-        old_packs = (self._packed_enc, self._packed_dec)
-        self._params = params
-        self._build()
-        self.reset()
-        if self._fused:
-            from repro.kernels.lstm_stack.ops import pack_cache_evict
+        """Swap params on a live engine: re-bind each segment executor
+        (the identity cache misses on the new leaves; the executor's
+        lifecycle API evicts its superseded pack), reset stream state.
 
-            keep = {id(self._packed_enc), id(self._packed_dec)}
-            pack_cache_evict(*(p for p in old_packs if id(p) not in keep))
+        The executors are jit *arguments*, so no jitted step is rebuilt or
+        re-traced — only the leaves change.
+        """
+        from repro.core.autoencoder import decoder_layers, encoder_layers
+
+        self._params = params
+        enc_p, _ = encoder_layers(params, self.cfg)
+        dec_p, _ = decoder_layers(params, self.cfg)
+        self._exec_enc = self._exec_enc.update_params(enc_p)
+        self._exec_dec = self._exec_dec.update_params(dec_p)
+        self.reset()
 
     @property
     def filled(self) -> int:
@@ -363,23 +301,16 @@ class StreamingAnomalyEngine:
         return scores
 
     def _advance(self, piece: jax.Array) -> None:
-        if self._fused:
-            h, c = self._state
-            self._state = self._enc_step(self._packed_enc, piece, h, c)
-        else:
-            self._state = self._enc_step(self.params, piece, self._state)
+        self._state = self._enc_step(self._exec_enc, self._state, piece)
 
     def _latent(self) -> jax.Array:
         """Last encoder layer's current hidden — the RepeatVector input."""
-        if self._fused:
-            h, _ = self._state
-            return h[-1, :, : self._enc_hidden_last]
-        return self._state[-1][0]
+        return self._exec_enc.last_hidden(self._state)
 
     def _finish_window(self) -> np.ndarray:
         x = jnp.asarray(np.concatenate(self._chunks, axis=1))
         scores = np.asarray(
-            self._score_window(self.params, self._packed_dec, self._latent(), x)
+            self._score_window(self.params, self._exec_dec, self._latent(), x)
         )
         self._chunks, self._filled = [], 0
         if not self.carry_state:
@@ -389,11 +320,11 @@ class StreamingAnomalyEngine:
     # -- batch path (calibration / offline) ----------------------------------
 
     def score(self, windows: np.ndarray) -> np.ndarray:
-        """One-shot batch scoring on the same pre-packed weights (does not
+        """One-shot batch scoring on the same pre-bound executors (does not
         touch stream state); equals chunked scoring to fp tolerance."""
         return np.asarray(
             self._score_batch(
-                self.params, self._packed_enc, self._packed_dec,
+                self.params, self._exec_enc, self._exec_dec,
                 jnp.asarray(windows),
             )
         )

@@ -143,18 +143,12 @@ class TestDryrunSmoke:
         """The full launch path (rules -> jit -> compile -> EXECUTE) on 8
         placeholder devices with a reduced config — the in-suite twin of
         launch/dryrun.py."""
-        import os
+        from repro.launch.subproc import child_env
 
-        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
-        # keep platform selection: without e.g. JAX_PLATFORMS=cpu the
-        # subprocess probes for accelerator plugins and can stall or hang
-        for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "TMPDIR"):
-            if var in os.environ:
-                env[var] = os.environ[var]
         r = subprocess.run(
             [sys.executable, "-c", _DRYRUN_SMOKE],
             capture_output=True, text=True, timeout=600,
-            env=env,
+            env=child_env(),
             cwd="/root/repo",
         )
         assert "DRYRUN_SMOKE_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])

@@ -115,18 +115,12 @@ print("SHARD_MAP_OK")
 class TestShardMapWavefront:
     def test_distributed_matches_sequential(self):
         """4 stages on 4 (placeholder) devices, ppermute hand-off."""
-        import os
+        from repro.launch.subproc import child_env
 
-        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
-        # platform selection must survive into the subprocess: without e.g.
-        # JAX_PLATFORMS=cpu jax probes for accelerator plugins and can hang
-        for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "TMPDIR"):
-            if var in os.environ:
-                env[var] = os.environ[var]
         r = subprocess.run(
             [sys.executable, "-c", _SHARD_MAP_SCRIPT],
             capture_output=True, text=True, timeout=300,
-            env=env,
+            env=child_env(),
             cwd="/root/repo",
         )
         assert "SHARD_MAP_OK" in r.stdout, r.stderr[-2000:]
