@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve test-quant test-exec bench-kernels bench-stream bench-quant bench-exec bench
+.PHONY: test test-fast test-serve test-quant test-exec test-step bench-kernels bench-stream bench-quant bench-exec bench-step bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -26,6 +26,10 @@ test-quant:
 test-exec:
 	$(PYTHON) -m pytest -x -q tests/test_executor.py
 
+# the low-latency step kernel + multi-stream coalescing (bitwise contract)
+test-step:
+	$(PYTHON) -m pytest -x -q tests/test_step_kernel.py
+
 # kernel + pipeline + streaming-serve rows, with the machine-readable artifact
 bench-kernels:
 	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance,stream --json BENCH_kernels.json
@@ -43,6 +47,11 @@ bench-quant:
 # into the shared artifact next to the kernel + quant rows
 bench-exec:
 	$(PYTHON) -m benchmarks.run --only exec --json BENCH_kernels.json --merge
+
+# step.* rows (streamed-vs-batch gap gate, T=1 kernel latency, coalescing
+# bit-equality gate) merged into the shared artifact
+bench-step:
+	$(PYTHON) -m benchmarks.run --only step --json BENCH_kernels.json --merge
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

@@ -1,7 +1,7 @@
 """Executor API rows: dispatch overhead, steady-state pack gate, sharding.
 
-Three claims the plan/bind/execute redesign must keep true, as rows in the
-shared ``BENCH_kernels.json`` artifact (``make bench-exec`` merges them):
+Four claims the execution API must keep true, as rows in the shared
+``BENCH_kernels.json`` artifact (``make bench-exec`` merges them):
 
 * ``exec.bound_call_us`` vs ``exec.direct_call_us`` — a jitted call through
   a bound ``StackExecutor`` (executor as a pytree argument) against the
@@ -11,6 +11,13 @@ shared ``BENCH_kernels.json`` artifact (``make bench-exec`` merges them):
 * ``exec.packs_steady`` — steady-state executor calls re-trace and re-pack
   ZERO times (reuses ``core.pipeline.PACK_TRACE_COUNT``; hard gate like the
   streaming benchmark's).
+* ``exec.step_dispatch_ratio`` — the executor's bind-time-cached jitted
+  step (``StackExecutor.step_jit``: bound arrays are jit constants,
+  per-call dispatch flattens only (xs, state)) vs jitting the identical
+  kernel call by hand.  **Hard-gated at <= 1.10** — the pre-PR5 pattern
+  (executor as a jit pytree argument) measured 1.456x
+  (``exec.dispatch_ratio``); a bound step that re-grows a dispatch tax
+  regresses the serving hot path.
 * ``exec.sharded_wavefront_us`` — the ``fused_stack_sharded`` backend on a
   2-device CPU mesh (subprocess, like tests/test_pipeline.py) alongside the
   local fused backend, gated on bit-equality.  Interpret-mode timings are
@@ -129,6 +136,40 @@ def run() -> list[tuple]:
     rows.append(("exec.bound_call_us", us_exec, ""))
     rows.append(("exec.direct_call_us", us_direct, ""))
     rows.append(("exec.dispatch_ratio", 0.0, f"ratio={ratio:.3f}"))
+
+    # -- streaming step dispatch: bound jitted step vs hand-jitted kernel ---
+    from repro.kernels.lstm_stack.step import lstm_stack_step_op
+
+    ex_step = plan_stack(cfgs, impl="fused_step").bind(params)
+    packed = ex_step.packed
+    bound = ex_step.step_jit(donate=False)
+    f_direct_step = jax.jit(
+        lambda xs, state: lstm_stack_step_op(
+            packed.pad_input(xs), packed.stacked, state[0], state[1],
+            acts=packed.acts, weight_dtype=packed.weight_dtype,
+        )[1:]
+    )
+    x1 = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1))
+    state = ex_step.zero_state(1)
+    # interleave the two timed loops and keep the best of 3 rounds each:
+    # the ratio gate must not flake on scheduler noise
+    best_b, best_d = float("inf"), float("inf")
+    for _ in range(3):
+        best_b = min(best_b, _timeit(bound, x1, state, n=50))
+        best_d = min(best_d, _timeit(f_direct_step, x1, state, n=50))
+    step_ratio = best_b / best_d
+    print(f"bound step call     : {best_b:8.0f} us")
+    print(f"direct step call    : {best_d:8.0f} us  "
+          f"(bound/direct = {step_ratio:.3f}x, gate <= 1.10)")
+    rows.append(("exec.step_bound_us", best_b, ""))
+    rows.append(("exec.step_direct_us", best_d, ""))
+    rows.append(("exec.step_dispatch_ratio", 0.0,
+                 f"ratio={step_ratio:.3f}|ok={int(step_ratio <= 1.10)}"))
+    if step_ratio > 1.10:  # hard gate: the bound step must stay dispatch-free
+        raise RuntimeError(
+            f"exec.step_dispatch_ratio {step_ratio:.3f} > 1.10 — the bound "
+            "jitted step re-grew a dispatch tax over a direct kernel call"
+        )
 
     # steady-state: repeated bound-executor calls must re-pack zero times
     before = pipeline.PACK_TRACE_COUNT

@@ -42,6 +42,7 @@ def main() -> None:
         pipeline_balance,
         quant_bench,
         roofline_table,
+        step_bench,
         stream_latency,
         table2,
         table3,
@@ -59,6 +60,7 @@ def main() -> None:
         "stream": stream_latency.run,
         "quant": quant_bench.run,
         "exec": exec_bench.run,
+        "step": step_bench.run,
         "roofline_table": lambda: roofline_table.run(args.rundir),
     }
     if args.only:

@@ -1,0 +1,194 @@
+"""Low-latency step path rows: streamed-vs-batch gap, kernel T=1 latency,
+multi-stream coalescing.
+
+The PR 5 serving claims, as ``step.*`` rows merged into the shared
+``BENCH_kernels.json`` artifact (``make bench-step``):
+
+* ``step.stream_b1_vs_batch`` — a B=1 window pushed through the
+  ``fused_step`` engine (step kernel + bound jitted step + jit-cached
+  state reset) vs the same window scored one-shot at B=1.  Same
+  methodology as the pre-step baseline ``bench.stream_b1_vs_batch``
+  (full-window push), which measured **6.99x**; **hard-gated at <= 3.5**.
+  ``step.stream_b1_chunk_us`` reports the 4-chunk streamed variant
+  (baseline ~8x) alongside.
+* ``step.kernel_t1_us`` / ``step.kernel_fallback_t1_us`` — the step kernel
+  vs the wavefront kernel on a single T=1 sample (the paper's
+  initiation-interval regime): no out-of-kernel mvm_x, no (T, B, 4W) HBM
+  round-trip, one grid step instead of T+L-1.
+* ``step.push_many8_vs_sequential`` — 8 independent streams advanced by
+  ONE coalesced B=8 step call per chunk vs 8 sequential B=1 push loops;
+  **hard-gated on bit-equality** of every emitted score (the coalescer
+  must be free: same math, one dispatch).
+
+Interpret-mode timings on CPU are correctness-grade; on a TPU host the
+same rows time the compiled kernels.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gw import GW_MODELS
+from repro.core.autoencoder import init_autoencoder
+from repro.serve.engine import AnomalyStreamEngine, StreamingAnomalyEngine
+
+#: streamed chunk length: under the default plan chunk_len (32), so every
+#: push rides the step kernel; 4 chunks fill the gw_small window
+CHUNK = 25
+
+
+def _time(fn, n_iter: int = 10) -> float:
+    fn()  # warm up (compile)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()  # engines sync internally (scores come back as numpy)
+    return (time.perf_counter() - t0) / n_iter * 1e6
+
+
+def _time_jax(fn, n_iter: int = 50) -> float:
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n_iter * 1e6
+
+
+def run() -> list[tuple]:
+    rows = []
+    cfg = GW_MODELS["gw_small"]
+    t_len = cfg.timesteps
+    params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    w1 = rng.standard_normal((1, t_len, 1)).astype(np.float32)
+
+    print(f"\n== step path: streamed B=1 vs batch (gw_small, T={t_len}, "
+          f"chunk={CHUNK}) ==")
+
+    # -- kernel-level T=1 latency: step vs wavefront -------------------------
+    from repro.core.autoencoder import encoder_layers
+    from repro.kernels.lstm_stack.ops import lstm_stack_op, pack_stack_cached
+    from repro.kernels.lstm_stack.step import lstm_stack_step_op
+
+    enc_p, enc_cfgs = encoder_layers(params, cfg)
+    ps = pack_stack_cached(enc_p, enc_cfgs)
+    x1 = ps.pad_input(jnp.asarray(w1[:, :1]))
+    h0, c0 = ps.zero_state(1)
+    kw = dict(acts=ps.acts, weight_dtype=ps.weight_dtype)
+    us_step_k = _time_jax(
+        lambda: lstm_stack_step_op(x1, ps.stacked, h0, c0, **kw)
+    )
+    us_big_k = _time_jax(
+        lambda: lstm_stack_op(x1, ps.stacked, h0, c0, **kw)
+    )
+    print(f"T=1 encoder sample   : step kernel {us_step_k:7.0f} us, "
+          f"wavefront {us_big_k:7.0f} us")
+    rows.append(("step.kernel_t1_us", us_step_k, ""))
+    rows.append(("step.kernel_fallback_t1_us", us_big_k, ""))
+
+    # -- streamed window (fused_step engine) vs one-shot batch ---------------
+    # gated row: the baseline's methodology (one full-window push per
+    # score), with the window routed through the step kernel
+    eng_w = StreamingAnomalyEngine(
+        params, cfg, batch=1, window=t_len, chunk_len=t_len
+    )
+    assert eng_w.effective_impl == "fused_step", eng_w.effective_impl
+    us_stream = _time(lambda: eng_w.push(w1))
+    batch_eng = AnomalyStreamEngine(params, cfg)
+    us_b1 = _time(lambda: batch_eng.score(w1))
+    ratio = us_stream / us_b1
+    print(f"streamed window, full push : {us_stream:10.0f} us")
+    print(f"one-shot B=1 window        : {us_b1:10.0f} us  "
+          f"(stream/batch = {ratio:.2f}x, gate <= 3.5, baseline 6.99x)")
+    rows.append(("step.stream_b1_window_us", us_stream, ""))
+    rows.append(("step.stream_b1_vs_batch", us_stream,
+                 f"ratio={ratio:.3f}|batch_us={us_b1:.0f}|ok={int(ratio <= 3.5)}"))
+
+    # informational: the same window streamed in 4 short chunks (default
+    # chunk_len), the regime per-push glue dominates on CPU interpret
+    eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+
+    def push_chunked():
+        out = []
+        for pos in range(0, t_len, CHUNK):
+            out += eng.push(w1[:, pos : pos + CHUNK])
+        return out[0]
+
+    us_chunked = _time(push_chunked)
+    print(f"streamed window, {t_len // CHUNK} chunks  : {us_chunked:10.0f} us "
+          f"({us_chunked / us_b1:.2f}x)")
+    rows.append(("step.stream_b1_chunk_us", us_chunked,
+                 f"chunk={CHUNK}|ratio={us_chunked / us_b1:.3f}"))
+    if ratio > 3.5:  # the PR's headline gate: the streaming gap must close
+        raise RuntimeError(
+            f"step.stream_b1_vs_batch ratio {ratio:.2f} > 3.5 — the "
+            "low-latency step path regressed"
+        )
+
+    # -- multi-stream coalescing: 8 streams, one call per chunk --------------
+    n_streams = 8
+    w8 = rng.standard_normal((n_streams, t_len, 1)).astype(np.float32)
+    ids = [f"s{i}" for i in range(n_streams)]
+    pool = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+
+    def push_many_window():
+        outs = []
+        for pos in range(0, t_len, CHUNK):
+            res = pool.push_many(ids, w8[:, pos : pos + CHUNK])
+            outs += [res[sid] for sid in ids]
+        return outs
+
+    us_many = _time(push_many_window, n_iter=5)
+    seq = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+
+    def push_sequential():
+        scores = []
+        for i in range(n_streams):
+            seq.reset()
+            for pos in range(0, t_len, CHUNK):
+                scores += seq.push(w8[i : i + 1, pos : pos + CHUNK])
+        return scores
+
+    us_seq = _time(push_sequential, n_iter=5)
+
+    # bit-equality gate: the coalesced scores == the sequential scores
+    pool.reset()
+    seq.reset()
+    coal: dict = {sid: [] for sid in ids}
+    for pos in range(0, t_len, CHUNK):
+        res = pool.push_many(ids, w8[:, pos : pos + CHUNK])
+        for sid in ids:
+            coal[sid] += res[sid]
+    equal = True
+    for i, sid in enumerate(ids):
+        seq.reset()
+        want = []
+        for pos in range(0, t_len, CHUNK):
+            want += seq.push(w8[i : i + 1, pos : pos + CHUNK])
+        equal &= len(coal[sid]) == len(want) and all(
+            (np.asarray(a) == np.asarray(b)).all()
+            for a, b in zip(coal[sid], want)
+        )
+    speedup = us_seq / us_many
+    print(f"push_many x8 window : {us_many:10.0f} us vs sequential "
+          f"{us_seq:10.0f} us ({speedup:.2f}x, bit-equal="
+          f"{'OK' if equal else 'FAIL'})")
+    rows.append(("step.push_many8_us", us_many,
+                 f"sequential_us={us_seq:.0f}|speedup={speedup:.2f}|"
+                 f"equal={int(equal)}"))
+    rows.append(("step.push_many8_vs_sequential", 0.0,
+                 f"equal={int(equal)}|speedup={speedup:.2f}"))
+    if not equal:  # hard gate: coalescing must be numerically free
+        raise RuntimeError(
+            "push_many over 8 streams diverged from sequential pushes — "
+            "the coalescer is no longer bit-exact"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

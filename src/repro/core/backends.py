@@ -7,12 +7,14 @@ single source of truth for the *configure* half:
 
 * ``BACKENDS`` — one table of every way a stacked LSTM segment can execute
   (``naive``/``split``/``kernel`` layer-by-layer, ``fused_stack`` one Pallas
-  wavefront call, ``fused_stack_sharded`` the multi-device shard_map
-  wavefront over fused sub-stacks, ``wavefront`` the XLA-level single-host
-  pipeline), each declaring its capabilities: does it consume a
+  wavefront call, ``fused_step`` the same plus a low-latency step kernel
+  for short streaming chunks, ``fused_stack_sharded`` the multi-device
+  shard_map wavefront over fused sub-stacks, ``wavefront`` the XLA-level
+  single-host pipeline), each declaring its capabilities: does it consume a
   ``PackedStack``, may it honour quantized weight storage, does it thread
   per-layer ``(h, c)`` state, does it swap activations for kernel-safe
-  twins, can it place stages on mesh devices.
+  twins, can it place stages on mesh devices, does it honour a plan-time
+  ``chunk_len`` step specialization.
 * the quantized-storage legality check (``check_weight_storage``) and the
   engine-level backend resolution (``resolve_impl``) — previously one copy
   in ``core/lstm.lstm_stack_forward`` and another in ``serve.engine``;
@@ -56,12 +58,24 @@ class BackendSpec:
     #: PackedStack's (L, B, W) pair — donation-friendly, no per-chunk
     #: pack/unpack)
     state_layout: str = "layers"
+    #: honours a plan-time ``chunk_len``: chunks with T <= chunk_len run the
+    #: low-latency step kernel (one grid step, in-kernel layer-0 mvm_x),
+    #: longer ones fall back to the wavefront kernel
+    chunked_step: bool = False
     #: (executor, xs, state) -> (h_seq, finals | None); filled in by
     #: core.executor when it registers the implementations
     forward: Any = None
     #: optional native-state hot-path hook: (executor, xs, state) -> state;
     #: backends without one fall back to ``forward`` with portable state
     step: Any = None
+
+
+#: default ``chunk_len`` for chunked-step backends: long enough to cover
+#: realistic streaming chunk sizes, short enough that the fully-unrolled
+#: T*L step kernel stays a small program (the wavefront kernel wins beyond
+#: this anyway — its one big out-of-kernel mvm_x needs window-scale T to
+#: amortize the HBM round-trip it pays)
+DEFAULT_CHUNK_LEN = 32
 
 
 #: the one backend table; ``core.executor`` populates ``forward`` fields.

@@ -26,6 +26,10 @@ Backends (see ``core.backends.BACKENDS``):
 
     naive / split / kernel   layer-by-layer (XLA scans / per-layer Pallas)
     fused_stack              whole segment in ONE Pallas wavefront call
+    fused_step               fused_stack + a low-latency step kernel for
+                             chunks with T <= plan.chunk_len (in-kernel
+                             layer-0 mvm_x, one grid step) — the streaming
+                             serving default
     fused_stack_sharded      stages on mesh devices, each stage's body the
                              fused Pallas kernel, ppermute carrying only
                              segment-boundary hidden chunks
@@ -47,6 +51,7 @@ import jax.numpy as jnp
 
 from .backends import (
     BackendSpec,
+    DEFAULT_CHUNK_LEN,
     IDENTITY,
     check_weight_storage,
     get_backend,
@@ -83,6 +88,9 @@ class StackPlan:
     mesh: Any = None
     #: time chunks per wavefront tick (sharded/wavefront; None = auto)
     n_chunks: int | None = None
+    #: chunked-step backends only: chunks with T <= chunk_len run the
+    #: low-latency step kernel instead of the wavefront kernel
+    chunk_len: int | None = None
 
     @property
     def backend(self) -> BackendSpec:
@@ -128,10 +136,11 @@ class StackPlan:
     def describe(self) -> str:
         """One-line human summary (the launch --plan-only smoke prints it)."""
         dims = "->".join(str(c.hidden) for c in self.cfgs) or "(identity)"
+        step = f" chunk_len={self.chunk_len}" if self.chunk_len else ""
         return (
             f"impl={self.impl} placement={self.placement} "
             f"layers={self.n_layers} [{dims}] "
-            f"weight_dtype={self.weight_dtype or 'native'}"
+            f"weight_dtype={self.weight_dtype or 'native'}{step}"
         )
 
 
@@ -146,7 +155,8 @@ def _default_stage_mesh(n_layers: int):
 @functools.lru_cache(maxsize=128)
 def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
                        weight_dtype: str | None, placement: str,
-                       mesh, n_chunks: int | None) -> StackPlan:
+                       mesh, n_chunks: int | None,
+                       chunk_len: int | None) -> StackPlan:
     get_backend(impl)  # raises for unknown impl, even on empty segments
     if placement not in ("local", "sharded"):
         raise ValueError(
@@ -159,7 +169,13 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
     if impl == "fused_stack_sharded":
         placement = "sharded"
     if placement == "sharded":
-        if impl in ("fused_stack", "fused_stack_sharded"):
+        if impl in ("fused_stack", "fused_step", "fused_stack_sharded"):
+            # the step specialization is single-host; sharded placement
+            # degrades fused_step to the sharded wavefront (serving configs
+            # keep one impl default across placements) — and drops its
+            # chunk_len with it, like the rest of the step request
+            if impl == "fused_step":
+                chunk_len = None
             impl = "fused_stack_sharded"
         else:
             raise ValueError(
@@ -175,6 +191,30 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
             "placement='sharded' to place sub-stacks on mesh devices"
         )
     spec = get_backend(impl)
+
+    # -- step-chunk resolution ---------------------------------------------
+    if chunk_len is not None and not spec.chunked_step:
+        raise ValueError(
+            f"chunk_len only applies to chunked-step backends "
+            f"(impl='fused_step'); got impl={impl!r}"
+        )
+    if spec.chunked_step:
+        from repro.kernels.lstm_stack.step import MAX_STEP_UNROLL
+
+        if chunk_len is None:
+            # clamp the default so deep stacks stay under the kernel's
+            # sequential-cell ceiling (the explicit-value check below then
+            # holds for defaulted plans too — legality stays plan-time)
+            chunk_len = max(1, min(DEFAULT_CHUNK_LEN,
+                                   MAX_STEP_UNROLL // len(cfgs)))
+        if chunk_len < 1:
+            raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+        if chunk_len * len(cfgs) > MAX_STEP_UNROLL:
+            raise ValueError(
+                f"chunk_len={chunk_len} x {len(cfgs)} layers exceeds the "
+                f"step kernel's {MAX_STEP_UNROLL} sequential-cell ceiling; "
+                "long chunks belong to the wavefront kernel"
+            )
 
     # -- weight-storage resolution (ONCE, not per traced call) -------------
     if weight_dtype is not None:
@@ -215,23 +255,27 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
     return StackPlan(
         cfgs=cfgs, impl=impl, weight_dtype=resolved_wd,
         placement=placement, mesh=mesh, n_chunks=n_chunks,
+        chunk_len=chunk_len,
     )
 
 
 def plan_stack(cfgs: Sequence[LstmConfig], impl: str = "split", *,
                weight_dtype: str | None = None, placement: str = "local",
-               mesh=None, n_chunks: int | None = None) -> StackPlan:
+               mesh=None, n_chunks: int | None = None,
+               chunk_len: int | None = None) -> StackPlan:
     """Resolve an execution plan for a stacked LSTM segment — exactly once.
 
     All impl-dependent legality lives here (plan time), not at call time:
     unknown backends, quantized storage on a non-fused backend, storage
-    wider than compute, heterogeneous fused segments, and non-divisible
-    sharded stage splits all raise *now*.  Plans are cached on their full
-    argument tuple, so hot paths (including the deprecated
+    wider than compute, heterogeneous fused segments, non-divisible
+    sharded stage splits, and a ``chunk_len`` on a backend without the
+    chunked-step capability all raise *now*.  Plans are cached on their
+    full argument tuple, so hot paths (including the deprecated
     ``lstm_stack_forward`` shim) re-resolve nothing.
     """
     return _plan_stack_cached(
-        tuple(cfgs), impl, weight_dtype, placement, mesh, n_chunks
+        tuple(cfgs), impl, weight_dtype, placement, mesh, n_chunks,
+        chunk_len,
     )
 
 
@@ -247,13 +291,16 @@ class StackExecutor:
     donate state without re-tracing.  Construct via ``StackPlan.bind``.
     """
 
-    __slots__ = ("plan", "params", "packed")
+    __slots__ = ("plan", "params", "packed", "_jit_steps")
 
     def __init__(self, plan: StackPlan, params: tuple,
                  packed: Any = None) -> None:
         self.plan = plan
         self.params = params
         self.packed = packed
+        # bind-time cache for the jitted step callables (see ``step_jit``);
+        # never a pytree leaf — rebuilt lazily after unflatten
+        self._jit_steps: dict[bool, Any] = {}
 
     # -- full-sequence execution -------------------------------------------
 
@@ -313,6 +360,34 @@ class StackExecutor:
             return spec.step(self, xs, state)
         _, finals = spec.forward(self, xs, state)
         return finals
+
+    def step_jit(self, donate: bool = True):
+        """The executor's own jitted ``step`` — cached at the executor, so a
+        serving engine binds once and calls a plain ``fn(xs, state)``.
+
+        Routing ``step`` through a jit that takes the *executor* as a pytree
+        argument pays a per-call flatten/hash of the whole plan + every
+        param/pack leaf — measured at ~1.46x a direct kernel call
+        (``exec.dispatch_ratio``).  Here the bound arrays are closed over
+        (jit constants), so per-call dispatch flattens only ``(xs, state)``
+        — the same cost as jitting the kernel call by hand
+        (``exec.step_dispatch_ratio`` gates this at <= 1.10x).
+
+        ``donate=True`` donates the state argument: with the kernel's
+        h0->h_f/c0->c_f aliasing, steady-state streaming allocates no new
+        state.  Callables are cached per ``donate`` flag; a params swap
+        goes through ``update_params``/``bind``, which returns a *new*
+        executor with an empty cache — stale weights can never be served.
+        """
+        self._require_stateful()
+        fn = self._jit_steps.get(donate)
+        if fn is None:
+            fn = jax.jit(
+                lambda xs, state: self.step(xs, state),
+                donate_argnums=(1,) if donate else (),
+            )
+            self._jit_steps[donate] = fn
+        return fn
 
     def last_hidden(self, state) -> jax.Array:
         """Last layer's current hidden at real width — the latent the GW
@@ -427,6 +502,24 @@ def _step_fused(ex: StackExecutor, xs, state):
     return h_f, c_f
 
 
+def _step_chunked(ex: StackExecutor, xs, state):
+    """fused_step's hot path: short chunks hit the step kernel (one grid
+    step, in-kernel layer-0 mvm_x, no time-major transpose); anything
+    longer than the plan's chunk_len falls back to the wavefront kernel.
+    The T comparison is static (shape), so each jit trace contains exactly
+    one kernel — no runtime branch."""
+    if xs.shape[1] > ex.plan.chunk_len:
+        return _step_fused(ex, xs, state)
+    from repro.kernels.lstm_stack.step import lstm_stack_step_op
+
+    h, c = state
+    _, h_f, c_f = lstm_stack_step_op(
+        ex.packed.pad_input(xs), ex.packed.stacked, h, c,
+        acts=ex.packed.acts, weight_dtype=ex.packed.weight_dtype,
+    )
+    return h_f, c_f
+
+
 def _step_sharded(ex: StackExecutor, xs, state):
     h, c = state
     _, h_f, c_f = _sharded_call(ex, xs, h, c)
@@ -465,6 +558,10 @@ register_backend(BackendSpec(
 register_backend(BackendSpec(
     name="fused_stack", packs=True, quantized=True, kernel_acts=True,
     state_layout="packed", forward=_forward_fused, step=_step_fused))
+register_backend(BackendSpec(
+    name="fused_step", packs=True, quantized=True, kernel_acts=True,
+    state_layout="packed", chunked_step=True,
+    forward=_forward_fused, step=_step_chunked))
 register_backend(BackendSpec(
     name="fused_stack_sharded", packs=True, quantized=True,
     kernel_acts=True, sharded=True, state_layout="packed",

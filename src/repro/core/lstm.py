@@ -186,7 +186,8 @@ def lstm_stack_forward(
     full argument tuple, so legality resolution and the ``weight_dtype``
     config rewrite are NOT re-done per traced call) and keeps the original
     call-time surface alive for existing callers and tests: impl in
-    {naive, split, kernel, fused_stack, fused_stack_sharded, wavefront},
+    {naive, split, kernel, fused_stack, fused_step, fused_stack_sharded,
+    wavefront},
     ``initial_state``/finals as per-layer ``[(h, c), ...]`` at real layer
     widths, optional pre-built ``packed`` (fused path only), and a
     ``weight_dtype`` storage override ("fp32" | "bf16" | "int8") that is

@@ -7,3 +7,4 @@ from .ops import (  # noqa: F401
     pack_stack_cached,
 )
 from .ref import lstm_stack_ref  # noqa: F401
+from .step import lstm_stack_step, lstm_stack_step_op  # noqa: F401

@@ -65,7 +65,7 @@ def _lstm_stack_kernel(
     wx_ref,    # (L, W, 4W)   VMEM-resident input projections (slot 0 unused)
     wh_ref,    # (L, W, 4W)   VMEM-resident recurrent weights
     b_ref,     # (L, 1, 4W)   fp32 biases (slot 0 folded into the xw stream)
-    scale_ref,  # (L, 2) fp32 SMEM per-layer [s_x, s_h] dequant scales
+    scale_ref,  # (L, 2, 4) fp32 SMEM per-gate [s_x, s_h] dequant scales
     h0_ref,    # (L, Bb, W)   initial hidden per layer
     c0_ref,    # (L, Bb, W)   initial cell per layer (fp32)
     hs_ref,    # out: (Bb, W) last layer's hidden, block at (t=s-L+1, b)
@@ -108,28 +108,41 @@ def _lstm_stack_kernel(
         @pl.when((s >= layer) & (s < layer + t_len))
         def _step(layer=layer):
             if layer == 0:
-                gx = xw_ref[...]  # streamed mvm_x (+bias), computed outside
+                # streamed mvm_x: scales + bias already applied outside
+                gx = xw_ref[...]
             else:
                 gx = jnp.dot(
                     h_scr[layer - 1],
                     load_w(wx_ref, layer),
                     preferred_element_type=jnp.float32,
                 )
-                if quantized:  # scale the fp32 accumulator: (h @ q) * s_x
-                    gx = gx * scale_ref[layer, 0]
-                gx = gx + b_ref[layer]
             hh = jnp.dot(
                 h_scr[layer],
                 load_w(wh_ref, layer),
                 preferred_element_type=jnp.float32,
             )
-            if quantized:
-                hh = hh * scale_ref[layer, 1]
-            gates = gx + hh
-            i = sigma(gates[:, 0 * width : 1 * width])
-            f = sigma(gates[:, 1 * width : 2 * width])
-            g = tanh(gates[:, 2 * width : 3 * width])
-            o = sigma(gates[:, 3 * width : 4 * width])
+            # per-gate tail: each 4W-slice scales its own fp32 accumulator
+            # ((h @ q) * s, per gate) BEFORE the gate sum — layers whose
+            # gates span very different ranges get per-gate int8 grids.
+            # Slicing first commutes with the elementwise scale/bias ops,
+            # so uniform (broadcast) scales reproduce the historical
+            # whole-accumulator order bit-for-bit.
+            pre = []
+            for g in range(4):
+                sl = slice(g * width, (g + 1) * width)
+                gxg = gx[:, sl]
+                if layer > 0:
+                    if quantized:
+                        gxg = gxg * scale_ref[layer, 0, g]
+                    gxg = gxg + b_ref[layer][:, sl]
+                hhg = hh[:, sl]
+                if quantized:
+                    hhg = hhg * scale_ref[layer, 1, g]
+                pre.append(gxg + hhg)
+            i = sigma(pre[0])
+            f = sigma(pre[1])
+            g = tanh(pre[2])
+            o = sigma(pre[3])
             c = f * c_scr[layer] + i * g      # fp32 tail (paper: 32-bit cell)
             h = (o * tanh(c)).astype(h_scr.dtype)
             c_scr[layer] = c
@@ -151,7 +164,7 @@ def lstm_stack(
     h0: jax.Array,     # (L, B, W)
     c0: jax.Array,     # (L, B, W) fp32
     *,
-    scales: jax.Array | None = None,  # (L, 2) fp32 [s_x, s_h], int8 only
+    scales: jax.Array | None = None,  # (L, 2) or (L, 2, 4) fp32, int8 only
     block_b: int | None = None,
     sigma: Callable = jax.nn.sigmoid,
     tanh: Callable = jnp.tanh,
@@ -164,10 +177,13 @@ def lstm_stack(
 
     Weight storage may be narrower than the compute dtype: bf16 weights are
     cast up tile-by-tile into the MXU; int8 weights additionally require
-    ``scales`` — per-layer symmetric dequant factors, kept in SMEM and
-    applied to the fp32 matmul accumulator (``(h @ q) * s``), so the
-    VMEM-resident weight arrays stay at 1 byte/element for the whole call.
-    The cell state ``c`` is carried fp32 regardless (paper Sec. IV-A).
+    ``scales`` — symmetric dequant factors, kept in SMEM and applied to the
+    fp32 matmul accumulator (``(h @ q) * s``), so the VMEM-resident weight
+    arrays stay at 1 byte/element for the whole call.  Scales are per-gate
+    ``(L, 2, 4)`` — one grid per [i|f|g|o] slice of each matrix; legacy
+    per-matrix ``(L, 2)`` packs broadcast to the same shape (bit-for-bit
+    with their historical whole-accumulator scaling).  The cell state ``c``
+    is carried fp32 regardless (paper Sec. IV-A).
 
     ``alias_state`` maps ``h0 -> h_final`` and ``c0 -> c_final`` via
     ``input_output_aliases``: the kernel may write the final state in place
@@ -193,8 +209,12 @@ def lstm_stack(
     assert batch % block_b == 0, (batch, block_b)
     n_b = batch // block_b
     n_s = t_len + n_layers - 1
-    if not quantized:  # uniform operand list; ones are never read in-kernel
-        scales = jnp.ones((n_layers, 2), jnp.float32)
+    if quantized:
+        if scales.ndim == 2:  # legacy per-matrix pack: broadcast per gate
+            scales = jnp.broadcast_to(scales[:, :, None], (n_layers, 2, 4))
+        assert scales.shape == (n_layers, 2, 4), scales.shape
+    else:  # uniform operand list; ones are never read in-kernel
+        scales = jnp.ones((n_layers, 2, 4), jnp.float32)
 
     kernel = functools.partial(
         _lstm_stack_kernel,
@@ -222,9 +242,10 @@ def lstm_stack(
         pl.BlockSpec((n_layers, width, w4), lambda b, s: (0, 0, 0)),
         pl.BlockSpec((n_layers, width, w4), lambda b, s: (0, 0, 0)),
         pl.BlockSpec((n_layers, 1, w4), lambda b, s: (0, 0, 0)),
-        # dequant scales: L*2 scalars, SMEM-resident (scalar loads, no VPU lane)
+        # dequant scales: L*2*4 scalars, SMEM-resident (scalar loads, no VPU
+        # lane traffic)
         pl.BlockSpec(
-            (n_layers, 2), lambda b, s: (0, 0), memory_space=pltpu.SMEM
+            (n_layers, 2, 4), lambda b, s: (0, 0, 0), memory_space=pltpu.SMEM
         ),
         pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),
         pl.BlockSpec((n_layers, block_b, width), lambda b, s: (0, b, 0)),

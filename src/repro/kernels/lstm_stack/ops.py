@@ -59,6 +59,30 @@ from .lstm_stack import lstm_stack
 _WEIGHT_JNP = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 
 
+def normalize_scales(scales: jax.Array, n_layers: int) -> jax.Array:
+    """Canonical per-gate ``(L, 2, 4)`` dequant scales.
+
+    New packs quantize each [i|f|g|o] 4W-slice on its own grid; legacy
+    per-matrix ``(L, 2)`` packs broadcast — multiplying every gate's
+    accumulator by the same scalar reproduces the historical
+    whole-accumulator scaling bit-for-bit.
+    """
+    if scales.ndim == 2:
+        scales = scales[:, :, None]
+    return jnp.broadcast_to(scales, (n_layers, 2, 4)).astype(jnp.float32)
+
+
+def apply_gate_scales(x: jax.Array, gate_scales: jax.Array) -> jax.Array:
+    """Scale a ``(..., 4W)`` gate accumulator per gate. ``gate_scales``: (4,).
+
+    Elementwise this multiplies gate ``g``'s lanes by ``gate_scales[g]`` —
+    with four equal scales it is bit-for-bit the old whole-tensor multiply.
+    """
+    lead, w4 = x.shape[:-1], x.shape[-1]
+    x = x.reshape(*lead, 4, w4 // 4) * gate_scales[:, None]
+    return x.reshape(*lead, w4)
+
+
 def resolve_weight_dtype(cfg, override: str | None = None) -> str:
     """Canonical weight-storage dtype for a layer config.
 
@@ -168,7 +192,8 @@ def lstm_stack_op(
         w0 = w0.astype(xs_p.dtype)
     xw0 = (xs_p @ w0).astype(jnp.float32)
     if quantized:
-        xw0 = xw0 * stacked["scales"][0, 0]
+        scales = normalize_scales(stacked["scales"], stacked["w_h"].shape[0])
+        xw0 = apply_gate_scales(xw0, scales[0, 0])
     xw0 = xw0 + stacked["b"][0]
     xw0 = jnp.swapaxes(xw0, 0, 1)  # (T, Bp, 4W)
 
@@ -296,11 +321,15 @@ def pack_stack(
 
     ``weight_dtype`` picks the VMEM storage for ``W_x``/``W_h`` (default:
     the cfgs' ``weight_dtype``, falling back to native storage at the
-    compute dtype).  int8 packs quantize each layer's matrices to a
-    symmetric power-of-two grid (``core.quant.int8_symmetric_quant`` — the
-    ``fixed_quant`` <8, f> grid that covers the layer's range) and carry the
-    per-layer ``[s_x, s_h]`` scales in ``stacked["scales"]``; biases and the
-    cell carry stay fp32 (paper Sec. IV-A).
+    compute dtype).  int8 packs quantize each layer's matrices **per
+    gate**: every [i|f|g|o] 4W-slice gets its own symmetric power-of-two
+    grid (``core.quant.int8_symmetric_quant`` — the ``fixed_quant`` <8, f>
+    grid that covers that gate's range), so a layer whose forget gate spans
+    a very different range from its modulation gate no longer wastes grid
+    resolution on the wider one.  The ``(L, 2, 4)`` ``[s_x, s_h]`` scales
+    ride in ``stacked["scales"]`` (kernels keep them in SMEM; legacy
+    ``(L, 2)`` packs stay accepted via broadcast); biases and the cell
+    carry stay fp32 (paper Sec. IV-A).
     """
     from repro.core.pipeline import pack_lstm_stack
 
@@ -315,11 +344,16 @@ def pack_stack(
         d_target=width_p, h_target=width_p,
     )
     if wd == "int8":
-        # per-layer symmetric quantization over the lane-padded matrices
-        # (zero padding cannot raise a layer's amax, so padded lanes do not
-        # distort real lanes' scales)
-        q_x, s_x = jax.vmap(int8_symmetric_quant)(stacked["w_x"])
-        q_h, s_h = jax.vmap(int8_symmetric_quant)(stacked["w_h"])
+        # per-layer, per-GATE symmetric quantization over the lane-padded
+        # matrices (zero padding cannot raise a gate's amax, so padded
+        # lanes do not distort real lanes' scales)
+        def quant_gates(w):  # (W, 4W) -> (codes (W, 4W), scales (4,))
+            per_gate = jnp.moveaxis(w.reshape(w.shape[0], 4, -1), 1, 0)
+            q, s = jax.vmap(int8_symmetric_quant)(per_gate)
+            return jnp.moveaxis(q, 0, 1).reshape(w.shape), s
+
+        q_x, s_x = jax.vmap(quant_gates)(stacked["w_x"])
+        q_h, s_h = jax.vmap(quant_gates)(stacked["w_h"])
         stacked = {
             "w_x": q_x, "w_h": q_h, "b": stacked["b"],
             "scales": jnp.stack([s_x, s_h], axis=1).astype(jnp.float32),

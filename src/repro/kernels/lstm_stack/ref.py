@@ -6,9 +6,13 @@ wavefront kernel reorders (but must not renumber: tests assert equality).
 
 Quantized packs are handled with the kernel's exact operation order:
 weights are cast (not dequantized) to the compute dtype for the matmul and
-the per-layer scale multiplies the fp32 *accumulator* — ``(h @ q) * s``,
-not ``h @ (q * s)``.  The two differ in rounding, so the oracle must mirror
-the kernel's choice for the equivalence tests to hold tightly.
+the dequant scale multiplies the fp32 *accumulator* — ``(h @ q) * s``,
+not ``h @ (q * s)``.  Scales are per-gate: each [i|f|g|o] 4W-slice of an
+accumulator is scaled by its own grid's factor before the gate sum (legacy
+per-matrix ``(L, 2)`` scales broadcast, which is elementwise identical to
+the historical whole-accumulator multiply).  The two orders differ in
+rounding, so the oracle must mirror the kernel's choice for the
+equivalence tests to hold tightly.
 """
 
 from __future__ import annotations
@@ -27,16 +31,24 @@ def lstm_stack_ref(
     h0: jax.Array,    # (L, B, W)
     c0: jax.Array,    # (L, B, W) fp32
     *,
-    scales: jax.Array | None = None,  # (L, 2) fp32 [s_x, s_h], int8 packs
+    scales: jax.Array | None = None,  # (L, 2) or (L, 2, 4) fp32, int8 packs
     sigma: Callable = jax.nn.sigmoid,
     tanh: Callable = jnp.tanh,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     n_layers, width = w_h.shape[0], w_h.shape[1]
     compute = h0.dtype
+    if scales is not None:
+        from .ops import normalize_scales
+
+        scales = normalize_scales(scales, n_layers)
 
     def matmul_w(x, w, scale):
         out = (x @ w.astype(compute)).astype(jnp.float32)
-        return out if scales is None else out * scale
+        if scales is None:
+            return out
+        from .ops import apply_gate_scales
+
+        return apply_gate_scales(out, scale)
 
     def layer_scan(xw, wh, s_h, h_init, c_init):
         def step(carry, xw_t):

@@ -6,15 +6,21 @@ LM mode (batched prefill + decode):
         --prompt-len 16 --new-tokens 16
 
 Anomaly mode (the paper's use case — persistent-state B=1 streaming on the
-fused stack, weights pre-packed at engine init, state donated per chunk):
+fused stack, weights pre-packed at engine init, state donated per chunk;
+short chunks ride the ``fused_step`` low-latency step kernel):
 
     PYTHONPATH=src python -m repro.launch.serve --mode anomaly \
         --gw-model gw_small --windows 50 --chunk 25 --weight-dtype int8
 
 ``--weight-dtype {fp32,bf16,int8}`` picks the fused stack's VMEM weight
-storage (int8: per-layer symmetric scales in SMEM, fp32 cell carry kept).
+storage (int8: per-gate symmetric scales in SMEM, fp32 cell carry kept).
 ``--placement {local,sharded}`` routes through ``plan_stack``: sharded
 places fused sub-stacks on mesh devices (``fused_stack_sharded``).
+``--chunk-len N`` overrides the plan's step-kernel threshold (chunks with
+T <= N run the one-grid-step kernel instead of the wavefront).
+``--streams N`` serves N *independent* streams through the multi-stream
+coalescer: every chunk advances all N with ONE gathered B=N step call
+(``push_many``) instead of N B=1 pushes.
 ``--plan-only`` prints the resolved execution plan for both segments
 (backend, placement, weight dtype, pack bytes) and exits without scoring —
 the dryrun-style smoke for serving configs.
@@ -59,6 +65,14 @@ def main():
                     help="fused-stack stage placement (anomaly mode): "
                          "'sharded' runs fused sub-stacks on mesh devices "
                          "with ppermute hand-off (fused_stack_sharded)")
+    ap.add_argument("--chunk-len", type=int, default=None,
+                    help="step-kernel threshold: pushes with T <= chunk_len "
+                         "run the low-latency step kernel (default: the "
+                         "plan's DEFAULT_CHUNK_LEN)")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="number of independent streams; > 1 coalesces "
+                         "them into one B=N step call per chunk "
+                         "(push_many)")
     ap.add_argument("--plan-only", action="store_true",
                     help="resolve and print the execution plan (backend, "
                          "weight dtype, pack bytes) without scoring")
@@ -108,29 +122,50 @@ def serve_anomaly(args):
     ds = GwDataset(GwDataConfig(timesteps=cfg.timesteps))
 
     engine = StreamingAnomalyEngine(
-        params, cfg, batch=1, placement=args.placement
+        params, cfg, batch=1, placement=args.placement,
+        chunk_len=args.chunk_len,
     )
     wd = engine._packed_enc.weight_dtype if engine._packed_enc else "n/a"
     print(f"{args.gw_model}: impl={engine.effective_impl} "
-          f"(requested fused_stack), placement={args.placement}, "
-          f"weights={wd}, window={engine.window}")
+          f"(requested fused_step), placement={args.placement}, "
+          f"weights={wd}, window={engine.window}, "
+          f"chunk_len={engine._exec_enc.plan.chunk_len}")
     thr = engine.calibrate(ds.background(256), fpr=args.fpr)
     print(f"calibrated threshold ({args.fpr:.0%} FPR): {thr:.4f}")
 
     chunk = args.chunk or cfg.timesteps
     rng = np.random.default_rng(1)
     lat, flagged = [], 0
-    for _ in range(args.windows):
-        w = ds.events(1) if rng.random() < 0.1 else ds.background(1)
-        t0 = time.perf_counter()
-        scores = []
-        for pos in range(0, cfg.timesteps, chunk):
-            scores += engine.push(w[:, pos : pos + chunk])
-        lat.append(time.perf_counter() - t0)
-        flagged += int(scores[0][0] > thr)
+    if args.streams > 1:
+        # the fleet shape: N independent streams, ONE coalesced step call
+        # per chunk (push_many gathers their states into the batch axis)
+        ids = [f"stream-{i}" for i in range(args.streams)]
+        for _ in range(args.windows):
+            w = np.concatenate([
+                ds.events(1) if rng.random() < 0.1 else ds.background(1)
+                for _ in ids
+            ])
+            t0 = time.perf_counter()
+            scores = {sid: [] for sid in ids}
+            for pos in range(0, cfg.timesteps, chunk):
+                res = engine.push_many(ids, w[:, pos : pos + chunk])
+                for sid in ids:
+                    scores[sid] += res[sid]
+            lat.append(time.perf_counter() - t0)
+            flagged += sum(int(scores[sid][0][0] > thr) for sid in ids)
+    else:
+        for _ in range(args.windows):
+            w = ds.events(1) if rng.random() < 0.1 else ds.background(1)
+            t0 = time.perf_counter()
+            scores = []
+            for pos in range(0, cfg.timesteps, chunk):
+                scores += engine.push(w[:, pos : pos + chunk])
+            lat.append(time.perf_counter() - t0)
+            flagged += int(scores[0][0] > thr)
     warmup = min(5, len(lat) - 1)  # keep at least one sample
     lat_us = np.asarray(lat[warmup:]) * 1e6
-    print(f"{args.windows} windows ({chunk}-sample chunks): "
+    tag = f", {args.streams} coalesced streams" if args.streams > 1 else ""
+    print(f"{args.windows} windows ({chunk}-sample chunks{tag}): "
           f"{flagged} flagged; latency p50={np.percentile(lat_us, 50):.0f}us "
           f"p99={np.percentile(lat_us, 99):.0f}us on this host")
 
@@ -145,14 +180,15 @@ def print_plan(args, params, cfg) -> None:
     from repro.core.backends import resolve_impl
     from repro.core.autoencoder import segment_executors
 
-    cfg, effective, reason = resolve_impl(cfg, "fused_stack")
+    cfg, effective, reason = resolve_impl(cfg, "fused_step")
     if reason is not None:
         print(f"note: {reason}")
     exec_enc, exec_dec = segment_executors(
-        params, cfg, impl=effective, placement=args.placement
+        params, cfg, impl=effective, placement=args.placement,
+        chunk_len=args.chunk_len,
     )
     print(f"{args.gw_model}: resolved serving plan "
-          f"(window={cfg.timesteps}, requested fused_stack)")
+          f"(window={cfg.timesteps}, requested fused_step)")
     for name, ex in (("encoder", exec_enc), ("decoder", exec_dec)):
         print(f"  {name}: {ex.plan.describe()} "
               f"pack_bytes={ex.packed_bytes}")

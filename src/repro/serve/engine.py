@@ -122,6 +122,18 @@ class AnomalyStreamEngine:
         return self.score(windows) > self.threshold
 
 
+@dataclass
+class _StreamSlot:
+    """One named stream's resident state in the coalescing pool: its
+    encoder ``(h, c)`` at B=1, the chunks of its partially-filled window,
+    and the fill count.  Plain host-side bookkeeping — the arrays are the
+    same backend-native state layout ``push`` carries."""
+
+    state: object
+    chunks: list = field(default_factory=list)
+    filled: int = 0
+
+
 class StreamingAnomalyEngine:
     """Persistent-state chunked scoring: the paper's continuous-stream mode.
 
@@ -144,6 +156,16 @@ class StreamingAnomalyEngine:
       state;
     * **B parallel streams** — ``batch`` independent streams advance in
       lock-step (the paper's multi-detector case); scores come back (B,).
+    * **coalesced independent streams** — ``push_many(stream_ids, chunks)``
+      keeps a pool of named B=1 streams at *independent* window fill
+      levels and advances any subset with one gathered B=N step call
+      (bit-equal to sequential pushes; the fleet-serving shape for
+      millions of concurrent streams).
+
+    By default the engine plans ``impl="fused_step"``: chunks up to the
+    plan's ``chunk_len`` run the low-latency step kernel (layer-0
+    projection in-kernel, one grid step), longer pushes the wavefront
+    kernel — both on the same pre-packed weights and resident state.
 
     ``carry_state=True`` carries encoder state across window boundaries
     (continuous monitoring with no pipeline re-fill); the default resets
@@ -157,8 +179,9 @@ class StreamingAnomalyEngine:
         *,
         batch: int = 1,
         window: int | None = None,
-        impl: str | None = "fused_stack",
+        impl: str | None = "fused_step",
         placement: str = "local",
+        chunk_len: int | None = None,
         carry_state: bool = False,
         donate: bool = True,
         threshold: float = float("inf"),
@@ -173,6 +196,7 @@ class StreamingAnomalyEngine:
         self._params = params
         self.batch = batch
         self.placement = placement
+        self.chunk_len = chunk_len
         self.window = int(window or self.cfg.timesteps)
         self.carry_state = carry_state
         self.threshold = threshold
@@ -185,21 +209,50 @@ class StreamingAnomalyEngine:
     def _build(self) -> None:
         """Plan + bind both segments; everything else is jit plumbing.
 
-        The executors are pytrees (weights/packs are leaves, the plan is
-        static), so they ride through the jitted steps as arguments — a
-        params swap re-binds and re-traces nothing.
+        The per-push encoder step is the executor's *bound* jitted callable
+        (``StackExecutor.step_jit``): the weights are jit constants, so
+        per-push dispatch flattens only (chunk, state) — routing the
+        executor through the jit as a pytree argument instead costs ~1.46x
+        a direct kernel call (``exec.step_dispatch_ratio`` gates the bound
+        path at <= 1.10x).  The scoring paths still take executors as
+        arguments (they run once per window, not per push).
         """
         cfg = self.cfg
+        from repro.core.backends import get_backend
+
+        chunk_len = self.chunk_len
+        if (
+            chunk_len is not None
+            and self.fallback_reason is not None
+            and not get_backend(self.effective_impl).chunked_step
+        ):
+            # the impl request already fell back gracefully (logged); the
+            # chunk_len that came with it falls back the same way instead
+            # of turning the fallback into a plan-time crash.  With NO
+            # fallback in play (the caller explicitly picked a non-chunked
+            # impl AND a chunk_len) the value passes through and plan_stack
+            # raises its usual plan-time error.
+            logger.warning(
+                "StreamingAnomalyEngine: ignoring chunk_len=%d — resolved "
+                "impl=%r has no chunked-step capability", chunk_len,
+                self.effective_impl,
+            )
+            chunk_len = None
         self._exec_enc, self._exec_dec = segment_executors(
             self.params, cfg,
             impl=self.effective_impl, placement=self.placement,
+            chunk_len=chunk_len,
         )
-
-        def enc_step(ex, state, chunk):
-            return ex.step(chunk, state)
-
-        self._enc_step = jax.jit(
-            enc_step, donate_argnums=(1,) if self._donate else ()
+        self._enc_step = self._exec_enc.step_jit(donate=self._donate)
+        # zero state through a cached jit: a window completion resets state
+        # on the hot path, and two eager jnp.zeros dispatches per window
+        # cost more than the compiled call that allocates both at once
+        # (fresh buffers every call — donation-safe)
+        self._zero_state_jit = jax.jit(
+            lambda: self._exec_enc.zero_state(self.batch)
+        )
+        self._zero_state1_jit = jax.jit(
+            lambda: self._exec_enc.zero_state(1)
         )
         self._score_window = jax.jit(
             lambda params, ex_dec, latent, x: reconstruction_error_from_latent(
@@ -222,15 +275,17 @@ class StreamingAnomalyEngine:
         return self._exec_dec.packed
 
     def _zero_state(self):
-        return self._exec_enc.zero_state(self.batch)
+        return self._zero_state_jit()
 
     # -- state lifecycle -----------------------------------------------------
 
     def reset(self) -> None:
-        """Zero the encoder state and drop any partially-filled window."""
+        """Zero the encoder state, drop any partially-filled window, and
+        clear the named-stream pool (``push_many``)."""
         self._state = self._zero_state()
         self._chunks: list[np.ndarray] = []
         self._filled = 0
+        self._streams: dict = {}
 
     @property
     def params(self) -> dict:
@@ -247,8 +302,11 @@ class StreamingAnomalyEngine:
         (the identity cache misses on the new leaves; the executor's
         lifecycle API evicts its superseded pack), reset stream state.
 
-        The executors are jit *arguments*, so no jitted step is rebuilt or
-        re-traced — only the leaves change.
+        The scoring paths take executors as jit *arguments*, so they
+        re-trace nothing.  The per-push encoder step is the new executor's
+        *bound* jit (weights are constants — that is what keeps per-push
+        dispatch at direct-call cost), so the first push after a swap pays
+        one re-trace; steady-state pushes are untouched.
         """
         from repro.core.autoencoder import decoder_layers, encoder_layers
 
@@ -257,6 +315,7 @@ class StreamingAnomalyEngine:
         dec_p, _ = decoder_layers(params, self.cfg)
         self._exec_enc = self._exec_enc.update_params(enc_p)
         self._exec_dec = self._exec_dec.update_params(dec_p)
+        self._enc_step = self._exec_enc.step_jit(donate=self._donate)
         self.reset()
 
     @property
@@ -301,7 +360,122 @@ class StreamingAnomalyEngine:
         return scores
 
     def _advance(self, piece: jax.Array) -> None:
-        self._state = self._enc_step(self._exec_enc, self._state, piece)
+        self._state = self._enc_step(piece, self._state)
+
+    # -- multi-stream coalescing ---------------------------------------------
+
+    @property
+    def stream_ids(self) -> tuple:
+        """Streams currently resident in the ``push_many`` pool."""
+        return tuple(self._streams)
+
+    def drop_stream(self, stream_id) -> None:
+        """Release one named stream's state and partial window."""
+        self._streams.pop(stream_id, None)
+
+    def _state_batch_axis(self) -> int:
+        # packed layout carries (L, B, W) pairs; layers layout [(B, H), ...]
+        return 1 if self._exec_enc.plan.backend.state_layout == "packed" else 0
+
+    def _stream_slot(self, stream_id) -> _StreamSlot:
+        slot = self._streams.get(stream_id)
+        if slot is None:
+            slot = _StreamSlot(state=self._zero_state1_jit())
+            self._streams[stream_id] = slot
+        return slot
+
+    def push_many(self, stream_ids, chunks: np.ndarray) -> dict:
+        """Advance N *independent* B=1 streams with ONE coalesced step call.
+
+        ``chunks``: (N, t, input_dim), row i belonging to
+        ``stream_ids[i]``.  The N streams' resident ``(h, c)`` are gathered
+        into the batch axis of a single fused step call and scattered back,
+        turning N B=1 pushes into one B=N call.  On the step path (pieces
+        up to the plan's ``chunk_len``) the kernel pads every batch to the
+        same sublane-rounded program shape, so a pool of up to 8 streams
+        is **bit-equal** to N sequential single-stream pushes
+        (regression-tested and benchmark-gated over 8 streams); larger
+        pools and wavefront-kernel fallbacks agree to fp tolerance.
+        Streams are created on first use (zero state, empty window) and
+        may sit at different window fill levels: the chunk is internally
+        split at every stream's window boundary, and streams completing a
+        window in the same piece are scored by one batched decode.
+
+        Returns ``{stream_id: [scores...]}`` with one ``(1,)`` score array
+        per window the stream completed during this call (empty list while
+        its window is still filling).  Requires ``batch == 1`` — the
+        lock-step ``push`` axis and the coalescing pool do not mix.
+        """
+        if self.batch != 1:
+            raise ValueError(
+                "push_many coalesces independent B=1 streams; construct the "
+                f"engine with batch=1 (got batch={self.batch})"
+            )
+        ids = list(stream_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError("push_many: duplicate stream ids in one call")
+        chunks = np.asarray(chunks)
+        if (
+            chunks.ndim != 3
+            or chunks.shape[0] != len(ids)
+            or chunks.shape[2] != self.cfg.input_dim
+        ):
+            raise ValueError(
+                f"chunks must be (n_streams={len(ids)}, t, "
+                f"{self.cfg.input_dim}), got {chunks.shape}"
+            )
+        slots = [self._stream_slot(sid) for sid in ids]
+        out: dict = {sid: [] for sid in ids}
+        ax = self._state_batch_axis()
+        pos, t_total = 0, chunks.shape[1]
+        while pos < t_total:
+            take = min(
+                t_total - pos, min(self.window - s.filled for s in slots)
+            )
+            piece = np.array(chunks[:, pos : pos + take])
+            # gather: N resident states -> one batch axis, one step call
+            batched = jax.tree_util.tree_map(
+                lambda *leaves: jnp.concatenate(leaves, axis=ax),
+                *[s.state for s in slots],
+            )
+            new_state = self._enc_step(jnp.asarray(piece), batched)
+            for i, slot in enumerate(slots):
+                slot.state = jax.tree_util.tree_map(
+                    lambda x: jax.lax.slice_in_dim(x, i, i + 1, axis=ax),
+                    new_state,
+                )
+                slot.chunks.append(piece[i : i + 1])
+                slot.filled += take
+            pos += take
+            done = [
+                (sid, s) for sid, s in zip(ids, slots)
+                if s.filled == self.window
+            ]
+            if done:
+                for (sid, _), score in zip(
+                    done, self._finish_streams([s for _, s in done])
+                ):
+                    out[sid].append(score)
+        return out
+
+    def _finish_streams(self, slots: list) -> list[np.ndarray]:
+        """Score the streams that just completed a window — one batched
+        decode for the whole group (bit-equal to per-stream scoring: the
+        decode + MSE tail is row-independent)."""
+        latent = jnp.concatenate(
+            [self._exec_enc.last_hidden(s.state) for s in slots], axis=0
+        )
+        xs = jnp.asarray(np.concatenate(
+            [np.concatenate(s.chunks, axis=1) for s in slots], axis=0
+        ))
+        scores = np.asarray(
+            self._score_window(self.params, self._exec_dec, latent, xs)
+        )
+        for slot in slots:
+            slot.chunks, slot.filled = [], 0
+            if not self.carry_state:
+                slot.state = self._zero_state1_jit()
+        return [scores[i : i + 1] for i in range(len(slots))]
 
     def _latent(self) -> jax.Array:
         """Last encoder layer's current hidden — the RepeatVector input."""

@@ -74,24 +74,49 @@ class TestInt8Grid:
         assert not np.any(np.asarray(q))
 
     def test_pack_matches_fixed_quant_grid_bitforbit(self):
-        """Dequantized int8 pack == fixed_quant(w, 8, f) on the fp32 pack:
-        the packed serving path and the fixed-point accuracy-study path
-        share one quantization semantics (CPU, exact)."""
+        """Dequantized int8 pack == fixed_quant(w, 8, f) on the fp32 pack,
+        per GATE: every [i|f|g|o] 4W-slice carries its own power-of-two
+        grid, so the packed serving path and the fixed-point accuracy-study
+        path share one quantization semantics (CPU, exact)."""
         params, cfgs = _mk_stack(jax.random.PRNGKey(1), GW_NOMINAL_DIMS)
         ps32 = pack_stack(params, cfgs, weight_dtype="fp32")
         ps8 = pack_stack(params, cfgs, weight_dtype="int8")
         assert ps8.weight_dtype == "int8"
         assert ps8.stacked["w_x"].dtype == jnp.int8
         assert ps8.stacked["b"].dtype == ps32.stacked["b"].dtype  # bias fp32
+        assert ps8.stacked["scales"].shape == (len(cfgs), 2, 4)
+        w = ps8.width_p
         for layer in range(len(cfgs)):
             for mi, m in enumerate(("w_x", "w_h")):
-                scale = ps8.stacked["scales"][layer, mi]
-                frac_bits = int(-np.log2(float(scale)))
-                np.testing.assert_array_equal(
-                    np.asarray(int8_dequant(ps8.stacked[m][layer], scale)),
-                    np.asarray(
-                        fixed_quant(ps32.stacked[m][layer], 8, frac_bits)
-                    ),
+                for gate in range(4):
+                    sl = slice(gate * w, (gate + 1) * w)
+                    scale = ps8.stacked["scales"][layer, mi, gate]
+                    frac_bits = int(-np.log2(float(scale)))
+                    np.testing.assert_array_equal(
+                        np.asarray(
+                            int8_dequant(ps8.stacked[m][layer, :, sl], scale)
+                        ),
+                        np.asarray(
+                            fixed_quant(
+                                ps32.stacked[m][layer, :, sl], 8, frac_bits
+                            )
+                        ),
+                    )
+
+    def test_per_gate_grids_are_tighter_or_equal(self):
+        """A gate's grid never gets coarser than the per-matrix grid it
+        replaces: per-gate amax <= matrix amax, so per-gate f >= matrix f
+        (smaller scale = finer grid)."""
+        params, cfgs = _mk_stack(jax.random.PRNGKey(23), GW_NOMINAL_DIMS)
+        ps8 = pack_stack(params, cfgs, weight_dtype="int8")
+        ps32 = pack_stack(params, cfgs, weight_dtype="fp32")
+        for layer in range(len(cfgs)):
+            for mi, m in enumerate(("w_x", "w_h")):
+                q_m, s_m = int8_symmetric_quant(ps32.stacked[m][layer])
+                per_gate = np.asarray(ps8.stacked["scales"][layer, mi])
+                assert (per_gate <= float(s_m) + 1e-12).all()
+                assert (per_gate < float(s_m)).any() or np.allclose(
+                    per_gate, float(s_m)
                 )
 
     def test_packed_bytes_reduction(self):
@@ -287,19 +312,23 @@ class TestQuantPackCache:
 
     def test_int8_roundtrip_through_cache(self):
         """Cached pack's dequantized weights stay within one grid step of
-        the source params (pack -> unpack round-trip)."""
+        the source params (pack -> unpack round-trip), per gate."""
         params, cfgs32 = _mk_stack(jax.random.PRNGKey(20), [(3, 8), (8, 8)])
         cfgs8 = [dataclasses.replace(c, weight_dtype="int8") for c in cfgs32]
         ps = pack_stack_cached(params, cfgs8)
         for layer, (p, c) in enumerate(zip(params, cfgs32)):
             for mi, m in enumerate(("w_x", "w_h")):
-                scale = float(ps.stacked["scales"][layer, mi])
                 rows = p[m].shape[0]
-                deq = np.asarray(
-                    int8_dequant(ps.stacked[m][layer], scale)
-                ).reshape(ps.width_p, 4, ps.width_p)[:rows, :, : c.hidden]
                 src = np.asarray(p[m]).reshape(rows, 4, c.hidden)
-                assert np.max(np.abs(deq - src)) <= scale / 2 + 1e-12
+                codes = np.asarray(ps.stacked[m][layer]).reshape(
+                    ps.width_p, 4, ps.width_p
+                )[:rows, :, : c.hidden]
+                for gate in range(4):
+                    scale = float(ps.stacked["scales"][layer, mi, gate])
+                    deq = codes[:, gate].astype(np.float32) * scale
+                    assert np.max(np.abs(deq - src[:, gate])) <= (
+                        scale / 2 + 1e-12
+                    )
 
 
 class TestQuantServing:

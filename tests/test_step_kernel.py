@@ -1,0 +1,515 @@
+"""Low-latency step kernel + multi-stream coalescing (PR 5 serving path).
+
+Numerics contract under test (CPU interpret):
+
+* **T=1 is bit-for-bit** against the wavefront kernel on every weight
+  dtype (fp32/bf16/int8), batch size, and state — the serving-critical
+  sample-by-sample push performs the identical operations in the
+  identical order.
+* **T in 2..chunk_len tracks the wavefront kernel to ~1 ulp**: XLA CPU
+  emits each differently-shaped program's dot reductions independently,
+  so cross-program bitwise equality ends at T=1 (where both kernels run
+  straight-line cell code); splitting a chunk across *different* chunk
+  sizes moves results by the same ~1e-8.
+* **push_many == sequential pushes, bit-equal**: the coalescer splits
+  chunks at the identical window boundaries a sequential replay sees, so
+  the only difference is the batch dimension — and gathering N
+  independent B=1 streams into one B=N call is row-independent math.
+
+Plus plan-time routing (chunk_len capability, fallback to the wavefront
+kernel for long chunks, sharded degradation) and the bound jitted step.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autoencoder import AutoencoderConfig, init_autoencoder
+from repro.core.backends import DEFAULT_CHUNK_LEN, get_backend
+from repro.core.executor import plan_stack
+from repro.core.lstm import LstmConfig, init_lstm
+from repro.kernels.lstm_stack.ops import lstm_stack_op, pack_stack
+from repro.kernels.lstm_stack.step import lstm_stack_step_op
+from repro.serve.engine import StreamingAnomalyEngine
+
+GW_NOMINAL_DIMS = [(1, 32), (32, 8), (8, 8), (8, 32)]
+
+
+def _mk_stack(key, dims, **cfg_kw):
+    cfgs = [LstmConfig(in_dim=a, hidden=b, **cfg_kw) for a, b in dims]
+    keys = jax.random.split(key, len(dims))
+    return [init_lstm(k, c) for k, c in zip(keys, cfgs)], cfgs
+
+
+def _packed_inputs(dims, batch, t_len, seed=5, nonzero_state=True, **cfg_kw):
+    params, cfgs = _mk_stack(jax.random.PRNGKey(0), dims, **cfg_kw)
+    ps = pack_stack(params, cfgs)
+    xs = ps.pad_input(
+        jax.random.normal(jax.random.PRNGKey(seed), (batch, t_len, dims[0][0]))
+    )
+    h0, c0 = ps.zero_state(batch)
+    if nonzero_state:
+        h0 = h0 + jnp.asarray(0.25, h0.dtype)
+        c0 = c0 + 0.4
+    return ps, xs, h0, c0
+
+
+def _run_both(ps, xs, h0, c0):
+    kw = dict(acts=ps.acts, weight_dtype=ps.weight_dtype)
+    return (
+        lstm_stack_op(xs, ps.stacked, h0, c0, **kw),
+        lstm_stack_step_op(xs, ps.stacked, h0, c0, **kw),
+    )
+
+
+WEIGHT_CASES = [
+    pytest.param(dict(), id="fp32"),
+    pytest.param(dict(dtype=jnp.bfloat16, weight_dtype="bf16"), id="bf16"),
+    pytest.param(dict(weight_dtype="int8"), id="int8"),
+]
+
+
+def _tols(cfg_kw):
+    """Tolerance for ~1-ulp cross-program drift, at the compute dtype's
+    resolution (bf16 ulps are ~2^-8 relative)."""
+    if cfg_kw.get("dtype") == jnp.bfloat16:
+        return 2e-2, 1e-2
+    return 1e-5, 1e-6
+
+
+class TestStepKernelBitwise:
+    """T=1: the step kernel is the wavefront kernel, bit for bit."""
+
+    @pytest.mark.parametrize("cfg_kw", WEIGHT_CASES)
+    @pytest.mark.parametrize("batch", [1, 8])
+    def test_t1_bitwise_vs_wavefront(self, cfg_kw, batch):
+        ps, xs, h0, c0 = _packed_inputs(GW_NOMINAL_DIMS, batch, 1, **cfg_kw)
+        big, step = _run_both(ps, xs, h0, c0)
+        for b, s in zip(big, step):
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(s))
+
+    @pytest.mark.parametrize("cfg_kw", WEIGHT_CASES)
+    def test_t1_sequence_bitwise_vs_wavefront_window(self, cfg_kw):
+        """A window streamed sample-by-sample through the step kernel ==
+        the same window through one wavefront call, bit for bit (the
+        engine's steady-state T=1 regime)."""
+        t_len = 12
+        ps, xs, h0, c0 = _packed_inputs(GW_NOMINAL_DIMS, 2, t_len, **cfg_kw)
+        kw = dict(acts=ps.acts, weight_dtype=ps.weight_dtype)
+        hs_big, hf_big, cf_big = lstm_stack_op(xs, ps.stacked, h0, c0, **kw)
+        h, c = h0, c0
+        hs = []
+        for t in range(t_len):
+            hs_t, h, c = lstm_stack_step_op(
+                xs[:, t : t + 1], ps.stacked, h, c, **kw
+            )
+            hs.append(np.asarray(hs_t))
+        np.testing.assert_array_equal(
+            np.concatenate(hs, axis=1), np.asarray(hs_big)
+        )
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(hf_big))
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cf_big))
+
+    @pytest.mark.parametrize("cfg_kw", WEIGHT_CASES)
+    @pytest.mark.parametrize("batch", [1, 8])
+    def test_split_chunkings_track_tightly(self, cfg_kw, batch):
+        """step(T) vs step(a) + step(T-a): within ~1 ulp for every split
+        (different-T step programs compile their dot reductions
+        independently — see module docstring; a FIXED chunking is exactly
+        reproducible, which is what serving replays rely on)."""
+        t_len = 9
+        ps, xs, h0, c0 = _packed_inputs(GW_NOMINAL_DIMS, batch, t_len, **cfg_kw)
+        kw = dict(acts=ps.acts, weight_dtype=ps.weight_dtype)
+        hs_ref, hf_ref, cf_ref = lstm_stack_step_op(
+            xs, ps.stacked, h0, c0, **kw
+        )
+        rtol, atol = _tols(cfg_kw)
+        for split in ([3, 6], [1, 4, 4], [8, 1]):
+            h, c, hs, pos = h0, c0, [], 0
+            for n in split:
+                hs_t, h, c = lstm_stack_step_op(
+                    xs[:, pos : pos + n], ps.stacked, h, c, **kw
+                )
+                hs.append(np.asarray(hs_t, dtype=np.float32))
+                pos += n
+            np.testing.assert_allclose(
+                np.concatenate(hs, axis=1),
+                np.asarray(hs_ref, dtype=np.float32), rtol=rtol, atol=atol,
+            )
+            np.testing.assert_allclose(
+                np.asarray(h, dtype=np.float32),
+                np.asarray(hf_ref, dtype=np.float32), rtol=rtol, atol=atol,
+            )
+            np.testing.assert_allclose(
+                np.asarray(c), np.asarray(cf_ref), rtol=rtol, atol=atol,
+            )
+
+    def test_fixed_chunking_is_reproducible_bitwise(self):
+        """The same split replayed twice is bit-identical — what the
+        push_many == sequential-replay equality builds on."""
+        ps, xs, h0, c0 = _packed_inputs(GW_NOMINAL_DIMS, 2, 9)
+        kw = dict(acts=ps.acts, weight_dtype=ps.weight_dtype)
+
+        def run():
+            h, c, hs, pos = h0, c0, [], 0
+            for n in (4, 5):
+                hs_t, h, c = lstm_stack_step_op(
+                    xs[:, pos : pos + n], ps.stacked, h, c, **kw
+                )
+                hs.append(np.asarray(hs_t))
+                pos += n
+            return np.concatenate(hs, axis=1), np.asarray(h), np.asarray(c)
+
+        for a, b in zip(run(), run()):
+            np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.parametrize("cfg_kw", WEIGHT_CASES)
+    @pytest.mark.parametrize("batch,t_len", [(1, 7), (8, DEFAULT_CHUNK_LEN)])
+    def test_chunk_scale_tracks_wavefront_tightly(self, cfg_kw, batch, t_len):
+        """T>1 vs the wavefront kernel: tight fp tolerance (see module
+        docstring for why cross-kernel bitwise stops at T=1)."""
+        ps, xs, h0, c0 = _packed_inputs(
+            GW_NOMINAL_DIMS, batch, t_len, **cfg_kw
+        )
+        big, step = _run_both(ps, xs, h0, c0)
+        rtol, atol = _tols(cfg_kw)
+        for b, s in zip(big, step):
+            np.testing.assert_allclose(
+                np.asarray(b, dtype=np.float32),
+                np.asarray(s, dtype=np.float32),
+                rtol=rtol, atol=atol,
+            )
+
+    def test_zero_state_heterogeneous_boundary(self):
+        """Zero state + padded heterogeneous widths: padded lanes stay
+        identically zero through the step kernel (same invariant the
+        wavefront kernel holds)."""
+        ps, xs, h0, c0 = _packed_inputs(
+            [(1, 32), (32, 8)], 3, 4, nonzero_state=False
+        )
+        _, h_f, c_f = lstm_stack_step_op(
+            xs, ps.stacked, h0, c0, acts=ps.acts, weight_dtype=ps.weight_dtype
+        )
+        assert not np.asarray(h_f[1, :, 8:]).any()
+        assert not np.asarray(c_f[1, :, 8:]).any()
+
+    def test_fused_gate_matmul_close(self):
+        """The single [x_or_h ; h] @ [W_x ; W_h] MXU form (the TPU default)
+        is tolerance-equal to the separate-dot form — it reorders one fp32
+        reduction, nothing else."""
+        ps, xs, h0, c0 = _packed_inputs(GW_NOMINAL_DIMS, 4, 5)
+        kw = dict(acts=ps.acts, weight_dtype=ps.weight_dtype)
+        ref = lstm_stack_step_op(xs, ps.stacked, h0, c0, **kw)
+        fused = lstm_stack_step_op(
+            xs, ps.stacked, h0, c0, fuse_gates=True, **kw
+        )
+        for r, f in zip(ref, fused):
+            np.testing.assert_allclose(
+                np.asarray(r), np.asarray(f), rtol=1e-5, atol=1e-6
+            )
+
+    def test_fused_gates_refuse_quantized(self):
+        ps, xs, h0, c0 = _packed_inputs(
+            GW_NOMINAL_DIMS, 2, 2, weight_dtype="int8"
+        )
+        with pytest.raises(ValueError, match="fuse_gates"):
+            lstm_stack_step_op(
+                xs, ps.stacked, h0, c0, acts=ps.acts,
+                weight_dtype="int8", fuse_gates=True,
+            )
+
+    def test_unroll_ceiling_raises(self):
+        ps, xs, h0, c0 = _packed_inputs([(1, 8)] , 1, 4)
+        long_xs = jnp.tile(xs, (1, 200, 1))
+        with pytest.raises(ValueError, match="chunk_len"):
+            lstm_stack_step_op(
+                long_xs, ps.stacked, h0, c0, acts=ps.acts,
+                weight_dtype=ps.weight_dtype,
+            )
+
+
+class TestFusedStepBackend:
+    """Plan-time chunk_len capability + executor routing."""
+
+    def _stack(self):
+        return _mk_stack(jax.random.PRNGKey(2), GW_NOMINAL_DIMS)
+
+    def test_plan_resolves_default_chunk_len(self):
+        _, cfgs = self._stack()
+        plan = plan_stack(cfgs, impl="fused_step")
+        assert plan.chunk_len == DEFAULT_CHUNK_LEN
+        assert "chunk_len" in plan.describe()
+        assert get_backend("fused_step").chunked_step
+
+    def test_chunk_len_on_non_chunked_backend_raises(self):
+        _, cfgs = self._stack()
+        for impl in ("split", "fused_stack"):
+            with pytest.raises(ValueError, match="chunk_len"):
+                plan_stack(cfgs, impl=impl, chunk_len=8)
+
+    def test_chunk_len_must_be_positive(self):
+        _, cfgs = self._stack()
+        with pytest.raises(ValueError, match="chunk_len"):
+            plan_stack(cfgs, impl="fused_step", chunk_len=0)
+
+    def test_chunk_len_over_cell_ceiling_raises_at_plan_time(self):
+        _, cfgs = self._stack()  # 4 layers: 200 * 4 > 512
+        with pytest.raises(ValueError, match="ceiling"):
+            plan_stack(cfgs, impl="fused_step", chunk_len=200)
+
+    def test_default_chunk_len_clamps_for_deep_stacks(self):
+        """The defaulted chunk_len must honour the same ceiling an explicit
+        one is validated against — a 20-layer plan clamps below 32."""
+        from repro.kernels.lstm_stack.step import MAX_STEP_UNROLL
+
+        params, cfgs = _mk_stack(jax.random.PRNGKey(8), [(4, 4)] * 20)
+        plan = plan_stack(cfgs, impl="fused_step")
+        assert plan.chunk_len == MAX_STEP_UNROLL // 20  # 25 < DEFAULT(32)
+        assert plan.chunk_len * 20 <= MAX_STEP_UNROLL
+
+    def test_sharded_placement_degrades_to_wavefront(self):
+        """fused_step is single-host: sharded placement resolves to the
+        sharded wavefront backend (one engine default serves both), and
+        an explicit chunk_len is dropped with the rest of the step
+        request rather than raising."""
+        _, cfgs = self._stack()
+        plan = plan_stack(cfgs, impl="fused_step", placement="sharded")
+        assert plan.impl == "fused_stack_sharded"
+        assert plan.chunk_len is None
+        plan = plan_stack(
+            cfgs, impl="fused_step", placement="sharded", chunk_len=8
+        )
+        assert plan.impl == "fused_stack_sharded"
+        assert plan.chunk_len is None
+
+    def test_executor_step_bitwise_t1_and_routing(self):
+        """fused_step.step: T<=chunk_len hits the step kernel bit-equal to
+        fused_stack at T=1; T>chunk_len falls back to the wavefront kernel
+        (bit-equal to fused_stack at any T)."""
+        params, cfgs = self._stack()
+        ex_step = plan_stack(cfgs, impl="fused_step", chunk_len=4).bind(params)
+        ex_big = plan_stack(cfgs, impl="fused_stack").bind(params)
+        state_s = ex_step.zero_state(2)
+        state_b = ex_big.zero_state(2)
+        for t_len in (1, 1, 10, 1):  # 10 > chunk_len=4 -> wavefront path
+            xs = jax.random.normal(jax.random.PRNGKey(t_len), (2, t_len, 1))
+            state_s = ex_step.step(xs, state_s)
+            state_b = ex_big.step(xs, state_b)
+            for s, b in zip(state_s, state_b):
+                np.testing.assert_array_equal(np.asarray(s), np.asarray(b))
+
+    def test_forward_matches_fused_stack(self):
+        """fused_step's full-sequence forward is the fused wavefront."""
+        params, cfgs = self._stack()
+        xs = jax.random.normal(jax.random.PRNGKey(3), (3, 20, 1))
+        out_s, fin_s = plan_stack(cfgs, impl="fused_step").bind(params)(xs)
+        out_b, fin_b = plan_stack(cfgs, impl="fused_stack").bind(params)(xs)
+        np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_b))
+        for (h1, c1), (h2, c2) in zip(fin_s, fin_b):
+            np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+            np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+    def test_step_jit_is_cached_and_consistent(self):
+        params, cfgs = self._stack()
+        ex = plan_stack(cfgs, impl="fused_step").bind(params)
+        fn = ex.step_jit(donate=False)
+        assert ex.step_jit(donate=False) is fn
+        assert ex.step_jit(donate=True) is not fn
+        xs = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1))
+        s1 = fn(xs, ex.zero_state(1))
+        s2 = ex.step(xs, ex.zero_state(1))
+        # the outer jit inlines the op's inner jit into one program, so
+        # this is tolerance- (not bit-) equal — same caveat as any
+        # cross-program comparison
+        for a, b in zip(s1, s2):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7
+            )
+
+    def test_rebind_gets_fresh_step_jit(self):
+        """update_params must never serve stale weights through a cached
+        jitted step (the bound arrays are jit constants)."""
+        params, cfgs = self._stack()
+        ex = plan_stack(cfgs, impl="fused_step").bind(params)
+        fn = ex.step_jit(donate=False)
+        params2, _ = _mk_stack(jax.random.PRNGKey(9), GW_NOMINAL_DIMS)
+        ex2 = ex.update_params(params2)
+        fn2 = ex2.step_jit(donate=False)
+        assert fn2 is not fn
+        xs = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1))
+        s_old = fn(xs, ex.zero_state(1))
+        s_new = fn2(xs, ex2.zero_state(1))
+        assert np.abs(np.asarray(s_old[0]) - np.asarray(s_new[0])).max() > 0
+
+
+def _gw_cfg(**kw):
+    return AutoencoderConfig(
+        hidden=(9, 9), latent_boundary=1, timesteps=16, **kw
+    )
+
+
+class TestPushMany:
+    """Coalesced independent streams == sequential single-stream pushes."""
+
+    def _engine(self, cfg=None, **kw):
+        cfg = cfg or _gw_cfg()
+        params = init_autoencoder(jax.random.PRNGKey(7), cfg)
+        return StreamingAnomalyEngine(params, cfg, batch=1, **kw), params
+
+    @pytest.mark.parametrize("wd", [None, "int8"])
+    def test_eight_streams_bitwise_equal_sequential(self, wd):
+        """The acceptance gate: push_many over 8 streams, chunked to window
+        completion, bit-equal to 8 sequential single-stream push loops."""
+        cfg = _gw_cfg(weight_dtype=wd)
+        eng, params = self._engine(cfg)
+        seq = StreamingAnomalyEngine(params, cfg, batch=1)
+        n, T = 8, cfg.timesteps
+        x = np.random.RandomState(11).randn(n, 2 * T, 1).astype(np.float32)
+        ids = [f"s{i}" for i in range(n)]
+        got: dict = {i: [] for i in ids}
+        for pos in (0, 5, 11, 16, 2 * T):  # ragged chunking incl. boundary
+            if pos == 0:
+                continue
+            prev = [0, 5, 11, 16][[5, 11, 16, 2 * T].index(pos)]
+            res = eng.push_many(ids, x[:, prev:pos])
+            for sid in ids:
+                got[sid] += res[sid]
+        for i, sid in enumerate(ids):
+            seq.reset()
+            want = []
+            for a, b in ((0, 5), (5, 11), (11, 16), (16, 2 * T)):
+                want += seq.push(x[i : i + 1, a:b])
+            assert len(got[sid]) == len(want) == 2
+            for g, w in zip(got[sid], want):
+                np.testing.assert_array_equal(g, w)
+
+    def test_streams_at_different_fill_levels(self):
+        """A stream joining mid-flight forces per-boundary splitting; every
+        stream still scores exactly like its solo replay."""
+        eng, params = self._engine()
+        seq, _ = self._engine()
+        T = eng.window
+        x = np.random.RandomState(12).randn(3, T, 1).astype(np.float32)
+        eng.push_many(["a"], x[:1, :5])          # "a" now at filled=5
+        res1 = eng.push_many(["a", "b"], x[:2, 5 : 5 + T - 5])
+        assert len(res1["a"]) == 1 and len(res1["b"]) == 0
+        seq.reset()
+        want_a = seq.push(x[:1, :5]) + seq.push(x[:1, 5:T])
+        np.testing.assert_array_equal(res1["a"][0], want_a[0])
+
+    def test_carry_state_matches_sequential(self):
+        cfg = _gw_cfg()
+        params = init_autoencoder(jax.random.PRNGKey(7), cfg)
+        eng = StreamingAnomalyEngine(params, cfg, batch=1, carry_state=True)
+        seq = StreamingAnomalyEngine(params, cfg, batch=1, carry_state=True)
+        T = eng.window
+        x = np.random.RandomState(13).randn(2, 3 * T, 1).astype(np.float32)
+        res = eng.push_many(["u", "v"], x)
+        for i, sid in enumerate(("u", "v")):
+            seq.reset()
+            want = seq.push(x[i : i + 1])
+            assert len(res[sid]) == len(want) == 3
+            for g, w in zip(res[sid], want):
+                np.testing.assert_array_equal(g, w)
+
+    def test_stream_lifecycle(self):
+        eng, _ = self._engine()
+        x = np.zeros((1, 3, 1), np.float32)
+        eng.push_many(["a"], x)
+        assert eng.stream_ids == ("a",)
+        eng.drop_stream("a")
+        assert eng.stream_ids == ()
+        eng.push_many(["a"], x)
+        eng.reset()
+        assert eng.stream_ids == ()
+
+    def test_validation_errors(self):
+        eng, params = self._engine()
+        x = np.zeros((2, 3, 1), np.float32)
+        with pytest.raises(ValueError, match="duplicate"):
+            eng.push_many(["a", "a"], x)
+        with pytest.raises(ValueError, match="chunks must be"):
+            eng.push_many(["a", "b"], np.zeros((2, 3, 2), np.float32))
+        with pytest.raises(ValueError, match="chunks must be"):
+            eng.push_many(["a"], x)
+        multi = StreamingAnomalyEngine(
+            params, _gw_cfg(), batch=2, window=16
+        )
+        with pytest.raises(ValueError, match="batch=1"):
+            multi.push_many(["a", "b"], x)
+
+    def test_push_many_on_layerwise_backend(self):
+        """The coalescer is backend-agnostic: the layers state layout
+        gathers/scatters on axis 0."""
+        cfg = _gw_cfg(impl="split")
+        eng, params = self._engine(cfg, impl="split")
+        assert eng.effective_impl == "split"
+        seq = StreamingAnomalyEngine(params, cfg, batch=1, impl="split")
+        T = eng.window
+        x = np.random.RandomState(14).randn(2, T, 1).astype(np.float32)
+        res = eng.push_many(["a", "b"], x)
+        for i, sid in enumerate(("a", "b")):
+            seq.reset()
+            want = seq.push(x[i : i + 1])
+            np.testing.assert_array_equal(res[sid][0], want[0])
+
+
+class TestStreamingEngineStepPath:
+    """The engine's default impl is the chunked-step backend."""
+
+    def test_default_impl_is_fused_step(self):
+        eng, _ = TestPushMany()._engine()
+        assert eng.effective_impl == "fused_step"
+        assert eng._exec_enc.plan.chunk_len == DEFAULT_CHUNK_LEN
+
+    def test_chunked_push_equals_oneshot_on_step_path(self):
+        """T=1 pushes (the pure step-kernel regime) reproduce one-shot
+        window scores to the same tolerance the fused_stack path holds."""
+        from repro.serve.engine import AnomalyStreamEngine
+
+        cfg = _gw_cfg()
+        params = init_autoencoder(jax.random.PRNGKey(7), cfg)
+        eng = StreamingAnomalyEngine(params, cfg, batch=2)
+        x = np.random.RandomState(15).randn(2, 16, 1).astype(np.float32)
+        want = AnomalyStreamEngine(params, cfg).score(x)
+        got = []
+        for t in range(16):
+            got += eng.push(x[:, t : t + 1])
+        np.testing.assert_allclose(got[0], want, rtol=1e-5, atol=1e-6)
+
+    def test_custom_chunk_len_threads_to_plan(self):
+        cfg = _gw_cfg()
+        params = init_autoencoder(jax.random.PRNGKey(7), cfg)
+        eng = StreamingAnomalyEngine(params, cfg, batch=1, chunk_len=4)
+        assert eng._exec_enc.plan.chunk_len == 4
+
+    def test_chunk_len_survives_graceful_impl_fallback(self, caplog):
+        """When the fused_step request falls back (non-kernel-safe acts),
+        the chunk_len that rode along is dropped with a warning instead of
+        crashing the engine at plan time."""
+        import logging
+
+        from repro.core.quant import PAPER_HW
+
+        cfg = _gw_cfg(acts=PAPER_HW)
+        params = init_autoencoder(jax.random.PRNGKey(7), cfg)
+        with caplog.at_level(logging.WARNING, logger="repro.serve.engine"):
+            eng = StreamingAnomalyEngine(params, cfg, batch=1, chunk_len=8)
+        assert eng.effective_impl == "split"
+        assert eng._exec_enc.plan.chunk_len is None
+        assert any("chunk_len" in r.message for r in caplog.records)
+        x = np.random.RandomState(16).randn(1, 16, 1).astype(np.float32)
+        assert len(eng.push(x)) == 1  # and it still serves
+
+    def test_explicit_nonchunked_impl_with_chunk_len_raises(self):
+        """No fallback in play: explicitly pairing a non-chunked impl with
+        chunk_len is a caller error and keeps plan_stack's hard error."""
+        cfg = _gw_cfg()
+        params = init_autoencoder(jax.random.PRNGKey(7), cfg)
+        with pytest.raises(ValueError, match="chunk_len"):
+            StreamingAnomalyEngine(
+                params, cfg, batch=1, impl="fused_stack", chunk_len=8
+            )
