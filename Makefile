@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve test-quant test-exec test-step bench-kernels bench-stream bench-quant bench-exec bench-step bench
+.PHONY: test test-fast test-serve test-quant test-exec test-step test-server bench-kernels bench-stream bench-quant bench-exec bench-step bench-server bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -30,6 +30,11 @@ test-exec:
 test-step:
 	$(PYTHON) -m pytest -x -q tests/test_step_kernel.py
 
+# the continuous-batching stream server (deadline coalescer, backpressure,
+# scheduler determinism, latency histogram)
+test-server:
+	$(PYTHON) -m pytest -x -q tests/test_stream_server.py
+
 # kernel + pipeline + streaming-serve rows, with the machine-readable artifact
 bench-kernels:
 	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance,stream --json BENCH_kernels.json
@@ -52,6 +57,11 @@ bench-exec:
 # bit-equality gate) merged into the shared artifact
 bench-step:
 	$(PYTHON) -m benchmarks.run --only step --json BENCH_kernels.json --merge
+
+# server.* / serve.* rows (fleet throughput gate >= 3x at 64 streams,
+# p50/p99 under load, scheduler bit-equality gate) merged into the artifact
+bench-server:
+	$(PYTHON) -m benchmarks.run --only server --json BENCH_kernels.json --merge
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

@@ -11,7 +11,63 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
+import numbers
+import re
 import sys
+
+#: ok-flag fields in derived strings (gated rows) must parse as booleans
+_OK_FLAG = re.compile(r"(?:^|\|)ok=([^|]*)")
+
+
+def validate_rows(module: str, rows) -> list[tuple]:
+    """Minimal row-schema gate applied to every benchmark module's output
+    before it can reach the CSV/JSON artifact: each row must be a
+    ``(name, us_per_call, derived)`` triple with a non-empty string name,
+    a finite numeric value, and a string derived field whose ``ok=`` flag
+    (if any — the gated rows) is ``0`` or ``1``.  A malformed bench
+    script fails loudly here, naming itself, instead of silently writing
+    junk into BENCH_kernels.json."""
+    if not isinstance(rows, list):
+        raise TypeError(
+            f"benchmark {module!r} must return a list of rows, "
+            f"got {type(rows).__name__}"
+        )
+    out = []
+    for row in rows:
+        if not (isinstance(row, (tuple, list)) and len(row) == 3):
+            raise ValueError(
+                f"benchmark {module!r} emitted malformed row {row!r} — "
+                "want (name, us_per_call, derived)"
+            )
+        name, us, derived = row
+        if not isinstance(name, str) or not name.strip():
+            raise ValueError(
+                f"benchmark {module!r} emitted a row with bad name "
+                f"{name!r} (non-empty string required)"
+            )
+        if (
+            isinstance(us, bool)
+            or not isinstance(us, numbers.Real)
+            or not math.isfinite(float(us))
+        ):
+            raise ValueError(
+                f"benchmark {module!r} row {name!r} has non-finite or "
+                f"non-numeric value {us!r}"
+            )
+        if not isinstance(derived, str):
+            raise ValueError(
+                f"benchmark {module!r} row {name!r} has non-string "
+                f"derived field {derived!r}"
+            )
+        m = _OK_FLAG.search(derived)
+        if m and m.group(1) not in ("0", "1"):
+            raise ValueError(
+                f"benchmark {module!r} gated row {name!r} has non-boolean "
+                f"ok-flag {m.group(1)!r} (must be 0 or 1)"
+            )
+        out.append((name, float(us), derived))
+    return out
 
 
 def main() -> None:
@@ -42,6 +98,7 @@ def main() -> None:
         pipeline_balance,
         quant_bench,
         roofline_table,
+        server_bench,
         step_bench,
         stream_latency,
         table2,
@@ -61,6 +118,7 @@ def main() -> None:
         "quant": quant_bench.run,
         "exec": exec_bench.run,
         "step": step_bench.run,
+        "server": server_bench.run,
         "roofline_table": lambda: roofline_table.run(args.rundir),
     }
     if args.only:
@@ -79,9 +137,10 @@ def main() -> None:
         if name == "fig9_auc":
             from benchmarks import fig9_auc
 
-            rows += fig9_auc.run(steps=300)
+            module_rows = fig9_auc.run(steps=300)
         else:
-            rows += runners[name]()
+            module_rows = runners[name]()
+        rows += validate_rows(name, module_rows)
 
     print("\n==== CSV ====")
     print("name,us_per_call,derived")

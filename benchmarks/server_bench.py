@@ -1,0 +1,278 @@
+"""Continuous-batching stream server rows: fleet throughput, tail latency,
+and the bit-equality hard gate.
+
+The PR 6 serving claims, as ``server.*`` / ``serve.*`` rows merged into
+the shared ``BENCH_kernels.json`` artifact (``make bench-server``):
+
+* ``server.throughput_{1,8,32,64}streams`` — us per chunk when N
+  independent B=1 streams are driven through the ``StreamServer``'s
+  arrival queue + deadline coalescer (submit round-robin, drain), vs the
+  same chunks pushed sequentially one stream at a time.  The 64-stream
+  row is **hard-gated at >= 3x** chunks/sec over sequential — the whole
+  point of the coalescer is that fleet throughput scales with batch
+  width, not stream count.
+* ``server.p50_us`` / ``server.p99_us`` — per-chunk enqueue->score
+  latency under the saturated 64-stream load, straight from the server's
+  first-class ``LatencyHistogram``.
+* ``serve.p50_us`` / ``serve.p99_us`` — the single-stream per-push
+  latency summary (the serve CLI's measure), through the same shared
+  histogram helper (``benchmarks/latency.py``).
+* ``server.vs_sequential_bitequal`` — **hard gate**: a scripted schedule
+  with staggered joins, ragged batch fills (6/8/2/1), a mid-window
+  ``close_stream`` and a rejoin scores bit-equal to per-stream
+  sequential replays at ``max_coalesce=8`` (the sublane pool regime the
+  step coalescer guarantees).
+* ``server.flush_mix`` — scheduler instrumentation from a threaded
+  deadline-paced run: tick count with full / deadline / drain flush
+  split (informational; values are host-timing dependent).
+
+Interpret-mode timings on CPU are correctness-grade; on a TPU host the
+same rows time the compiled kernels.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.latency import latency_rows, record_latencies
+from repro.configs.gw import GW_MODELS
+from repro.core.autoencoder import init_autoencoder
+from repro.kernels.lstm_scan.ops import SUBLANES
+from repro.serve.engine import StreamingAnomalyEngine
+from repro.serve.server import ServerConfig, ServerStats, StreamServer
+
+#: streamed chunk length (matches step_bench): 4 chunks fill a gw_small
+#: window and every push rides the step kernel
+CHUNK = 25
+
+#: fleet sizes for the throughput sweep; the last one carries the gate
+STREAM_COUNTS = (1, 8, 32, 64)
+
+#: hard gate: server throughput at 64 streams must be >= this multiple
+#: of sequential B=1 pushes
+GATE_SPEEDUP = 3.0
+
+
+def _time(fn, n_iter: int = 3) -> float:
+    fn()  # warm up (compile)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()
+    return (time.perf_counter() - t0) / n_iter * 1e6
+
+
+def _throughput_pair(params, cfg, n_streams: int, data: np.ndarray):
+    """(us/chunk server, us/chunk sequential, server) for one fleet size."""
+    t_len = cfg.timesteps
+    n_chunks = n_streams * (t_len // CHUNK)
+    ids = [f"s{i}" for i in range(n_streams)]
+
+    eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    srv = StreamServer(
+        eng,
+        ServerConfig(
+            max_coalesce=max(n_streams, SUBLANES), deadline_us=1e9
+        ),
+    )
+
+    def server_window():
+        # round-robin arrivals, then drain: every tick gathers a full
+        # distinct-stream batch (the steady-state saturated regime)
+        for pos in range(0, t_len, CHUNK):
+            for i, sid in enumerate(ids):
+                srv.submit(sid, data[i, pos : pos + CHUNK])
+        srv.drain()
+        return srv.pop_scores()
+
+    server_window()  # warm up: compile every fill/pad shape once
+    srv.stats = ServerStats()  # keep compile stalls out of the histogram
+    n_iter = 3
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        server_window()
+    us_srv = (time.perf_counter() - t0) / n_iter * 1e6 / n_chunks
+
+    seq = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+
+    def sequential_window():
+        scores = []
+        for i in range(n_streams):
+            seq.reset()
+            for pos in range(0, t_len, CHUNK):
+                scores += seq.push(data[i : i + 1, pos : pos + CHUNK])
+        return scores
+
+    us_seq = _time(sequential_window) / n_chunks
+    return us_srv, us_seq, srv
+
+
+def _bitequal_gate(params, cfg) -> tuple:
+    """Scripted joins/drops/ragged fills vs sequential replay (hard gate)."""
+    t_len = cfg.timesteps
+    rng = np.random.default_rng(2106)
+    n = 10
+    data = rng.standard_normal((n, t_len, 1)).astype(np.float32)
+    rejoin = rng.standard_normal((t_len, 1)).astype(np.float32)
+    ids = [f"s{i}" for i in range(n)]
+
+    def chunk(i, k):
+        return data[i, k * CHUNK : (k + 1) * CHUNK]
+
+    eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    srv = StreamServer(
+        eng, ServerConfig(max_coalesce=SUBLANES, deadline_us=1e9)
+    )
+
+    # round 0: six early joiners -> one ragged flush at fill 6
+    for i in range(6):
+        srv.submit(ids[i], chunk(i, 0))
+    srv.tick(force=True)
+    # round 1: four late joiners; 10 pending > max_coalesce=8 -> one full
+    # flush (fill 8) + one ragged flush (fill 2)
+    for i in range(n):
+        srv.submit(ids[i], chunk(i, 1 if i < 6 else 0))
+    srv.drain()
+    # mid-window drop + rejoin: s3 is 50/100 samples into its window;
+    # its recycled slot must not leak stale (h, c) into the fresh window
+    srv.close_stream(ids[3])
+    for k in (2, 3):
+        for i in range(n):
+            if i == 3:
+                continue
+            srv.submit(ids[i], chunk(i, k if i < 6 else k - 1))
+        srv.tick(force=True)  # fill 9 pending -> full 8 + 1 leftover
+    for pos in range(0, t_len, CHUNK):
+        srv.submit(ids[3], rejoin[pos : pos + CHUNK])
+    for i in range(6, n):  # late joiners' final chunk
+        srv.submit(ids[i], chunk(i, 3))
+    srv.drain()
+
+    got = srv.pop_scores()
+    seq = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    equal = True
+    for i in range(n):
+        seq.reset()
+        want = []
+        if i == 3:  # pre-drop chunks never completed a window
+            for pos in range(0, t_len, CHUNK):
+                want += seq.push(rejoin[None, pos : pos + CHUNK])
+        else:
+            for k in range(4):
+                want += seq.push(chunk(i, k)[None])
+        have = got.get(ids[i], [])
+        equal &= len(have) == len(want) and all(
+            (np.asarray(a) == np.asarray(b)).all()
+            for a, b in zip(have, want)
+        )
+    fills = dict(sorted(srv.stats.batch_fill.items()))
+    print(f"bit-equality gate    : {'OK' if equal else 'FAIL'} "
+          f"(10 streams, drop+rejoin, batch fills {fills})")
+    row = ("server.vs_sequential_bitequal", 0.0,
+           f"equal={int(equal)}|streams={n}|"
+           f"fills={'/'.join(str(k) for k in fills)}")
+    if not equal:  # hard gate: the scheduler must be numerically free
+        raise RuntimeError(
+            "StreamServer scores diverged from sequential per-stream "
+            "pushes under joins/drops/ragged fills — the continuous-"
+            "batching scheduler is no longer bit-exact"
+        )
+    return row
+
+
+def _flush_mix_row(params, cfg) -> tuple:
+    """Threaded deadline-paced mini-run for the flush-mix instrumentation."""
+    t_len = cfg.timesteps
+    rng = np.random.default_rng(7)
+    n = 16
+    data = rng.standard_normal((n, t_len, 1)).astype(np.float32)
+    eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    srv = StreamServer(
+        eng,
+        ServerConfig(max_coalesce=SUBLANES, deadline_us=2000.0),
+    )
+    with srv:
+        for pos in range(0, t_len, CHUNK):
+            for i in range(n):
+                srv.submit(f"s{i}", data[i, pos : pos + CHUNK])
+    st = srv.stats
+    print(f"flush mix (16 streams, 2ms deadline): {st.ticks} ticks — "
+          f"{st.full_flushes} full, {st.deadline_flushes} deadline, "
+          f"{st.drain_flushes} drain")
+    return ("server.flush_mix", float(st.ticks),
+            f"full={st.full_flushes}|deadline={st.deadline_flushes}|"
+            f"drain={st.drain_flushes}|drops={st.drops}")
+
+
+def run() -> list[tuple]:
+    rows = []
+    cfg = GW_MODELS["gw_small"]
+    t_len = cfg.timesteps
+    params = init_autoencoder(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal(
+        (max(STREAM_COUNTS), t_len, 1)
+    ).astype(np.float32)
+
+    print(f"\n== stream server: continuous batching (gw_small, T={t_len}, "
+          f"chunk={CHUNK}) ==")
+
+    # -- single-stream per-push latency (the serve CLI's measure) ------------
+    solo = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    for pos in range(0, t_len, CHUNK):  # warm up the chunked push path
+        solo.push(data[:1, pos : pos + CHUNK])
+    samples = []
+    for _ in range(5):
+        for pos in range(0, t_len, CHUNK):
+            t0 = time.perf_counter()
+            solo.push(data[:1, pos : pos + CHUNK])
+            samples.append((time.perf_counter() - t0) * 1e6)
+    hist = record_latencies(samples)
+    rows += latency_rows("serve", hist)
+    print(f"single-stream push   : p50 {hist.percentile(50):7.0f} us, "
+          f"p99 {hist.percentile(99):7.0f} us")
+
+    # -- throughput sweep + 64-stream gate -----------------------------------
+    gate_speedup = None
+    srv64 = None
+    for n_streams in STREAM_COUNTS:
+        us_srv, us_seq, srv = _throughput_pair(
+            params, cfg, n_streams, data[:n_streams]
+        )
+        speedup = us_seq / us_srv
+        gated = n_streams == max(STREAM_COUNTS)
+        derived = (
+            f"chunks_per_s={1e6 / us_srv:.0f}|sequential_us={us_seq:.0f}|"
+            f"speedup={speedup:.2f}"
+        )
+        if gated:
+            derived += f"|ok={int(speedup >= GATE_SPEEDUP)}"
+            gate_speedup = speedup
+            srv64 = srv
+        rows.append((f"server.throughput_{n_streams}streams", us_srv, derived))
+        print(f"{n_streams:3d} streams          : {us_srv:7.0f} us/chunk "
+              f"server vs {us_seq:7.0f} sequential ({speedup:.2f}x"
+              f"{', gate >= 3.0' if gated else ''})")
+
+    # tail latency under the saturated 64-stream load (drain-mode: chunks
+    # queue a full round-robin wave, so the histogram is queue-dominated)
+    rows += latency_rows("server", srv64.stats.latency)
+    print(f"64-stream load       : p50 {srv64.stats.latency.percentile(50):7.0f} us, "
+          f"p99 {srv64.stats.latency.percentile(99):7.0f} us enqueue->score")
+
+    rows.append(_bitequal_gate(params, cfg))
+    rows.append(_flush_mix_row(params, cfg))
+
+    if gate_speedup < GATE_SPEEDUP:  # the PR's headline gate
+        raise RuntimeError(
+            f"server.throughput_64streams speedup {gate_speedup:.2f}x < "
+            f"{GATE_SPEEDUP:.1f}x over sequential pushes — continuous "
+            "batching is no longer paying for itself"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,15 @@ T <= N run the one-grid-step kernel instead of the wavefront).
 ``--streams N`` serves N *independent* streams through the multi-stream
 coalescer: every chunk advances all N with ONE gathered B=N step call
 (``push_many``) instead of N B=1 pushes.
+``--server`` runs the continuous-batching ``StreamServer`` instead of the
+synchronous loops: a synthetic Poisson-arrival driver submits chunks for
+``--streams`` independent streams at ``--arrival-hz`` aggregate rate
+(0 = as fast as possible, the saturation test) and the deadline scheduler
+coalesces whatever is pending into ``push_many`` batches
+(``--deadline-us`` budget, ``--max-coalesce`` batch cap, ``--overflow``
+backpressure policy).  Enqueue->score latency lands in a fixed-bin
+histogram; the run prints p50/p99/max plus the scheduler's tick, flush,
+batch-fill, and drop counters.
 ``--plan-only`` prints the resolved execution plan for both segments
 (backend, placement, weight dtype, pack bytes) and exits without scoring —
 the dryrun-style smoke for serving configs.
@@ -37,6 +46,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.models.api import get_model
 from repro.serve.engine import LmEngine
+from repro.serve.latency import LatencyHistogram
 
 
 def main():
@@ -76,6 +86,26 @@ def main():
     ap.add_argument("--plan-only", action="store_true",
                     help="resolve and print the execution plan (backend, "
                          "weight dtype, pack bytes) without scoring")
+    # continuous-batching server mode
+    ap.add_argument("--server", action="store_true",
+                    help="serve through the continuous-batching "
+                         "StreamServer (arrival queue + deadline "
+                         "coalescer) with a Poisson-arrival driver")
+    ap.add_argument("--deadline-us", type=float, default=200.0,
+                    help="coalescing budget: flush as soon as the oldest "
+                         "pending chunk is this old (server mode)")
+    ap.add_argument("--max-coalesce", type=int, default=8,
+                    help="most streams gathered into one step call; "
+                         "rounded up to a sublane multiple (server mode)")
+    ap.add_argument("--overflow", choices=("block", "drop_oldest", "error"),
+                    default="block",
+                    help="bounded-queue backpressure policy (server mode)")
+    ap.add_argument("--queue-capacity", type=int, default=4096,
+                    help="arrival queue bound (server mode)")
+    ap.add_argument("--arrival-hz", type=float, default=0.0,
+                    help="aggregate Poisson chunk-arrival rate across the "
+                         "fleet; 0 submits as fast as possible (server "
+                         "mode saturation test)")
     args = ap.parse_args()
 
     if args.mode == "anomaly":
@@ -121,6 +151,9 @@ def serve_anomaly(args):
 
     ds = GwDataset(GwDataConfig(timesteps=cfg.timesteps))
 
+    if args.server:
+        return serve_server(args, params, cfg, ds)
+
     engine = StreamingAnomalyEngine(
         params, cfg, batch=1, placement=args.placement,
         chunk_len=args.chunk_len,
@@ -163,11 +196,92 @@ def serve_anomaly(args):
             lat.append(time.perf_counter() - t0)
             flagged += int(scores[0][0] > thr)
     warmup = min(5, len(lat) - 1)  # keep at least one sample
-    lat_us = np.asarray(lat[warmup:]) * 1e6
+    hist = LatencyHistogram()
+    hist.record_many(np.asarray(lat[warmup:]) * 1e6)
     tag = f", {args.streams} coalesced streams" if args.streams > 1 else ""
     print(f"{args.windows} windows ({chunk}-sample chunks{tag}): "
-          f"{flagged} flagged; latency p50={np.percentile(lat_us, 50):.0f}us "
-          f"p99={np.percentile(lat_us, 99):.0f}us on this host")
+          f"{flagged} flagged; latency p50={hist.percentile(50):.0f}us "
+          f"p99={hist.percentile(99):.0f}us "
+          f"max={hist.max_us:.0f}us on this host")
+
+
+def serve_server(args, params, cfg, ds):
+    """Continuous-batching serving: Poisson arrivals through the deadline
+    coalescer (``serve/server.py``), scheduler metrics as the output."""
+    from repro.serve.engine import StreamingAnomalyEngine
+    from repro.serve.server import ServerConfig, StreamServer
+
+    engine = StreamingAnomalyEngine(
+        params, cfg, batch=1, placement=args.placement,
+        chunk_len=args.chunk_len,
+    )
+    server = StreamServer(engine, ServerConfig(
+        max_coalesce=args.max_coalesce,
+        deadline_us=args.deadline_us,
+        queue_capacity=args.queue_capacity,
+        overflow=args.overflow,
+    ))
+    n_streams = max(1, args.streams)
+    chunk = args.chunk or cfg.timesteps
+    rng = np.random.default_rng(2)
+
+    # each stream serves --windows windows, chopped into fixed chunks; the
+    # fleet's chunks arrive in one Poisson-merged order (random stream
+    # picked per arrival, each stream's own chunks in order)
+    queues = []
+    for _ in range(n_streams):
+        w = np.concatenate([
+            ds.events(1) if rng.random() < 0.1 else ds.background(1)
+            for _ in range(args.windows)
+        ], axis=1)[0]  # (windows*T, input_dim)
+        queues.append([w[pos : pos + chunk]
+                       for pos in range(0, w.shape[0], chunk)])
+    total_chunks = sum(len(q) for q in queues)
+
+    print(f"{args.gw_model}: StreamServer impl={engine.effective_impl}, "
+          f"{n_streams} streams x {args.windows} windows "
+          f"({chunk}-sample chunks, {total_chunks} total), "
+          f"deadline={args.deadline_us:.0f}us "
+          f"max_coalesce={server.config.max_coalesce} "
+          f"overflow={args.overflow}"
+          + (f", ~{args.arrival_hz:.0f} chunks/s Poisson"
+             if args.arrival_hz > 0 else ", max-rate arrivals"))
+
+    # compile the full-batch step + batched decode shapes before timing:
+    # the latency histogram should measure scheduling, not the first
+    # tick's trace/compile stall
+    warm_ids = [f"warm-{i}" for i in range(server.config.max_coalesce)]
+    for pos in range(0, engine.window, chunk):
+        t = min(chunk, engine.window - pos)
+        engine.push_many(warm_ids, np.zeros(
+            (len(warm_ids), t, cfg.input_dim), np.float32))
+    for wid in warm_ids:
+        engine.drop_stream(wid)
+
+    t0 = time.perf_counter()
+    with server:
+        live = [i for i, q in enumerate(queues) if q]
+        while live:
+            i = live[int(rng.integers(len(live)))]
+            server.submit(f"stream-{i}", queues[i].pop(0))
+            if not queues[i]:
+                live.remove(i)
+            if args.arrival_hz > 0:
+                time.sleep(rng.exponential(1.0 / args.arrival_hz))
+    wall = time.perf_counter() - t0
+
+    scores = server.pop_scores()
+    n_scores = sum(len(v) for v in scores.values())
+    s = server.stats
+    print(f"{total_chunks} chunks -> {n_scores} window scores in "
+          f"{wall:.2f}s ({total_chunks / wall:.0f} chunks/s)")
+    print(f"scheduler: {s.ticks} ticks ({s.full_flushes} full, "
+          f"{s.deadline_flushes} deadline, {s.drain_flushes} drain), "
+          f"{s.drops} dropped, batch fill "
+          f"{dict(sorted(s.batch_fill.items()))}")
+    print(f"enqueue->score latency: p50={s.latency.percentile(50):.0f}us "
+          f"p99={s.latency.percentile(99):.0f}us "
+          f"max={s.latency.max_us:.0f}us over {s.latency.count} chunks")
 
 
 def print_plan(args, params, cfg) -> None:

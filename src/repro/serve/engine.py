@@ -244,6 +244,11 @@ class StreamingAnomalyEngine:
             chunk_len=chunk_len,
         )
         self._enc_step = self._exec_enc.step_jit(donate=self._donate)
+        # push_many's gather -> step -> scatter runs as ONE jitted call per
+        # pool size (cached below): done per-stream with eager ops, the
+        # host-side dispatch of N slices dwarfs the coalesced kernel call
+        # (measured ~2/3 of push_many wall time at N=64 on CPU)
+        self._coalesce_jits: dict = {}
         # zero state through a cached jit: a window completion resets state
         # on the hot path, and two eager jnp.zeros dispatches per window
         # cost more than the compiled call that allocates both at once
@@ -316,6 +321,7 @@ class StreamingAnomalyEngine:
         self._exec_enc = self._exec_enc.update_params(enc_p)
         self._exec_dec = self._exec_dec.update_params(dec_p)
         self._enc_step = self._exec_enc.step_jit(donate=self._donate)
+        self._coalesce_jits = {}  # closed over the superseded executor
         self.reset()
 
     @property
@@ -384,6 +390,41 @@ class StreamingAnomalyEngine:
             self._streams[stream_id] = slot
         return slot
 
+    def _coalesced_step(self, n: int):
+        """One jitted gather->step->scatter for an ``n``-stream pool.
+
+        Per-stream eager ops are the coalescer's real tax at fleet sizes:
+        N ``slice_in_dim`` dispatches per piece cost more host time than
+        the single B=N kernel call they surround.  Compiling the concat,
+        the bound step, and the N-way split as one program makes the
+        per-piece dispatch count independent of N.  The input states are
+        donated (the slots are re-pointed at the outputs immediately), so
+        steady-state coalesced pushes allocate no transient pool state.
+        """
+        fn = self._coalesce_jits.get(n)
+        if fn is None:
+            ax = self._state_batch_axis()
+            exec_enc = self._exec_enc
+
+            def step_n(piece, states):
+                batched = jax.tree_util.tree_map(
+                    lambda *leaves: jnp.concatenate(leaves, axis=ax), *states
+                )
+                new_state = exec_enc.step(piece, batched)
+                return tuple(
+                    jax.tree_util.tree_map(
+                        lambda x: jax.lax.slice_in_dim(x, i, i + 1, axis=ax),
+                        new_state,
+                    )
+                    for i in range(n)
+                )
+
+            fn = jax.jit(
+                step_n, donate_argnums=(1,) if self._donate else ()
+            )
+            self._coalesce_jits[n] = fn
+        return fn
+
     def push_many(self, stream_ids, chunks: np.ndarray) -> dict:
         """Advance N *independent* B=1 streams with ONE coalesced step call.
 
@@ -426,24 +467,20 @@ class StreamingAnomalyEngine:
             )
         slots = [self._stream_slot(sid) for sid in ids]
         out: dict = {sid: [] for sid in ids}
-        ax = self._state_batch_axis()
+        step_n = self._coalesced_step(len(slots))
         pos, t_total = 0, chunks.shape[1]
         while pos < t_total:
             take = min(
                 t_total - pos, min(self.window - s.filled for s in slots)
             )
             piece = np.array(chunks[:, pos : pos + take])
-            # gather: N resident states -> one batch axis, one step call
-            batched = jax.tree_util.tree_map(
-                lambda *leaves: jnp.concatenate(leaves, axis=ax),
-                *[s.state for s in slots],
+            # gather -> one B=N step -> scatter, compiled as one call: the
+            # per-piece host cost no longer scales with the pool size
+            new_states = step_n(
+                jnp.asarray(piece), tuple(s.state for s in slots)
             )
-            new_state = self._enc_step(jnp.asarray(piece), batched)
             for i, slot in enumerate(slots):
-                slot.state = jax.tree_util.tree_map(
-                    lambda x: jax.lax.slice_in_dim(x, i, i + 1, axis=ax),
-                    new_state,
-                )
+                slot.state = new_states[i]
                 slot.chunks.append(piece[i : i + 1])
                 slot.filled += take
             pos += take
@@ -462,15 +499,38 @@ class StreamingAnomalyEngine:
         """Score the streams that just completed a window — one batched
         decode for the whole group (bit-equal to per-stream scoring: the
         decode + MSE tail is row-independent)."""
-        latent = jnp.concatenate(
-            [self._exec_enc.last_hidden(s.state) for s in slots], axis=0
+        from repro.kernels.lstm_scan.ops import SUBLANES
+
+        # batch the latent extraction: ONE last_hidden on the tree-concat
+        # state instead of one eager gather per stream (at 64 streams the
+        # per-slot getitems alone cost more than the whole step call)
+        ax = self._state_batch_axis()
+        batched = jax.tree_util.tree_map(
+            lambda *leaves: jnp.concatenate(leaves, axis=ax),
+            *[s.state for s in slots],
         )
-        xs = jnp.asarray(np.concatenate(
+        latent = self._exec_enc.last_hidden(batched)
+        xs = np.concatenate(
             [np.concatenate(s.chunks, axis=1) for s in slots], axis=0
-        ))
-        scores = np.asarray(
-            self._score_window(self.params, self._exec_dec, latent, xs)
         )
+        # pad the done group to a sublane multiple with inert zero rows:
+        # any batch-fill level then scores through an already-compiled
+        # decode program (the rows are independent, so real scores are
+        # unchanged — a continuously-batching server would otherwise pay
+        # one trace/compile stall per distinct completion-group size)
+        k = len(slots)
+        k_pad = -k % SUBLANES
+        if k_pad:
+            latent = jnp.concatenate(
+                [latent, jnp.zeros((k_pad,) + latent.shape[1:], latent.dtype)]
+            )
+            xs = np.concatenate(
+                [xs, np.zeros((k_pad,) + xs.shape[1:], xs.dtype)]
+            )
+        scores = np.asarray(
+            self._score_window(self.params, self._exec_dec, latent,
+                               jnp.asarray(xs))
+        )[:k]
         for slot in slots:
             slot.chunks, slot.filled = [], 0
             if not self.carry_state:

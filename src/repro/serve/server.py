@@ -1,0 +1,447 @@
+"""Continuous-batching stream server: the policy layer over ``push_many``.
+
+``StreamingAnomalyEngine.push_many`` (PR 5) is the *mechanism* — N
+independent B=1 streams advanced by one gathered B=N step call, bit-equal
+to sequential pushes for sublane-sized pools.  But it only coalesces what
+one caller hands over in a single synchronous call.  Production is the
+other shape entirely: thousands of detector/strain streams arriving
+*asynchronously*, each with a fixed per-chunk latency budget (the paper's
+whole premise).  This module adds the missing policy layer, the same
+continuous-batching loop LLM serving uses:
+
+* **arrival queue** — producers call ``submit(stream_id, chunk)`` from any
+  thread; it is non-blocking (bounded, with an explicit overflow policy)
+  and never touches the engine;
+* **deadline scheduler** — a single scheduler thread gathers whatever is
+  pending into one ``push_many`` call per tick: it waits to *fill* a batch
+  (up to ``max_coalesce`` streams) but flushes early the moment the oldest
+  pending chunk's age reaches ``deadline_us`` — throughput from batching,
+  latency bounded by the deadline;
+* **padded program shapes** — partial batches are padded to sublane-width
+  multiples with inert zero-chunk pad streams, so every fill level of one
+  bucket executes an already-traced program shape (no re-trace as load
+  varies, and the sublane-pool bit-equality contract keeps holding);
+* **dynamic lifecycle** — streams join on first submit and leave via
+  ``close_stream``; the engine's slot gather/scatter is already
+  backend-native, so join/leave is host-side bookkeeping only;
+* **first-class metrics** — per-chunk enqueue->score latency lands in a
+  ``LatencyHistogram`` (p50/p99/max are results, not printf), plus tick
+  counts, the batch-fill distribution, deadline-vs-full flush counts, and
+  drops.
+
+Determinism contract: the scheduler only ever (a) preserves per-stream
+chunk FIFO order and (b) coalesces *distinct* streams of one chunk length
+into a single ``push_many`` call.  Both are exactly the operations
+``push_many`` guarantees bit-equal to sequential single-stream pushes for
+sublane-sized batches, so **any** arrival order / batch-fill sequence the
+scheduler produces scores bit-equal to per-stream sequential replays
+(property-tested, and hard-gated in ``benchmarks/server_bench.py``).
+
+Two drive modes share all scheduling logic:
+
+* threaded (production): ``server.start()`` (or ``with server:``) runs the
+  loop on a daemon thread;
+* manual (tests/benchmarks): leave it unstarted and call ``tick()`` /
+  ``drain()`` — fully deterministic, fake-clock friendly.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter, deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.kernels.lstm_scan.ops import SUBLANES
+
+from .latency import LatencyHistogram
+
+__all__ = [
+    "QueueFullError",
+    "ServerConfig",
+    "ServerStats",
+    "StreamServer",
+]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``submit`` under ``overflow="error"`` on a full queue."""
+
+
+@dataclass
+class ServerConfig:
+    """Scheduler policy knobs (everything model-side lives in the plan).
+
+    ``max_coalesce`` — most streams gathered into one step call; rounded
+    *up* to a sublane-width multiple so full batches are tile-exact.
+    ``deadline_us`` — the coalescing budget: a pending chunk never waits
+    longer than this for the batch to fill (the paper's fixed per-sample
+    budget, 50-500us on real hardware; host clock granularity applies).
+    ``queue_capacity`` / ``overflow`` — backpressure: "block" makes
+    ``submit`` wait for space (producers throttle), "drop_oldest" sheds
+    the stalest pending chunk (freshness wins; counted in stats),
+    "error" raises ``QueueFullError`` (caller-managed).
+    ``pad_to_sublanes`` — pad partial batches to sublane multiples with
+    inert pad streams: bounded set of program shapes across fill levels.
+    """
+
+    max_coalesce: int = SUBLANES
+    deadline_us: float = 200.0
+    queue_capacity: int = 4096
+    overflow: str = "block"
+    pad_to_sublanes: bool = True
+
+    def __post_init__(self):
+        if self.max_coalesce < 1:
+            raise ValueError(f"max_coalesce must be >= 1, got {self.max_coalesce}")
+        self.max_coalesce = _round_up(self.max_coalesce, SUBLANES)
+        if self.deadline_us <= 0:
+            raise ValueError(f"deadline_us must be > 0, got {self.deadline_us}")
+        if self.queue_capacity < 1:
+            raise ValueError(
+                f"queue_capacity must be >= 1, got {self.queue_capacity}"
+            )
+        if self.overflow not in ("block", "drop_oldest", "error"):
+            raise ValueError(
+                "overflow must be one of 'block' | 'drop_oldest' | 'error', "
+                f"got {self.overflow!r}"
+            )
+
+
+@dataclass
+class ServerStats:
+    """Scheduler instrumentation; read a consistent copy via ``summary``."""
+
+    submitted: int = 0
+    processed: int = 0
+    drops: int = 0        # shed by drop_oldest backpressure
+    cancelled: int = 0    # pending chunks discarded by close_stream
+    ticks: int = 0
+    full_flushes: int = 0      # batch reached max_coalesce
+    deadline_flushes: int = 0  # oldest chunk's age hit deadline_us
+    drain_flushes: int = 0     # forced (drain / shutdown)
+    windows_scored: int = 0
+    batch_fill: Counter = field(default_factory=Counter)
+    latency: LatencyHistogram = field(default_factory=LatencyHistogram)
+
+    def summary(self) -> dict:
+        out = {
+            "submitted": self.submitted,
+            "processed": self.processed,
+            "drops": self.drops,
+            "cancelled": self.cancelled,
+            "ticks": self.ticks,
+            "full_flushes": self.full_flushes,
+            "deadline_flushes": self.deadline_flushes,
+            "drain_flushes": self.drain_flushes,
+            "windows_scored": self.windows_scored,
+            "batch_fill": dict(sorted(self.batch_fill.items())),
+        }
+        out.update(self.latency.summary("latency"))
+        return out
+
+
+@dataclass
+class _Pending:
+    stream_id: object
+    chunk: np.ndarray  # (t, input_dim), owned copy
+    t_enqueue: float
+
+
+class StreamServer:
+    """Deadline-coalescing continuous-batching front end for a
+    ``StreamingAnomalyEngine`` (must be constructed with ``batch=1`` —
+    the ``push_many`` pool shape).
+
+    Scores are delivered per completed window, either through the
+    ``on_score(stream_id, score)`` callback (invoked on the scheduler
+    thread — keep it cheap) or, when no callback is given, accumulated
+    for ``pop_scores()``.
+
+    ``clock`` is injectable (seconds, monotonic) so deadline behaviour is
+    testable without sleeping.
+    """
+
+    def __init__(
+        self,
+        engine,
+        config: ServerConfig | None = None,
+        *,
+        on_score: Callable[[object, np.ndarray], None] | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if getattr(engine, "batch", None) != 1:
+            raise ValueError(
+                "StreamServer coalesces independent B=1 streams; construct "
+                "the engine with batch=1 "
+                f"(got batch={getattr(engine, 'batch', None)})"
+            )
+        self.engine = engine
+        self.config = config or ServerConfig()
+        self.stats = ServerStats()
+        self._on_score = on_score
+        self._clock = clock
+        self._input_dim = engine.cfg.input_dim
+
+        self._cond = threading.Condition()
+        self._queue: deque[_Pending] = deque()
+        self._stopping = False
+        self._drain_on_stop = True
+        self._thread: threading.Thread | None = None
+        # the engine is single-caller by design: one lock serializes the
+        # scheduler's push_many against close_stream/drain from other threads
+        self._engine_lock = threading.Lock()
+        self._results_lock = threading.Lock()
+        self._results: dict = {}
+        # identity-only pad stream ids: can never collide with user ids
+        self._pad_ids = [object() for _ in range(SUBLANES - 1)]
+
+    # -- producer side -------------------------------------------------------
+
+    def submit(self, stream_id, chunk: np.ndarray) -> None:
+        """Enqueue one chunk for ``stream_id`` (thread-safe).
+
+        ``chunk``: (t, input_dim) with t >= 1 — or (1, t, input_dim), the
+        engine's push shape, squeezed for convenience.  The chunk is
+        copied (producers may reuse their buffers).  Never calls into the
+        engine; backpressure follows ``config.overflow``.
+        """
+        chunk = np.asarray(chunk)
+        if chunk.ndim == 3 and chunk.shape[0] == 1:
+            chunk = chunk[0]
+        if chunk.ndim != 2 or chunk.shape[0] < 1 or chunk.shape[1] != self._input_dim:
+            raise ValueError(
+                f"chunk must be (t, {self._input_dim}) with t >= 1, "
+                f"got {np.asarray(chunk).shape}"
+            )
+        item = _Pending(stream_id, np.array(chunk), self._clock())
+        with self._cond:
+            while len(self._queue) >= self.config.queue_capacity:
+                if self.config.overflow == "error":
+                    raise QueueFullError(
+                        f"arrival queue full ({self.config.queue_capacity} "
+                        "chunks pending)"
+                    )
+                if self.config.overflow == "drop_oldest":
+                    self._queue.popleft()
+                    self.stats.drops += 1
+                    continue
+                # block: wait for the scheduler to make space
+                if self._thread is None or not self._thread.is_alive():
+                    raise RuntimeError(
+                        "submit would block on a full queue but no scheduler "
+                        "thread is running — start() the server, drain(), or "
+                        "pick a non-blocking overflow policy"
+                    )
+                self._cond.wait()
+            self._queue.append(item)
+            self.stats.submitted += 1
+            self._cond.notify_all()
+
+    def close_stream(self, stream_id) -> int:
+        """Leave: discard the stream's pending chunks (returned as a
+        count), release its engine slot and partial window."""
+        with self._cond:
+            kept = deque(p for p in self._queue if p.stream_id != stream_id)
+            dropped = len(self._queue) - len(kept)
+            self._queue = kept
+            self.stats.cancelled += dropped
+            self._cond.notify_all()
+        with self._engine_lock:
+            self.engine.drop_stream(stream_id)
+        return dropped
+
+    @property
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def pop_scores(self) -> dict:
+        """Scores accumulated since the last call (no ``on_score`` only):
+        ``{stream_id: [(1,) score, ...]}`` in completion order."""
+        with self._results_lock:
+            out, self._results = self._results, {}
+        return out
+
+    # -- scheduler core (shared by thread and manual modes) ------------------
+
+    def _gather_locked(self) -> list[_Pending]:
+        """Pop the next coalescable batch (call with ``_cond`` held).
+
+        The head item defines the chunk-length bucket.  Walking head to
+        tail, take at most one pending chunk per stream and only chunks of
+        the bucket's length; once a stream has been taken *or skipped*,
+        all its later chunks stay queued (per-stream FIFO order is what
+        the bit-equality contract rides on).  Stops at ``max_coalesce``.
+        """
+        if not self._queue:
+            return []
+        t_bucket = self._queue[0].chunk.shape[0]
+        batch: list[_Pending] = []
+        leftovers: deque[_Pending] = deque()
+        seen: set = set()
+        for item in self._queue:
+            sid = item.stream_id
+            if (
+                len(batch) < self.config.max_coalesce
+                and sid not in seen
+                and item.chunk.shape[0] == t_bucket
+            ):
+                batch.append(item)
+            else:
+                leftovers.append(item)
+            seen.add(sid)
+        self._queue = leftovers
+        return batch
+
+    def _fire(self, batch: list[_Pending], reason: str) -> None:
+        """One scheduler tick: gathered batch -> one ``push_many`` call."""
+        ids = [p.stream_id for p in batch]
+        chunks = np.stack([p.chunk for p in batch])  # (N, t, input_dim)
+        n_real = len(ids)
+        n_pad = 0
+        if self.config.pad_to_sublanes:
+            n_pad = _round_up(n_real, SUBLANES) - n_real
+        if n_pad:
+            ids = ids + self._pad_ids[:n_pad]
+            chunks = np.concatenate(
+                [chunks, np.zeros((n_pad,) + chunks.shape[1:], chunks.dtype)]
+            )
+        with self._engine_lock:
+            res = self.engine.push_many(ids, chunks)
+            for pid in self._pad_ids[:n_pad]:
+                # pad slots are throwaway: dropping re-zeroes on next use,
+                # so pad rows never accumulate window fill across ticks
+                self.engine.drop_stream(pid)
+        done = self._clock()
+
+        n_windows = sum(len(res[p.stream_id]) for p in batch)
+        with self._cond:
+            st = self.stats
+            st.ticks += 1
+            st.processed += n_real
+            st.windows_scored += n_windows
+            st.batch_fill[n_real] += 1
+            if n_real >= self.config.max_coalesce:
+                st.full_flushes += 1
+            elif reason == "deadline":
+                st.deadline_flushes += 1
+            else:
+                st.drain_flushes += 1
+            for p in batch:
+                st.latency.record((done - p.t_enqueue) * 1e6)
+            self._cond.notify_all()  # wake blocked producers
+
+        for p in batch:
+            scores = res[p.stream_id]
+            if not scores:
+                continue
+            if self._on_score is not None:
+                for s in scores:
+                    self._on_score(p.stream_id, s)
+            else:
+                with self._results_lock:
+                    self._results.setdefault(p.stream_id, []).extend(scores)
+
+    # -- manual drive (tests / benchmarks) -----------------------------------
+
+    def tick(self, force: bool = False) -> int:
+        """Run one scheduler decision synchronously; returns the number of
+        chunks processed (0 = nothing ready).  ``force=False`` applies the
+        real policy (flush only on a full batch or an expired deadline);
+        ``force=True`` flushes whatever is pending (drain semantics)."""
+        with self._cond:
+            if not self._queue:
+                return 0
+            full = len(self._queue) >= self.config.max_coalesce
+            expired = (
+                (self._clock() - self._queue[0].t_enqueue) * 1e6
+                >= self.config.deadline_us
+            )
+            if not (force or full or expired):
+                return 0
+            batch = self._gather_locked()
+            reason = "deadline" if (expired and not force) else "drain"
+        if not batch:
+            return 0
+        self._fire(batch, reason)
+        return len(batch)
+
+    def drain(self) -> int:
+        """Process everything pending now (manual mode / after stop)."""
+        total = 0
+        while True:
+            n = self.tick(force=True)
+            if n == 0:
+                return total
+            total += n
+
+    # -- threaded drive ------------------------------------------------------
+
+    def start(self) -> "StreamServer":
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("scheduler thread already running")
+        self._stopping = False
+        self._thread = threading.Thread(
+            target=self._loop, name="stream-server", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler thread; ``drain=True`` (default) processes
+        every pending chunk first, ``False`` abandons the queue."""
+        with self._cond:
+            self._stopping = True
+            self._drain_on_stop = drain
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if not drain:
+            with self._cond:
+                self.stats.cancelled += len(self._queue)
+                self._queue.clear()
+
+    def __enter__(self) -> "StreamServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=True)
+
+    def _loop(self) -> None:
+        deadline_s = self.config.deadline_us * 1e-6
+        while True:
+            with self._cond:
+                while not self._queue and not self._stopping:
+                    self._cond.wait()
+                if self._stopping and not (self._drain_on_stop and self._queue):
+                    return
+                if not self._stopping:
+                    # wait for the batch to fill, bounded by the oldest
+                    # pending chunk's remaining deadline budget
+                    reason = "full"
+                    while len(self._queue) < self.config.max_coalesce:
+                        left = deadline_s - (
+                            self._clock() - self._queue[0].t_enqueue
+                        )
+                        if left <= 0:
+                            reason = "deadline"
+                            break
+                        self._cond.wait(left)
+                        if self._stopping or not self._queue:
+                            break
+                    if not self._queue:
+                        continue
+                else:
+                    reason = "drain"
+                batch = self._gather_locked()
+            if batch:
+                self._fire(batch, reason)

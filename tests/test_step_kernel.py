@@ -441,6 +441,57 @@ class TestPushMany:
         with pytest.raises(ValueError, match="batch=1"):
             multi.push_many(["a", "b"], x)
 
+    def test_drop_rejoin_recycled_slot_is_clean(self):
+        """Regression (slot recycling): dropping a stream mid-window and
+        rejoining the same id under ragged fills must score exactly like a
+        brand-new stream — no stale (h, c) or window fill may leak from
+        the recycled slot."""
+        eng, params = self._engine()
+        seq = StreamingAnomalyEngine(params, _gw_cfg(), batch=1)
+        T = eng.window
+        x = np.random.RandomState(15).randn(3, T, 1).astype(np.float32)
+        fresh = np.random.RandomState(16).randn(1, T, 1).astype(np.float32)
+        # "b" accumulates a partial window (non-zero h, c and fill=11)
+        # while "a" and "c" sit at different fill levels
+        eng.push_many(["a", "b", "c"], x[:, :5])
+        eng.push_many(["b"], x[1:2, 5:11])
+        assert eng.stream_ids == ("a", "b", "c")
+        eng.drop_stream("b")
+        assert eng.stream_ids == ("a", "c")
+        # rejoin under a ragged fill: "b" must start from zeros even
+        # though its old slot held state; "a"/"c" must be undisturbed
+        res = eng.push_many(["b", "a", "c"], np.concatenate(
+            [fresh[:, :T - 5], x[:1, 5:T], x[2:3, 5:T]]
+        ))
+        res2 = eng.push_many(["b"], fresh[:, T - 5:])
+        seq.reset()
+        want_b = seq.push(fresh)
+        assert len(res["b"]) == 0 and len(res2["b"]) == 1
+        np.testing.assert_array_equal(res2["b"][0], want_b[0])
+        for i, sid in ((0, "a"), (2, "c")):
+            seq.reset()
+            want = seq.push(x[i : i + 1, :5]) + seq.push(x[i : i + 1, 5:T])
+            assert len(res[sid]) == 1
+            np.testing.assert_array_equal(res[sid][0], want[0])
+
+    def test_drop_all_then_rejoin_same_ids(self):
+        """Dropping every stream and rejoining the same ids in a different
+        order reuses slots without cross-stream contamination."""
+        eng, params = self._engine()
+        seq = StreamingAnomalyEngine(params, _gw_cfg(), batch=1)
+        T = eng.window
+        x = np.random.RandomState(17).randn(2, T, 1).astype(np.float32)
+        eng.push_many(["a", "b"], x[:, : T // 2])
+        eng.drop_stream("a")
+        eng.drop_stream("b")
+        # rejoin reversed: "b" lands in "a"'s old slot and vice versa
+        res = eng.push_many(["b", "a"], x[::-1])
+        for i, sid in enumerate(("a", "b")):
+            seq.reset()
+            want = seq.push(x[i : i + 1])
+            assert len(res[sid]) == 1
+            np.testing.assert_array_equal(res[sid][0], want[0])
+
     def test_push_many_on_layerwise_backend(self):
         """The coalescer is backend-agnostic: the layers state layout
         gathers/scatters on axis 0."""

@@ -1,0 +1,487 @@
+"""Continuous-batching stream server: scheduler policy, backpressure,
+lifecycle, metrics, and the determinism contract.
+
+The contract under test (CPU interpret): the deadline coalescer only ever
+(a) preserves per-stream chunk FIFO order and (b) batches *distinct*
+streams of one chunk length into a single ``push_many`` call — so **any**
+arrival order / batch-fill sequence it produces must score bit-equal to
+sequential per-stream pushes, including mid-run joins and drops
+(property-tested through the ``_hypothesis_compat`` shim).
+
+Scheduling itself is tested deterministically in manual-tick mode with an
+injectable fake clock (no sleeps); one threaded smoke covers the
+production drive mode end to end.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # hermetic container: deterministic fixed-example sweep
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.autoencoder import AutoencoderConfig, init_autoencoder
+from repro.kernels.lstm_scan.ops import SUBLANES
+from repro.serve.engine import StreamingAnomalyEngine
+from repro.serve.latency import LatencyHistogram
+from repro.serve.server import (
+    QueueFullError,
+    ServerConfig,
+    StreamServer,
+)
+
+
+def _gw_cfg(**kw):
+    return AutoencoderConfig(
+        hidden=(9, 9), latent_boundary=1, timesteps=12, **kw
+    )
+
+
+_CFG = _gw_cfg()
+_PARAMS = init_autoencoder(jax.random.PRNGKey(7), _CFG)
+
+
+def _engine(**kw):
+    return StreamingAnomalyEngine(_PARAMS, _CFG, batch=1, **kw)
+
+
+def _sequential_scores(chunk_lists: dict) -> dict:
+    """Ground truth: each stream replayed solo through engine.push."""
+    seq = _engine()
+    out = {}
+    for sid, chunks in chunk_lists.items():
+        seq.reset()
+        scores = []
+        for c in chunks:
+            scores += seq.push(c[None])
+        out[sid] = scores
+    return out
+
+
+def _assert_scores_equal(got: dict, want: dict):
+    assert set(got) == set(want), (sorted(got), sorted(want))
+    for sid in want:
+        assert len(got[sid]) == len(want[sid]), sid
+        for g, w in zip(got[sid], want[sid]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+class FakeClock:
+    """Injectable monotonic clock (seconds), advanced by hand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_us(self, us: float):
+        self.t += us * 1e-6
+
+
+class TestLatencyHistogram:
+    def test_percentiles_bound_samples(self):
+        h = LatencyHistogram()
+        samples = [10, 50, 120, 121, 130, 5000, 80000]
+        h.record_many(samples)
+        assert h.count == len(samples)
+        assert h.min_us == 10 and h.max_us == 80000
+        # geometric bins: value at q is within one bin (~9%) above truth
+        assert 120 <= h.percentile(50) <= 121 * 2 ** (1 / 8)
+        assert h.percentile(100) == 80000
+        assert h.percentile(0) == 10
+
+    def test_single_sample_exact(self):
+        h = LatencyHistogram()
+        h.record(137.0)
+        assert h.percentile(50) == 137.0 == h.percentile(99)
+
+    def test_empty(self):
+        h = LatencyHistogram()
+        assert h.count == 0 and h.percentile(99) == 0.0
+        assert h.summary("x")["x.p50_us"] == 0.0
+
+    def test_merge_adds(self):
+        a, b = LatencyHistogram(), LatencyHistogram()
+        a.record_many([100, 200])
+        b.record_many([400, 800])
+        a.merge(b)
+        assert a.count == 4 and a.max_us == 800 and a.min_us == 100
+
+    def test_summary_keys(self):
+        h = LatencyHistogram()
+        h.record(42.0)
+        s = h.summary("latency")
+        for k in ("count", "mean_us", "p50_us", "p90_us", "p99_us", "max_us"):
+            assert f"latency.{k}" in s
+
+    def test_bad_quantile_raises(self):
+        with pytest.raises(ValueError, match="percentile"):
+            LatencyHistogram().percentile(101)
+
+
+class TestServerConfig:
+    def test_max_coalesce_rounds_to_sublane_multiple(self):
+        assert ServerConfig(max_coalesce=1).max_coalesce == SUBLANES
+        assert ServerConfig(max_coalesce=12).max_coalesce == 2 * SUBLANES
+        assert ServerConfig(max_coalesce=SUBLANES).max_coalesce == SUBLANES
+
+    @pytest.mark.parametrize(
+        "kw",
+        [
+            dict(max_coalesce=0),
+            dict(deadline_us=0),
+            dict(queue_capacity=0),
+            dict(overflow="spill"),
+        ],
+    )
+    def test_invalid_config_raises(self, kw):
+        with pytest.raises(ValueError):
+            ServerConfig(**kw)
+
+    def test_engine_must_be_batch_one(self):
+        multi = StreamingAnomalyEngine(_PARAMS, _CFG, batch=2)
+        with pytest.raises(ValueError, match="batch=1"):
+            StreamServer(multi)
+
+
+class TestManualScheduling:
+    def test_drain_bit_equal_sequential_ragged(self):
+        """Ragged per-stream chunking through the queue scores exactly like
+        solo replays (the server acceptance contract, small edition)."""
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=1e9))
+        T = eng.window
+        x = np.random.RandomState(3).randn(3, 2 * T, 1).astype(np.float32)
+        bounds = (0, 5, 11, 16, 2 * T)
+        chunk_lists = {
+            f"s{i}": [x[i, a:b] for a, b in zip(bounds, bounds[1:])]
+            for i in range(3)
+        }
+        for j in range(len(bounds) - 1):
+            for sid in chunk_lists:
+                srv.submit(sid, chunk_lists[sid][j])
+        srv.drain()
+        _assert_scores_equal(srv.pop_scores(), _sequential_scores(chunk_lists))
+        st_ = srv.stats
+        assert st_.processed == st_.submitted == 12
+        assert st_.windows_scored == 6
+
+    def test_tick_policy_waits_then_deadline_flushes(self):
+        clock = FakeClock()
+        eng = _engine()
+        srv = StreamServer(
+            eng, ServerConfig(deadline_us=200.0), clock=clock
+        )
+        x = np.zeros((4, 1), np.float32)
+        srv.submit("a", x)
+        srv.submit("b", x)
+        # young + under-filled: the policy holds the batch back
+        assert srv.tick() == 0
+        assert srv.pending == 2
+        clock.advance_us(199.0)
+        assert srv.tick() == 0
+        # oldest chunk's age hits the deadline: flush whatever is pending
+        clock.advance_us(2.0)
+        assert srv.tick() == 2
+        assert srv.stats.deadline_flushes == 1
+        assert srv.stats.batch_fill == {2: 1}
+
+    def test_full_batch_flushes_without_deadline(self):
+        clock = FakeClock()
+        eng = _engine()
+        srv = StreamServer(
+            eng, ServerConfig(max_coalesce=SUBLANES, deadline_us=1e9),
+            clock=clock,
+        )
+        x = np.zeros((2, 1), np.float32)
+        for i in range(SUBLANES):
+            srv.submit(f"s{i}", x)
+        assert srv.tick() == SUBLANES  # no clock advance needed
+        assert srv.stats.full_flushes == 1
+        assert srv.stats.deadline_flushes == 0
+
+    def test_chunk_length_bucketing_preserves_fifo(self):
+        """Mixed chunk lengths split into per-length ticks; a stream's
+        later chunk never overtakes its earlier one."""
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=1e9))
+        T = eng.window
+        x = np.random.RandomState(4).randn(2, T, 1).astype(np.float32)
+        srv.submit("a", x[0, :5])     # head: t=5 bucket
+        srv.submit("b", x[1, :6])     # t=6: stays queued this tick
+        srv.submit("a", x[0, 5:T])    # same stream: must wait for a's head
+        assert srv.tick(force=True) == 1          # only a's first chunk
+        assert srv.pending == 2
+        assert srv.tick(force=True) == 1          # b's t=6 chunk
+        assert srv.tick(force=True) == 1          # a's tail
+        got = srv.pop_scores()
+        want = _sequential_scores({
+            "a": [x[0, :5], x[0, 5:T]], "b": [x[1, :6]],
+        })
+        # b completes no window (6 < T): only presence and a's score match
+        _assert_scores_equal(got, {k: v for k, v in want.items() if v})
+
+    def test_same_stream_twice_in_queue_splits_ticks(self):
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=1e9))
+        T = eng.window
+        x = np.random.RandomState(5).randn(1, 2 * T, 1).astype(np.float32)
+        srv.submit("a", x[0, :T])
+        srv.submit("a", x[0, T:])
+        assert srv.tick(force=True) == 1
+        assert srv.tick(force=True) == 1
+        got = srv.pop_scores()
+        want = _sequential_scores({"a": [x[0, :T], x[0, T:]]})
+        _assert_scores_equal(got, want)
+
+    def test_pad_streams_never_leak(self):
+        eng = _engine()
+        srv = StreamServer(
+            eng, ServerConfig(deadline_us=1e9, pad_to_sublanes=True)
+        )
+        srv.submit("a", np.zeros((3, 1), np.float32))
+        srv.drain()
+        assert eng.stream_ids == ("a",)  # pads dropped after the tick
+
+    def test_close_stream_discards_pending_and_slot(self):
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=1e9))
+        T = eng.window
+        x = np.random.RandomState(6).randn(1, T, 1).astype(np.float32)
+        srv.submit("a", x[0, :5])
+        srv.drain()                       # "a" now mid-window in the engine
+        srv.submit("a", x[0, 5:8])
+        srv.submit("a", x[0, 8:])
+        assert srv.close_stream("a") == 2
+        assert srv.stats.cancelled == 2
+        assert srv.pending == 0
+        assert eng.stream_ids == ()
+        # rejoin: fresh state, scores like a brand-new stream
+        srv.submit("a", x[0, :T])
+        srv.drain()
+        _assert_scores_equal(srv.pop_scores(),
+                             _sequential_scores({"a": [x[0, :T]]}))
+
+    def test_submit_shape_validation(self):
+        srv = StreamServer(_engine())
+        with pytest.raises(ValueError, match="chunk must be"):
+            srv.submit("a", np.zeros((0, 1), np.float32))
+        with pytest.raises(ValueError, match="chunk must be"):
+            srv.submit("a", np.zeros((4, 2), np.float32))
+        srv.submit("a", np.zeros((1, 4, 1), np.float32))  # push shape ok
+        assert srv.pending == 1
+
+    def test_latency_histogram_records_per_chunk(self):
+        clock = FakeClock()
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=50.0), clock=clock)
+        srv.submit("a", np.zeros((2, 1), np.float32))
+        clock.advance_us(100.0)
+        srv.submit("b", np.zeros((2, 1), np.float32))
+        srv.tick()  # deadline expired for "a"
+        assert srv.stats.latency.count == 2
+        # "a" waited 100us (fake clock froze during the tick); "b" ~0
+        assert srv.stats.latency.max_us >= 99.0
+
+
+class TestOverflow:
+    def _small(self, policy, clock=None):
+        eng = _engine()
+        return StreamServer(
+            eng,
+            ServerConfig(
+                queue_capacity=2, overflow=policy, deadline_us=1e9
+            ),
+            clock=clock or time.perf_counter,
+        )
+
+    def test_drop_oldest_sheds_stalest(self):
+        srv = self._small("drop_oldest")
+        T = 12
+        x = np.random.RandomState(8).randn(3, T, 1).astype(np.float32)
+        srv.submit("a", x[0])
+        srv.submit("b", x[1])
+        srv.submit("c", x[2])  # capacity 2: "a" is shed
+        assert srv.stats.drops == 1
+        srv.drain()
+        got = srv.pop_scores()
+        assert set(got) == {"b", "c"}
+        _assert_scores_equal(
+            got, _sequential_scores({"b": [x[1]], "c": [x[2]]})
+        )
+
+    def test_error_raises_queue_full(self):
+        srv = self._small("error")
+        srv.submit("a", np.zeros((1, 1), np.float32))
+        srv.submit("b", np.zeros((1, 1), np.float32))
+        with pytest.raises(QueueFullError):
+            srv.submit("c", np.zeros((1, 1), np.float32))
+        assert srv.stats.submitted == 2
+
+    def test_block_without_scheduler_raises(self):
+        srv = self._small("block")
+        srv.submit("a", np.zeros((1, 1), np.float32))
+        srv.submit("b", np.zeros((1, 1), np.float32))
+        with pytest.raises(RuntimeError, match="no scheduler thread"):
+            srv.submit("c", np.zeros((1, 1), np.float32))
+
+    def test_block_unblocks_when_scheduler_drains(self):
+        srv = self._small("block")
+        srv.config.deadline_us = 100.0  # let the thread actually flush
+        with srv:
+            for i in range(6):  # 3x capacity: must block and recover
+                srv.submit(f"s{i}", np.zeros((2, 1), np.float32))
+        assert srv.stats.processed == 6
+        assert srv.stats.drops == 0
+
+
+class TestThreaded:
+    def test_concurrent_producers_bit_equal(self):
+        eng = _engine()
+        srv = StreamServer(
+            eng, ServerConfig(deadline_us=500.0, max_coalesce=SUBLANES)
+        )
+        T = eng.window
+        x = np.random.RandomState(9).randn(6, 2 * T, 1).astype(np.float32)
+        bounds = (0, 4, 9, 12, 2 * T)
+        chunk_lists = {
+            f"s{i}": [x[i, a:b] for a, b in zip(bounds, bounds[1:])]
+            for i in range(6)
+        }
+
+        def produce(ids):
+            for j in range(len(bounds) - 1):
+                for sid in ids:
+                    srv.submit(sid, chunk_lists[sid][j])
+
+        with srv:
+            t1 = threading.Thread(target=produce, args=(["s0", "s1", "s2"],))
+            t2 = threading.Thread(target=produce, args=(["s3", "s4", "s5"],))
+            t1.start(); t2.start()
+            t1.join(); t2.join()
+        # stop() drained: every chunk processed, every window scored
+        assert srv.pending == 0
+        assert srv.stats.processed == srv.stats.submitted == 24
+        _assert_scores_equal(srv.pop_scores(), _sequential_scores(chunk_lists))
+
+    def test_on_score_callback_delivery(self):
+        eng = _engine()
+        seen = []
+        srv = StreamServer(
+            eng, ServerConfig(deadline_us=100.0),
+            on_score=lambda sid, s: seen.append((sid, float(s[0]))),
+        )
+        T = eng.window
+        x = np.random.RandomState(10).randn(1, T, 1).astype(np.float32)
+        with srv:
+            srv.submit("a", x[0])
+        assert len(seen) == 1 and seen[0][0] == "a"
+        assert srv.pop_scores() == {}  # callback mode: nothing accumulated
+
+    def test_stop_without_drain_abandons_queue(self):
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=1e9))
+        srv.start()
+        srv.submit("a", np.zeros((2, 1), np.float32))
+        srv.stop(drain=False)
+        assert srv.pending == 0
+        assert srv.stats.processed == 0
+        assert srv.stats.cancelled >= 1
+
+    def test_restart_after_stop(self):
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=100.0))
+        T = eng.window
+        x = np.random.RandomState(11).randn(1, T, 1).astype(np.float32)
+        with srv:
+            srv.submit("a", x[0, : T // 2])
+        with srv:
+            srv.submit("a", x[0, T // 2 :])
+        _assert_scores_equal(
+            srv.pop_scores(),
+            _sequential_scores({"a": [x[0, : T // 2], x[0, T // 2 :]]}),
+        )
+
+
+class TestSchedulerDeterminism:
+    """Satellite: ANY arrival order / batch-fill sequence the scheduler can
+    produce scores bit-equal to sequential per-stream pushes — including
+    mid-run joins and drops (property-style via the hypothesis shim)."""
+
+    #: chunk boundaries drawn from a small set so the step program shapes
+    #: stay cached across examples (interpret-mode compiles are the cost)
+    _SPLITS = [3, 4, 6, 12]
+
+    @settings(max_examples=5)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_random_schedule_bit_equal(self, seed):
+        rng = np.random.RandomState(seed)
+        eng = _engine()
+        srv = StreamServer(
+            eng,
+            ServerConfig(max_coalesce=SUBLANES, deadline_us=1e9),
+        )
+        T = eng.window
+        n_streams = int(rng.randint(2, 5))
+        data = rng.randn(n_streams, 2 * T, 1).astype(np.float32)
+
+        # random per-stream chunkings from the fixed split set
+        chunk_lists: dict = {}
+        pending: dict = {}
+        for i in range(n_streams):
+            chunks, pos = [], 0
+            while pos < 2 * T:
+                t = min(int(rng.choice(self._SPLITS)), 2 * T - pos)
+                chunks.append(data[i, pos : pos + t])
+                pos += t
+            chunk_lists[f"s{i}"] = chunks
+            pending[f"s{i}"] = list(chunks)
+
+        # one stream joins late: hold its chunks back until others started
+        late = f"s{n_streams - 1}"
+        # interleave submissions in random order; randomly tick mid-run so
+        # the scheduler sees every batch-fill level
+        while any(pending.values()):
+            ready = [
+                sid for sid, q in pending.items()
+                if q and (sid != late or sum(
+                    len(p) for s2, p in pending.items() if s2 != late
+                ) <= len(pending) // 2)
+            ]
+            if not ready:
+                ready = [sid for sid, q in pending.items() if q]
+            sid = ready[int(rng.randint(len(ready)))]
+            srv.submit(sid, pending[sid].pop(0))
+            if rng.rand() < 0.35:
+                srv.tick(force=bool(rng.rand() < 0.5))
+        srv.drain()
+
+        # mid-run drop + rejoin: s0 leaves (partial window discarded) and
+        # rejoins with fresh data — must score like a brand-new stream
+        srv.close_stream("s0")
+        rejoin = rng.randn(T, 1).astype(np.float32)
+        cut = int(rng.choice([s for s in self._SPLITS if s < T]))
+        srv.submit("s0", rejoin[:cut])
+        srv.submit("s0", rejoin[cut:])
+        srv.drain()
+
+        got = srv.pop_scores()
+        want = _sequential_scores(chunk_lists)
+        want_rejoin = _sequential_scores(
+            {"s0": [rejoin[:cut], rejoin[cut:]]}
+        )["s0"]
+        for sid in chunk_lists:
+            expect = want[sid] + (want_rejoin if sid == "s0" else [])
+            assert len(got.get(sid, [])) == len(expect), sid
+            for g, w in zip(got[sid], expect):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        # sanity on the instrumentation: everything submitted was scored
+        assert srv.stats.processed == srv.stats.submitted
+        assert srv.stats.drops == 0
