@@ -10,21 +10,33 @@ the shared ``BENCH_kernels.json`` artifact (``make bench-server``):
   same chunks pushed sequentially one stream at a time.  The 64-stream
   row is **hard-gated at >= 3x** chunks/sec over sequential — the whole
   point of the coalescer is that fleet throughput scales with batch
-  width, not stream count.
+  width, not stream count.  The 1-stream row is **hard-gated at >=
+  0.9x**: it shipped at 0.42x in PR 6 (seven pad streams created and
+  dropped per tick) and must never regress below near-parity again.
 * ``server.p50_us`` / ``server.p99_us`` — per-chunk enqueue->score
   latency under the saturated 64-stream load, straight from the server's
   first-class ``LatencyHistogram``.
 * ``serve.p50_us`` / ``serve.p99_us`` — the single-stream per-push
   latency summary (the serve CLI's measure), through the same shared
   histogram helper (``benchmarks/latency.py``).
+* ``server.adaptive_p99_vs_fixed`` — **hard gate**: a paced half-wave
+  driver (32 joined streams, alternating halves of 16 submitting) runs
+  once under a fixed 5 ms deadline and once under the adaptive policy.
+  The idle half keeps the all-joined fast path disarmed, so the policy's
+  deadline choice — not the drain path — decides when each wave fires;
+  adaptive p99 must be <= fixed p99 at the same offered load (ratio
+  gated <= 1.0), with both throughputs recorded alongside.
 * ``server.vs_sequential_bitequal`` — **hard gate**: a scripted schedule
-  with staggered joins, ragged batch fills (6/8/2/1), a mid-window
+  with staggered joins, ragged batch fills, a mid-window
   ``close_stream`` and a rejoin scores bit-equal to per-stream
   sequential replays at ``max_coalesce=8`` (the sublane pool regime the
-  step coalescer guarantees).
+  step coalescer guarantees) — run under *both* the fixed policy
+  (forced ragged ticks, fills 6/8/2/1) and the adaptive policy
+  (non-forced ticks: the fast path, predicted-fill deadlines and width
+  self-tuning pick their own groupings, which must not matter).
 * ``server.flush_mix`` — scheduler instrumentation from a threaded
-  deadline-paced run: tick count with full / deadline / drain flush
-  split (informational; values are host-timing dependent).
+  deadline-paced run: tick count with full / deadline / fastpath /
+  drain flush split (informational; values are host-timing dependent).
 
 Interpret-mode timings on CPU are correctness-grade; on a TPU host the
 same rows time the compiled kernels.
@@ -42,7 +54,12 @@ from repro.configs.gw import GW_MODELS
 from repro.core.autoencoder import init_autoencoder
 from repro.kernels.lstm_scan.ops import SUBLANES
 from repro.serve.engine import StreamingAnomalyEngine
-from repro.serve.server import ServerConfig, ServerStats, StreamServer
+from repro.serve.server import (
+    AdaptiveConfig,
+    ServerConfig,
+    ServerStats,
+    StreamServer,
+)
 
 #: streamed chunk length (matches step_bench): 4 chunks fill a gw_small
 #: window and every push rides the step kernel
@@ -54,6 +71,13 @@ STREAM_COUNTS = (1, 8, 32, 64)
 #: hard gate: server throughput at 64 streams must be >= this multiple
 #: of sequential B=1 pushes
 GATE_SPEEDUP = 3.0
+
+#: hard gate: a single stream through the server must stay within 10% of
+#: sequential pushes (the PR 6 regression shipped at 0.42x, ungated)
+GATE_1STREAM = 0.9
+
+#: hard gate: adaptive p99 / fixed p99 at equal offered load
+GATE_P99_RATIO = 1.0
 
 
 def _time(fn, n_iter: int = 3) -> float:
@@ -109,8 +133,10 @@ def _throughput_pair(params, cfg, n_streams: int, data: np.ndarray):
     return us_srv, us_seq, srv
 
 
-def _bitequal_gate(params, cfg) -> tuple:
-    """Scripted joins/drops/ragged fills vs sequential replay (hard gate)."""
+def _bitequal_run(params, cfg, adaptive: bool) -> tuple[bool, dict]:
+    """Scripted joins/drops/ragged fills vs sequential replay, under the
+    fixed policy (forced ragged ticks) or the adaptive policy (non-forced
+    ticks: the scheduler picks its own groupings)."""
     t_len = cfg.timesteps
     rng = np.random.default_rng(2106)
     n = 10
@@ -122,19 +148,43 @@ def _bitequal_gate(params, cfg) -> tuple:
         return data[i, k * CHUNK : (k + 1) * CHUNK]
 
     eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
-    srv = StreamServer(
-        eng, ServerConfig(max_coalesce=SUBLANES, deadline_us=1e9)
-    )
+    if adaptive:
+        srv = StreamServer(
+            eng,
+            ServerConfig(
+                max_coalesce=SUBLANES,
+                deadline_us=1e9,
+                adaptive=AdaptiveConfig(max_deadline_us=200.0),
+            ),
+        )
+
+        def settle(drain=False):
+            # the real policy decides: fast path when every joined
+            # stream is pending, predicted-fill deadline otherwise (the
+            # 200us cap bounds the spin)
+            while srv.pending:
+                srv.tick()
+
+    else:
+        srv = StreamServer(
+            eng, ServerConfig(max_coalesce=SUBLANES, deadline_us=1e9)
+        )
+
+        def settle(drain=False):
+            if drain:
+                srv.drain()
+            else:
+                srv.tick(force=True)
 
     # round 0: six early joiners -> one ragged flush at fill 6
     for i in range(6):
         srv.submit(ids[i], chunk(i, 0))
-    srv.tick(force=True)
+    settle()
     # round 1: four late joiners; 10 pending > max_coalesce=8 -> one full
     # flush (fill 8) + one ragged flush (fill 2)
     for i in range(n):
         srv.submit(ids[i], chunk(i, 1 if i < 6 else 0))
-    srv.drain()
+    settle(drain=True)
     # mid-window drop + rejoin: s3 is 50/100 samples into its window;
     # its recycled slot must not leak stale (h, c) into the fresh window
     srv.close_stream(ids[3])
@@ -143,12 +193,13 @@ def _bitequal_gate(params, cfg) -> tuple:
             if i == 3:
                 continue
             srv.submit(ids[i], chunk(i, k if i < 6 else k - 1))
-        srv.tick(force=True)  # fill 9 pending -> full 8 + 1 leftover
+        settle()  # fixed: fill 9 pending -> full 8 + 1 leftover
     for pos in range(0, t_len, CHUNK):
         srv.submit(ids[3], rejoin[pos : pos + CHUNK])
     for i in range(6, n):  # late joiners' final chunk
         srv.submit(ids[i], chunk(i, 3))
-    srv.drain()
+    settle(drain=True)
+    srv.drain()  # fixed: any leftover; adaptive: no-op (settled)
 
     got = srv.pop_scores()
     seq = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
@@ -167,17 +218,107 @@ def _bitequal_gate(params, cfg) -> tuple:
             (np.asarray(a) == np.asarray(b)).all()
             for a, b in zip(have, want)
         )
-    fills = dict(sorted(srv.stats.batch_fill.items()))
-    print(f"bit-equality gate    : {'OK' if equal else 'FAIL'} "
-          f"(10 streams, drop+rejoin, batch fills {fills})")
+    return equal, dict(sorted(srv.stats.batch_fill.items()))
+
+
+def _bitequal_gate(params, cfg) -> tuple:
+    """Bit-equality hard gate, fixed and adaptive scheduling."""
+    eq_fixed, fills_fixed = _bitequal_run(params, cfg, adaptive=False)
+    eq_adaptive, fills_adaptive = _bitequal_run(params, cfg, adaptive=True)
+    ok = eq_fixed and eq_adaptive
+    print(f"bit-equality gate    : {'OK' if ok else 'FAIL'} "
+          f"(10 streams, drop+rejoin; fixed fills {fills_fixed}, "
+          f"adaptive fills {fills_adaptive})")
     row = ("server.vs_sequential_bitequal", 0.0,
-           f"equal={int(equal)}|streams={n}|"
-           f"fills={'/'.join(str(k) for k in fills)}")
-    if not equal:  # hard gate: the scheduler must be numerically free
+           f"equal_fixed={int(eq_fixed)}|equal_adaptive={int(eq_adaptive)}|"
+           f"streams=10|fills_fixed={'/'.join(map(str, fills_fixed))}|"
+           f"fills_adaptive={'/'.join(map(str, fills_adaptive))}|"
+           f"ok={int(ok)}")
+    if not ok:  # hard gate: the scheduler must be numerically free
         raise RuntimeError(
             "StreamServer scores diverged from sequential per-stream "
-            "pushes under joins/drops/ragged fills — the continuous-"
-            "batching scheduler is no longer bit-exact"
+            "pushes under joins/drops/ragged fills "
+            f"(fixed equal={eq_fixed}, adaptive equal={eq_adaptive}) — "
+            "the continuous-batching scheduler is no longer bit-exact"
+        )
+    return row
+
+
+def _paced_run(params, cfg, server_config) -> tuple[ServerStats, float]:
+    """Half-wave paced driver: 32 joined streams, alternating halves of
+    16 submit one chunk each, then the driver ticks until the wave is
+    scored.  The idle half keeps the all-joined fast path disarmed, so
+    the policy's deadline choice — not the drain path — decides when
+    each wave fires.  Returns (stats, chunks/sec)."""
+    t_len = cfg.timesteps
+    n = 32
+    half = n // 2
+    rng = np.random.default_rng(42)
+    data = rng.standard_normal((n, t_len, 1)).astype(np.float32)
+    eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    srv = StreamServer(eng, server_config)
+
+    def wave(pos, lo, forced):
+        for i in range(lo, lo + half):
+            srv.submit(f"s{i}", data[i, pos : pos + CHUNK])
+        if forced:
+            srv.tick(force=True)
+        else:
+            while srv.pending:  # policy decides when the wave fires
+                srv.tick()
+
+    # warm one full window of half-waves first (fill-16 chunk pushes AND
+    # the fill-16 window-completion shape), so compile stalls stay out of
+    # both histograms; the warm-up ends on a window boundary, so the
+    # measured pass replays the identical window phase
+    for pos in range(0, t_len, CHUNK):
+        for lo in (0, half):
+            wave(pos, lo, forced=True)
+    srv.pop_scores()
+    srv.stats = ServerStats()
+
+    n_chunks = 0
+    t0 = time.perf_counter()
+    for pos in range(0, t_len, CHUNK):
+        for lo in (0, half):
+            wave(pos, lo, forced=False)
+            n_chunks += half
+    wall_s = time.perf_counter() - t0
+    srv.pop_scores()
+    return srv.stats, n_chunks / wall_s
+
+
+def _adaptive_vs_fixed_row(params, cfg) -> tuple:
+    """Adaptive-vs-fixed p99 at equal offered load (hard gate <= 1.0)."""
+    fixed_stats, fixed_tput = _paced_run(
+        params, cfg,
+        ServerConfig(max_coalesce=32, deadline_us=5000.0),
+    )
+    adapt_stats, adapt_tput = _paced_run(
+        params, cfg,
+        ServerConfig(
+            max_coalesce=32,
+            deadline_us=5000.0,  # ignored: adaptive picks the deadline
+            adaptive=AdaptiveConfig(max_deadline_us=500.0),
+        ),
+    )
+    fixed_p99 = fixed_stats.latency.percentile(99)
+    adapt_p99 = adapt_stats.latency.percentile(99)
+    ratio = adapt_p99 / fixed_p99 if fixed_p99 > 0 else float("inf")
+    ok = ratio <= GATE_P99_RATIO
+    print(f"adaptive vs fixed    : p99 {adapt_p99:7.0f} us vs "
+          f"{fixed_p99:7.0f} us ({ratio:.2f}x, gate <= 1.0); "
+          f"{adapt_tput:.0f} vs {fixed_tput:.0f} chunks/s")
+    row = ("server.adaptive_p99_vs_fixed", adapt_p99,
+           f"ratio={ratio:.3f}|fixed_p99_us={fixed_p99:.0f}|"
+           f"adaptive_chunks_per_s={adapt_tput:.0f}|"
+           f"fixed_chunks_per_s={fixed_tput:.0f}|ok={int(ok)}")
+    if not ok:
+        raise RuntimeError(
+            f"adaptive p99 {adapt_p99:.0f}us > fixed p99 {fixed_p99:.0f}us "
+            f"at equal offered load (ratio {ratio:.2f} > "
+            f"{GATE_P99_RATIO:.1f}) — the adaptive policy must dominate "
+            "the fixed deadline it replaces"
         )
     return row
 
@@ -200,10 +341,11 @@ def _flush_mix_row(params, cfg) -> tuple:
     st = srv.stats
     print(f"flush mix (16 streams, 2ms deadline): {st.ticks} ticks — "
           f"{st.full_flushes} full, {st.deadline_flushes} deadline, "
-          f"{st.drain_flushes} drain")
+          f"{st.fastpath_flushes} fastpath, {st.drain_flushes} drain")
     return ("server.flush_mix", float(st.ticks),
             f"full={st.full_flushes}|deadline={st.deadline_flushes}|"
-            f"drain={st.drain_flushes}|drops={st.drops}")
+            f"fastpath={st.fastpath_flushes}|drain={st.drain_flushes}|"
+            f"drops={st.drops}")
 
 
 def run() -> list[tuple]:
@@ -234,27 +376,35 @@ def run() -> list[tuple]:
     print(f"single-stream push   : p50 {hist.percentile(50):7.0f} us, "
           f"p99 {hist.percentile(99):7.0f} us")
 
-    # -- throughput sweep + 64-stream gate -----------------------------------
+    # -- throughput sweep + 1-stream and 64-stream gates ---------------------
     gate_speedup = None
+    gate_1stream = None
     srv64 = None
     for n_streams in STREAM_COUNTS:
         us_srv, us_seq, srv = _throughput_pair(
             params, cfg, n_streams, data[:n_streams]
         )
         speedup = us_seq / us_srv
-        gated = n_streams == max(STREAM_COUNTS)
+        gated = n_streams in (1, max(STREAM_COUNTS))
         derived = (
             f"chunks_per_s={1e6 / us_srv:.0f}|sequential_us={us_seq:.0f}|"
             f"speedup={speedup:.2f}"
         )
-        if gated:
+        if n_streams == 1:
+            derived += f"|ok={int(speedup >= GATE_1STREAM)}"
+            gate_1stream = speedup
+        elif gated:
             derived += f"|ok={int(speedup >= GATE_SPEEDUP)}"
             gate_speedup = speedup
             srv64 = srv
         rows.append((f"server.throughput_{n_streams}streams", us_srv, derived))
+        gate_note = (
+            ", gate >= 0.9" if n_streams == 1
+            else ", gate >= 3.0" if gated else ""
+        )
         print(f"{n_streams:3d} streams          : {us_srv:7.0f} us/chunk "
               f"server vs {us_seq:7.0f} sequential ({speedup:.2f}x"
-              f"{', gate >= 3.0' if gated else ''})")
+              f"{gate_note})")
 
     # tail latency under the saturated 64-stream load (drain-mode: chunks
     # queue a full round-robin wave, so the histogram is queue-dominated)
@@ -262,10 +412,17 @@ def run() -> list[tuple]:
     print(f"64-stream load       : p50 {srv64.stats.latency.percentile(50):7.0f} us, "
           f"p99 {srv64.stats.latency.percentile(99):7.0f} us enqueue->score")
 
+    rows.append(_adaptive_vs_fixed_row(params, cfg))
     rows.append(_bitequal_gate(params, cfg))
     rows.append(_flush_mix_row(params, cfg))
 
-    if gate_speedup < GATE_SPEEDUP:  # the PR's headline gate
+    if gate_1stream < GATE_1STREAM:  # the 0.42x regression, now gated
+        raise RuntimeError(
+            f"server.throughput_1streams speedup {gate_1stream:.2f}x < "
+            f"{GATE_1STREAM:.1f}x sequential — a lone stream through the "
+            "server must stay near parity (fast path + width-1 pad rung)"
+        )
+    if gate_speedup < GATE_SPEEDUP:  # the PR 6 headline gate
         raise RuntimeError(
             f"server.throughput_64streams speedup {gate_speedup:.2f}x < "
             f"{GATE_SPEEDUP:.1f}x over sequential pushes — continuous "

@@ -26,10 +26,14 @@ synchronous loops: a synthetic Poisson-arrival driver submits chunks for
 ``--streams`` independent streams at ``--arrival-hz`` aggregate rate
 (0 = as fast as possible, the saturation test) and the deadline scheduler
 coalesces whatever is pending into ``push_many`` batches
-(``--deadline-us`` budget, ``--max-coalesce`` batch cap, ``--overflow``
-backpressure policy).  Enqueue->score latency lands in a fixed-bin
-histogram; the run prints p50/p99/max plus the scheduler's tick, flush,
-batch-fill, and drop counters.
+(``--deadline-us`` fixed budget, ``--max-coalesce`` gather cap,
+``--overflow`` backpressure policy).  ``--adaptive`` replaces the fixed
+deadline with the self-tuning policy: per-bucket arrival-rate EWMAs pick
+a deadline that fills the batch with high probability (capped by
+``--max-deadline-us``), flushing immediately when every joined stream is
+already pending or the batch cannot fill within the cap.  Enqueue->score
+latency lands in a fixed-bin histogram; the run prints p50/p99/max plus
+the scheduler's tick, flush, batch-fill, and drop counters.
 ``--plan-only`` prints the resolved execution plan for both segments
 (backend, placement, weight dtype, pack bytes) and exits without scoring —
 the dryrun-style smoke for serving configs.
@@ -92,11 +96,22 @@ def main():
                          "StreamServer (arrival queue + deadline "
                          "coalescer) with a Poisson-arrival driver")
     ap.add_argument("--deadline-us", type=float, default=200.0,
-                    help="coalescing budget: flush as soon as the oldest "
-                         "pending chunk is this old (server mode)")
+                    help="fixed coalescing budget: flush as soon as the "
+                         "oldest pending chunk is this old (server mode; "
+                         "ignored under --adaptive)")
     ap.add_argument("--max-coalesce", type=int, default=8,
-                    help="most streams gathered into one step call; "
-                         "rounded up to a sublane multiple (server mode)")
+                    help="most streams gathered into one step call, "
+                         "honored exactly (partial batches are padded up "
+                         "the bounded program-shape ladder separately)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="self-tuning scheduler: pick each bucket's "
+                         "deadline from the observed arrival rate (EWMA "
+                         "over inter-arrival gaps) and let the effective "
+                         "coalescing width adapt between ticks")
+    ap.add_argument("--max-deadline-us", type=float, default=500.0,
+                    help="adaptive mode's hard cap on the chosen deadline "
+                         "(no chunk waits longer than this for its batch "
+                         "to fill)")
     ap.add_argument("--overflow", choices=("block", "drop_oldest", "error"),
                     default="block",
                     help="bounded-queue backpressure policy (server mode)")
@@ -209,7 +224,7 @@ def serve_server(args, params, cfg, ds):
     """Continuous-batching serving: Poisson arrivals through the deadline
     coalescer (``serve/server.py``), scheduler metrics as the output."""
     from repro.serve.engine import StreamingAnomalyEngine
-    from repro.serve.server import ServerConfig, StreamServer
+    from repro.serve.server import AdaptiveConfig, ServerConfig, StreamServer
 
     engine = StreamingAnomalyEngine(
         params, cfg, batch=1, placement=args.placement,
@@ -220,6 +235,8 @@ def serve_server(args, params, cfg, ds):
         deadline_us=args.deadline_us,
         queue_capacity=args.queue_capacity,
         overflow=args.overflow,
+        adaptive=(AdaptiveConfig(max_deadline_us=args.max_deadline_us)
+                  if args.adaptive else None),
     ))
     n_streams = max(1, args.streams)
     chunk = args.chunk or cfg.timesteps
@@ -238,11 +255,13 @@ def serve_server(args, params, cfg, ds):
                        for pos in range(0, w.shape[0], chunk)])
     total_chunks = sum(len(q) for q in queues)
 
+    policy = (f"adaptive (deadline <= {args.max_deadline_us:.0f}us from "
+              "arrival-rate EWMA)" if args.adaptive
+              else f"fixed deadline={args.deadline_us:.0f}us")
     print(f"{args.gw_model}: StreamServer impl={engine.effective_impl}, "
           f"{n_streams} streams x {args.windows} windows "
           f"({chunk}-sample chunks, {total_chunks} total), "
-          f"deadline={args.deadline_us:.0f}us "
-          f"max_coalesce={server.config.max_coalesce} "
+          f"{policy} max_coalesce={server.config.max_coalesce} "
           f"overflow={args.overflow}"
           + (f", ~{args.arrival_hz:.0f} chunks/s Poisson"
              if args.arrival_hz > 0 else ", max-rate arrivals"))
@@ -276,9 +295,11 @@ def serve_server(args, params, cfg, ds):
     print(f"{total_chunks} chunks -> {n_scores} window scores in "
           f"{wall:.2f}s ({total_chunks / wall:.0f} chunks/s)")
     print(f"scheduler: {s.ticks} ticks ({s.full_flushes} full, "
-          f"{s.deadline_flushes} deadline, {s.drain_flushes} drain), "
-          f"{s.drops} dropped, batch fill "
-          f"{dict(sorted(s.batch_fill.items()))}")
+          f"{s.deadline_flushes} deadline, {s.fastpath_flushes} fastpath, "
+          f"{s.drain_flushes} drain), {s.drops} dropped, batch fill "
+          f"{dict(sorted(s.batch_fill.items()))}"
+          + (f", effective width {server.effective_coalesce}"
+             if args.adaptive else ""))
     print(f"enqueue->score latency: p50={s.latency.percentile(50):.0f}us "
           f"p99={s.latency.percentile(99):.0f}us "
           f"max={s.latency.max_us:.0f}us over {s.latency.count} chunks")

@@ -52,7 +52,24 @@ from repro.core.backends import (  # noqa: F401  (re-exports)
     quantized_weight_storage,
     resolve_impl,
 )
+from repro.kernels.lstm_scan.ops import SUBLANES
 from repro.models.api import get_model
+
+
+def _pad_width(n: int) -> int:
+    """Program-shape ladder: the width a batch of ``n`` independent rows
+    is padded up to — {1, 2, 4} below one sublane tile, then sublane
+    multiples.  A bounded set of compiled shapes across every fill level,
+    without forcing a lone stream through a sublane-wide program (the
+    step kernel already pads its batch axis to sublane multiples
+    *internally*, so the narrow rungs stay bit-equal to the wide ones).
+    """
+    if n >= SUBLANES:
+        return (n + SUBLANES - 1) // SUBLANES * SUBLANES
+    w = 1
+    while w < n:
+        w *= 2
+    return w
 
 logger = logging.getLogger(__name__)
 
@@ -499,8 +516,6 @@ class StreamingAnomalyEngine:
         """Score the streams that just completed a window — one batched
         decode for the whole group (bit-equal to per-stream scoring: the
         decode + MSE tail is row-independent)."""
-        from repro.kernels.lstm_scan.ops import SUBLANES
-
         # batch the latent extraction: ONE last_hidden on the tree-concat
         # state instead of one eager gather per stream (at 64 streams the
         # per-slot getitems alone cost more than the whole step call)
@@ -513,13 +528,14 @@ class StreamingAnomalyEngine:
         xs = np.concatenate(
             [np.concatenate(s.chunks, axis=1) for s in slots], axis=0
         )
-        # pad the done group to a sublane multiple with inert zero rows:
-        # any batch-fill level then scores through an already-compiled
-        # decode program (the rows are independent, so real scores are
-        # unchanged — a continuously-batching server would otherwise pay
-        # one trace/compile stall per distinct completion-group size)
+        # pad the done group up the program-shape ladder with inert zero
+        # rows: any batch-fill level then scores through an already-
+        # compiled decode program (the rows are independent, so real
+        # scores are unchanged — a continuously-batching server would
+        # otherwise pay one trace/compile stall per distinct completion-
+        # group size), while a lone stream decodes one row, not eight
         k = len(slots)
-        k_pad = -k % SUBLANES
+        k_pad = _pad_width(k) - k
         if k_pad:
             latent = jnp.concatenate(
                 [latent, jnp.zeros((k_pad,) + latent.shape[1:], latent.dtype)]

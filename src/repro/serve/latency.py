@@ -18,6 +18,14 @@ per-window latencies through it (replacing the old ad-hoc
 ``benchmarks/latency`` emit its ``summary()`` as ``*.p50_us`` /
 ``*.p99_us`` JSON rows.  Exact ``count/mean/min/max`` are tracked on the
 side, so only interior percentiles are approximate.
+
+This module also carries the server's other streaming statistic: the
+``ArrivalRateEstimator``, an EWMA over inter-arrival gaps.  The
+``StreamServer`` keeps one per chunk-length bucket (chunks are already
+timestamped at ``submit``) and uses the estimated gap to *choose* its
+coalescing deadline — the scheduling analogue of the paper's per-layer
+reuse factors, matched to the work actually arriving instead of a global
+constant.
 """
 
 from __future__ import annotations
@@ -50,6 +58,92 @@ def _bin_upper(idx: int) -> float:
     if idx <= 0:
         return MIN_US
     return MIN_US * 2.0 ** (idx / SUB_BINS)
+
+
+class ArrivalRateEstimator:
+    """EWMA over inter-arrival gaps (microseconds), idle-aware.
+
+    Feed monotonic arrival timestamps (seconds, the ``StreamServer``
+    clock) through ``observe``; read the smoothed gap via ``gap_us``.
+    Three degenerate cases are first-class:
+
+    * **first arrival** — primes the reference timestamp only; ``gap_us``
+      stays ``None`` (there is no gap yet), so consumers never divide by
+      zero on a cold bucket;
+    * **simultaneous arrivals** — a zero gap is a legal observation (a
+      burst submitted faster than the clock resolution); ``rate_hz``
+      reports ``inf`` rather than dividing by it;
+    * **silent-then-burst** — a gap longer than ``idle_reset_factor`` x
+      the current estimate is an idle-period boundary, not a sample of
+      the within-burst rate: the stale estimate is *discarded* (back to
+      ``None``) and the next gap re-seeds it, so one long silence neither
+      poisons the EWMA nor lingers after traffic resumes.
+
+    >>> est = ArrivalRateEstimator(alpha=0.5)
+    >>> est.observe(0.0); est.gap_us is None
+    True
+    >>> est.observe(100e-6); est.gap_us
+    100.0
+    """
+
+    def __init__(self, alpha: float = 0.25, idle_reset_factor: float = 50.0):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if idle_reset_factor <= 1.0:
+            raise ValueError(
+                f"idle_reset_factor must be > 1, got {idle_reset_factor}"
+            )
+        self.alpha = alpha
+        self.idle_reset_factor = idle_reset_factor
+        self.observed = 0
+        self._last_t: float | None = None
+        self._gap_us: float | None = None
+
+    def observe(self, t_s: float) -> None:
+        """Record one arrival at monotonic time ``t_s`` (seconds)."""
+        self.observed += 1
+        if self._last_t is None:
+            self._last_t = t_s
+            return
+        gap = max((t_s - self._last_t) * 1e6, 0.0)
+        self._last_t = t_s
+        if self._gap_us is None:
+            self._gap_us = gap
+        elif gap > self.idle_reset_factor * max(self._gap_us, 1.0):
+            # idle boundary: silence says nothing about the burst rate
+            self._gap_us = None
+        elif self._gap_us > self.idle_reset_factor**2 * max(gap, 1.0):
+            # the standing estimate was itself seeded across a silence
+            # (e.g. the very first gap after server start): re-seed from
+            # the in-burst gap instead of EWMA-decaying for many samples.
+            # Squared factor: ordinary heavy-tailed arrival noise must
+            # never trip this, only orders-of-magnitude idle artifacts.
+            self._gap_us = gap
+        else:
+            self._gap_us += self.alpha * (gap - self._gap_us)
+
+    @property
+    def gap_us(self) -> float | None:
+        """Smoothed inter-arrival gap; ``None`` until two arrivals have
+        been seen in the current burst."""
+        return self._gap_us
+
+    @property
+    def rate_hz(self) -> float | None:
+        """Arrival rate implied by the gap (``None`` when unestimated)."""
+        if self._gap_us is None:
+            return None
+        if self._gap_us == 0.0:
+            return math.inf
+        return 1e6 / self._gap_us
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        if self._gap_us is None:
+            return f"ArrivalRateEstimator(n={self.observed}, unestimated)"
+        return (
+            f"ArrivalRateEstimator(n={self.observed}, "
+            f"gap={self._gap_us:.1f}us)"
+        )
 
 
 class LatencyHistogram:

@@ -15,12 +15,29 @@ continuous-batching loop LLM serving uses:
 * **deadline scheduler** — a single scheduler thread gathers whatever is
   pending into one ``push_many`` call per tick: it waits to *fill* a batch
   (up to ``max_coalesce`` streams) but flushes early the moment the oldest
-  pending chunk's age reaches ``deadline_us`` — throughput from batching,
-  latency bounded by the deadline;
-* **padded program shapes** — partial batches are padded to sublane-width
-  multiples with inert zero-chunk pad streams, so every fill level of one
-  bucket executes an already-traced program shape (no re-trace as load
-  varies, and the sublane-pool bit-equality contract keeps holding);
+  pending chunk's age reaches its deadline — throughput from batching,
+  latency bounded by the deadline.  The deadline is tracked **per
+  chunk-length bucket** (a bucket stuck behind a busy head bucket can
+  never overstay), and two degenerate cases flush *immediately*: when
+  every currently-joined stream already has a pending chunk (waiting
+  cannot improve fill — the single-stream case is the extreme), and when
+  a batch is full;
+* **adaptive policy** (``ServerConfig.adaptive``) — instead of a fixed
+  ``deadline_us``, the scheduler estimates each bucket's arrival rate
+  with an EWMA over inter-arrival gaps (``serve/latency.py``) and picks
+  the deadline that fills the batch with high probability under that
+  rate, capped by ``max_deadline_us`` — and when even the cap cannot
+  fill it, flushes at once rather than waiting out a budget that buys
+  nothing.  The effective coalescing width widens toward
+  ``max_coalesce`` while full batches keep arriving and narrows when
+  the queue depth says the engine is the bottleneck (bounding the
+  queueing tail behind oversized ticks);
+* **padded program shapes** — partial batches are padded up a bounded
+  width ladder ({1, 2, 4} then sublane-width multiples) with inert
+  zero-chunk pad streams, so every fill level of one bucket executes an
+  already-traced program shape (no re-trace as load varies, and the
+  sublane-pool bit-equality contract keeps holding) while a lone stream
+  runs the width-1 program instead of paying for seven pad streams;
 * **dynamic lifecycle** — streams join on first submit and leave via
   ``close_stream``; the engine's slot gather/scatter is already
   backend-native, so join/leave is host-side bookkeeping only;
@@ -47,6 +64,7 @@ Two drive modes share all scheduling logic:
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from collections import Counter, deque
@@ -57,9 +75,10 @@ import numpy as np
 
 from repro.kernels.lstm_scan.ops import SUBLANES
 
-from .latency import LatencyHistogram
+from .latency import ArrivalRateEstimator, LatencyHistogram
 
 __all__ = [
+    "AdaptiveConfig",
     "QueueFullError",
     "ServerConfig",
     "ServerStats",
@@ -67,8 +86,10 @@ __all__ = [
 ]
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+# the {1, 2, 4} + sublane-multiples program-shape ladder is shared with
+# the engine's window-completion decode (one bounded set of compiled
+# shapes across both the step and decode paths)
+from .engine import _pad_width  # noqa: E402  (re-export for tests)
 
 
 class QueueFullError(RuntimeError):
@@ -76,20 +97,86 @@ class QueueFullError(RuntimeError):
 
 
 @dataclass
+class AdaptiveConfig:
+    """Self-tuning scheduler knobs (``ServerConfig.adaptive``).
+
+    ``max_deadline_us`` — hard cap on the chosen coalescing deadline: no
+    pending chunk ever waits longer than this for its batch to fill (the
+    paper's fixed per-sample budget survives as the *bound* the adaptive
+    policy works under).
+    ``min_deadline_us`` — floor on the chosen deadline; also the wait
+    applied when the estimator says the batch cannot fill within
+    ``max_deadline_us`` (0 = flush immediately — waiting buys nothing).
+    ``ewma_alpha`` / ``idle_reset_factor`` — per-bucket inter-arrival
+    EWMA weight and idle-boundary threshold (``ArrivalRateEstimator``).
+    ``fill_headroom`` — safety factor on the predicted time-to-fill
+    (arrival gaps are noisy; >1 waits a little longer than the point
+    estimate before giving up on the batch filling).
+    ``min_coalesce`` — narrowest effective width the engine-bottleneck
+    shrink may reach (one sublane tile by default: below that, batching
+    stops paying at all).
+    """
+
+    max_deadline_us: float = 500.0
+    min_deadline_us: float = 0.0
+    ewma_alpha: float = 0.25
+    idle_reset_factor: float = 50.0
+    fill_headroom: float = 1.5
+    min_coalesce: int = SUBLANES
+
+    def __post_init__(self):
+        if self.max_deadline_us <= 0:
+            raise ValueError(
+                f"max_deadline_us must be > 0, got {self.max_deadline_us}"
+            )
+        if not 0.0 <= self.min_deadline_us <= self.max_deadline_us:
+            raise ValueError(
+                "min_deadline_us must be in [0, max_deadline_us], got "
+                f"{self.min_deadline_us}"
+            )
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1], got {self.ewma_alpha}"
+            )
+        if self.idle_reset_factor <= 1.0:
+            raise ValueError(
+                f"idle_reset_factor must be > 1, got {self.idle_reset_factor}"
+            )
+        if self.fill_headroom <= 0:
+            raise ValueError(
+                f"fill_headroom must be > 0, got {self.fill_headroom}"
+            )
+        if self.min_coalesce < 1:
+            raise ValueError(
+                f"min_coalesce must be >= 1, got {self.min_coalesce}"
+            )
+
+
+@dataclass
 class ServerConfig:
     """Scheduler policy knobs (everything model-side lives in the plan).
 
-    ``max_coalesce`` — most streams gathered into one step call; rounded
-    *up* to a sublane-width multiple so full batches are tile-exact.
-    ``deadline_us`` — the coalescing budget: a pending chunk never waits
-    longer than this for the batch to fill (the paper's fixed per-sample
-    budget, 50-500us on real hardware; host clock granularity applies).
+    ``max_coalesce`` — most *distinct streams* gathered into one step
+    call, honored exactly as requested (``max_coalesce=1`` really means
+    no coalescing).  Program shapes are a separate concern: partial
+    batches are padded up the bounded ``_pad_width`` ladder, so the
+    requested gather cap never changes which step programs get compiled,
+    only how many streams ride each one.
+    ``deadline_us`` — the *fixed-policy* coalescing budget: a pending
+    chunk never waits longer than this for the batch to fill (the
+    paper's fixed per-sample budget, 50-500us on real hardware; host
+    clock granularity applies).  Ignored when ``adaptive`` is set.
+    ``adaptive`` — an ``AdaptiveConfig`` (or ``True`` for defaults):
+    choose the deadline per chunk-length bucket from the observed
+    arrival rate instead, capped by ``adaptive.max_deadline_us``, and
+    let the effective width self-tune between ticks.
     ``queue_capacity`` / ``overflow`` — backpressure: "block" makes
     ``submit`` wait for space (producers throttle), "drop_oldest" sheds
     the stalest pending chunk (freshness wins; counted in stats),
     "error" raises ``QueueFullError`` (caller-managed).
-    ``pad_to_sublanes`` — pad partial batches to sublane multiples with
-    inert pad streams: bounded set of program shapes across fill levels.
+    ``pad_to_sublanes`` — pad partial batches up the program-shape
+    ladder with inert pad streams: bounded set of compiled shapes across
+    fill levels.
     """
 
     max_coalesce: int = SUBLANES
@@ -97,11 +184,11 @@ class ServerConfig:
     queue_capacity: int = 4096
     overflow: str = "block"
     pad_to_sublanes: bool = True
+    adaptive: AdaptiveConfig | bool | None = None
 
     def __post_init__(self):
         if self.max_coalesce < 1:
             raise ValueError(f"max_coalesce must be >= 1, got {self.max_coalesce}")
-        self.max_coalesce = _round_up(self.max_coalesce, SUBLANES)
         if self.deadline_us <= 0:
             raise ValueError(f"deadline_us must be > 0, got {self.deadline_us}")
         if self.queue_capacity < 1:
@@ -112,6 +199,17 @@ class ServerConfig:
             raise ValueError(
                 "overflow must be one of 'block' | 'drop_oldest' | 'error', "
                 f"got {self.overflow!r}"
+            )
+        if self.adaptive is True:
+            self.adaptive = AdaptiveConfig()
+        elif self.adaptive is False:
+            self.adaptive = None
+        elif self.adaptive is not None and not isinstance(
+            self.adaptive, AdaptiveConfig
+        ):
+            raise ValueError(
+                "adaptive must be an AdaptiveConfig, True, or None, got "
+                f"{self.adaptive!r}"
             )
 
 
@@ -124,8 +222,9 @@ class ServerStats:
     drops: int = 0        # shed by drop_oldest backpressure
     cancelled: int = 0    # pending chunks discarded by close_stream
     ticks: int = 0
-    full_flushes: int = 0      # batch reached max_coalesce
-    deadline_flushes: int = 0  # oldest chunk's age hit deadline_us
+    full_flushes: int = 0      # batch reached the effective width
+    deadline_flushes: int = 0  # oldest chunk in its bucket hit the deadline
+    fastpath_flushes: int = 0  # every joined stream pending: waiting is moot
     drain_flushes: int = 0     # forced (drain / shutdown)
     windows_scored: int = 0
     batch_fill: Counter = field(default_factory=Counter)
@@ -140,6 +239,7 @@ class ServerStats:
             "ticks": self.ticks,
             "full_flushes": self.full_flushes,
             "deadline_flushes": self.deadline_flushes,
+            "fastpath_flushes": self.fastpath_flushes,
             "drain_flushes": self.drain_flushes,
             "windows_scored": self.windows_scored,
             "batch_fill": dict(sorted(self.batch_fill.items())),
@@ -195,6 +295,14 @@ class StreamServer:
         self._stopping = False
         self._drain_on_stop = True
         self._thread: threading.Thread | None = None
+        # adaptive scheduler state: effective gather width (narrowed /
+        # widened between ticks), per-bucket arrival estimators, and the
+        # queue depth at the end of the previous tick (the engine-
+        # bottleneck signal: depth growing across ticks means arrivals
+        # outpace service)
+        self._width = self.config.max_coalesce
+        self._est: dict[int, ArrivalRateEstimator] = {}
+        self._last_depth = 0
         # the engine is single-caller by design: one lock serializes the
         # scheduler's push_many against close_stream/drain from other threads
         self._engine_lock = threading.Lock()
@@ -243,6 +351,16 @@ class StreamServer:
                 self._cond.wait()
             self._queue.append(item)
             self.stats.submitted += 1
+            est = self._est.get(chunk.shape[0])
+            if est is None:
+                ad = self.config.adaptive
+                est = self._est[chunk.shape[0]] = ArrivalRateEstimator(
+                    alpha=ad.ewma_alpha if ad else 0.25,
+                    idle_reset_factor=(
+                        ad.idle_reset_factor if ad else 50.0
+                    ),
+                )
+            est.observe(item.t_enqueue)
             self._cond.notify_all()
 
     def close_stream(self, stream_id) -> int:
@@ -272,25 +390,131 @@ class StreamServer:
 
     # -- scheduler core (shared by thread and manual modes) ------------------
 
-    def _gather_locked(self) -> list[_Pending]:
+    @property
+    def effective_coalesce(self) -> int:
+        """The current gather width (== ``config.max_coalesce`` under the
+        fixed policy; self-tuned between ticks under adaptive)."""
+        return self._width
+
+    def arrival_gap_us(self, chunk_len: int) -> float | None:
+        """Estimated inter-arrival gap for one chunk-length bucket
+        (``None`` until the bucket's EWMA has two in-burst samples)."""
+        with self._cond:
+            est = self._est.get(chunk_len)
+            return est.gap_us if est is not None else None
+
+    def _bucket_stats_locked(self) -> dict[int, tuple[int, float]]:
+        """Per chunk-length bucket, over *stream heads* (call with
+        ``_cond`` held): ``{chunk_len: (gatherable_fill, oldest_enqueue)}``.
+
+        Only the head of each stream's FIFO is gatherable this tick, so
+        fill counts distinct streams whose head chunk is in the bucket
+        (a raw ``len(queue)`` overcounts one stream's backlog), and the
+        deadline clock per bucket starts at its oldest gatherable head —
+        a bucket parked behind a repeatedly-flushing head bucket keeps
+        its own age and can never overstay unobserved.
+        """
+        heads: dict = {}
+        for item in self._queue:
+            heads.setdefault(item.stream_id, item)
+        stats: dict[int, tuple[int, float]] = {}
+        for item in heads.values():
+            t = item.chunk.shape[0]
+            fill, oldest = stats.get(t, (0, math.inf))
+            stats[t] = (fill + 1, min(oldest, item.t_enqueue))
+        return stats
+
+    def _deadline_us_locked(self, t_bucket: int, fill: int,
+                            n_joined: int) -> float:
+        """The coalescing budget for one bucket right now.
+
+        Fixed policy: the ``deadline_us`` constant.  Adaptive: predict
+        the time for ``need`` more distinct streams to arrive from the
+        bucket's EWMA inter-arrival gap; wait that long (within
+        [min, max]_deadline_us) when the batch will plausibly fill, and
+        only ``min_deadline_us`` when it cannot — waiting out a budget
+        that cannot be filled is the pathology this policy removes.
+        """
+        ad = self.config.adaptive
+        if ad is None:
+            return self.config.deadline_us
+        need = min(self._width, n_joined) - fill
+        if need <= 0:
+            return ad.min_deadline_us
+        est = self._est.get(t_bucket)
+        gap = est.gap_us if est is not None else None
+        if gap is None:
+            return ad.max_deadline_us  # cold bucket: conservative budget
+        expected_fill_us = gap * need * ad.fill_headroom
+        if expected_fill_us > ad.max_deadline_us:
+            return ad.min_deadline_us
+        return max(expected_fill_us, ad.min_deadline_us)
+
+    def _decide_locked(self, now: float):
+        """One scheduling decision (call with ``_cond`` held):
+        ``(t_bucket, reason, None)`` to flush that bucket now, or
+        ``(None, None, wait_us)`` to hold for up to ``wait_us``.
+
+        Order: (1) the all-joined-pending fast path — when every stream
+        the server knows about (resident in the engine or pending in the
+        queue) already has a queued chunk, no amount of waiting can add
+        a distinct stream to any batch, so flush the oldest bucket at
+        once (this is the single-stream case in the extreme: one joined
+        stream, one pending chunk, zero wait); (2) any bucket whose
+        oldest gatherable chunk has outlived its deadline, oldest first;
+        (3) any bucket already at the effective width; (4) wait for the
+        tightest remaining budget.
+        """
+        if not self._queue:
+            return None, None, None
+        stats = self._bucket_stats_locked()
+        pending_ids = {item.stream_id for item in self._queue}
+        joined = set(self.engine.stream_ids) | pending_ids
+        if all(sid in pending_ids for sid in joined):
+            t = min(stats, key=lambda t: stats[t][1])
+            reason = "full" if stats[t][0] >= self._width else "fastpath"
+            return t, reason, None
+        best_wait = math.inf
+        exp_t, exp_oldest = None, math.inf
+        full_t = None
+        for t, (fill, oldest) in stats.items():
+            if fill >= self._width:
+                full_t = t if full_t is None else full_t
+                continue
+            deadline = self._deadline_us_locked(t, fill, len(joined))
+            age_us = (now - oldest) * 1e6
+            if age_us >= deadline:
+                if oldest < exp_oldest:
+                    exp_t, exp_oldest = t, oldest
+            else:
+                best_wait = min(best_wait, deadline - age_us)
+        if exp_t is not None:
+            return exp_t, "deadline", None
+        if full_t is not None:
+            return full_t, "full", None
+        return None, None, best_wait
+
+    def _gather_locked(self, t_bucket: int | None = None) -> list[_Pending]:
         """Pop the next coalescable batch (call with ``_cond`` held).
 
-        The head item defines the chunk-length bucket.  Walking head to
-        tail, take at most one pending chunk per stream and only chunks of
-        the bucket's length; once a stream has been taken *or skipped*,
-        all its later chunks stay queued (per-stream FIFO order is what
-        the bit-equality contract rides on).  Stops at ``max_coalesce``.
+        ``t_bucket`` picks the chunk-length bucket (default: the head
+        item's).  Walking head to tail, take at most one pending chunk
+        per stream and only chunks of the bucket's length; once a stream
+        has been taken *or skipped*, all its later chunks stay queued
+        (per-stream FIFO order is what the bit-equality contract rides
+        on).  Stops at the effective width.
         """
         if not self._queue:
             return []
-        t_bucket = self._queue[0].chunk.shape[0]
+        if t_bucket is None:
+            t_bucket = self._queue[0].chunk.shape[0]
         batch: list[_Pending] = []
         leftovers: deque[_Pending] = deque()
         seen: set = set()
         for item in self._queue:
             sid = item.stream_id
             if (
-                len(batch) < self.config.max_coalesce
+                len(batch) < self._width
                 and sid not in seen
                 and item.chunk.shape[0] == t_bucket
             ):
@@ -308,7 +532,7 @@ class StreamServer:
         n_real = len(ids)
         n_pad = 0
         if self.config.pad_to_sublanes:
-            n_pad = _round_up(n_real, SUBLANES) - n_real
+            n_pad = _pad_width(n_real) - n_real
         if n_pad:
             ids = ids + self._pad_ids[:n_pad]
             chunks = np.concatenate(
@@ -329,14 +553,42 @@ class StreamServer:
             st.processed += n_real
             st.windows_scored += n_windows
             st.batch_fill[n_real] += 1
-            if n_real >= self.config.max_coalesce:
+            if reason == "full" or n_real >= self._width:
                 st.full_flushes += 1
             elif reason == "deadline":
                 st.deadline_flushes += 1
+            elif reason == "fastpath":
+                st.fastpath_flushes += 1
             else:
                 st.drain_flushes += 1
             for p in batch:
                 st.latency.record((done - p.t_enqueue) * 1e6)
+            ad = self.config.adaptive
+            if ad is not None:
+                # self-tune the effective width between ticks: a queue
+                # depth that *grew* across a tick means the engine is the
+                # bottleneck — halve the tick so no chunk queues behind
+                # an oversized one (bounding the p99 tail); full batches
+                # with remaining backlog mean arrivals are rich — widen
+                # back toward the configured cap
+                depth_now = len(self._queue)
+                if depth_now > self._last_depth and self._width > max(
+                    1, min(ad.min_coalesce, self.config.max_coalesce)
+                ):
+                    self._width = max(
+                        1,
+                        min(ad.min_coalesce, self.config.max_coalesce),
+                        self._width // 2,
+                    )
+                elif (
+                    n_real >= self._width
+                    and depth_now >= self._width
+                    and self._width < self.config.max_coalesce
+                ):
+                    self._width = min(
+                        self.config.max_coalesce, self._width * 2
+                    )
+                self._last_depth = depth_now
             self._cond.notify_all()  # wake blocked producers
 
         for p in batch:
@@ -355,20 +607,19 @@ class StreamServer:
     def tick(self, force: bool = False) -> int:
         """Run one scheduler decision synchronously; returns the number of
         chunks processed (0 = nothing ready).  ``force=False`` applies the
-        real policy (flush only on a full batch or an expired deadline);
-        ``force=True`` flushes whatever is pending (drain semantics)."""
+        real policy (flush on a full batch, an expired per-bucket
+        deadline, or the all-joined-pending fast path); ``force=True``
+        flushes whatever is pending (drain semantics)."""
         with self._cond:
             if not self._queue:
                 return 0
-            full = len(self._queue) >= self.config.max_coalesce
-            expired = (
-                (self._clock() - self._queue[0].t_enqueue) * 1e6
-                >= self.config.deadline_us
-            )
-            if not (force or full or expired):
-                return 0
-            batch = self._gather_locked()
-            reason = "deadline" if (expired and not force) else "drain"
+            if force:
+                t_bucket, reason = None, "drain"
+            else:
+                t_bucket, reason, _ = self._decide_locked(self._clock())
+                if t_bucket is None:
+                    return 0
+            batch = self._gather_locked(t_bucket)
         if not batch:
             return 0
         self._fire(batch, reason)
@@ -417,31 +668,32 @@ class StreamServer:
         self.stop(drain=True)
 
     def _loop(self) -> None:
-        deadline_s = self.config.deadline_us * 1e-6
         while True:
             with self._cond:
                 while not self._queue and not self._stopping:
                     self._cond.wait()
                 if self._stopping and not (self._drain_on_stop and self._queue):
                     return
+                t_bucket, reason = None, "drain"
                 if not self._stopping:
-                    # wait for the batch to fill, bounded by the oldest
-                    # pending chunk's remaining deadline budget
-                    reason = "full"
-                    while len(self._queue) < self.config.max_coalesce:
-                        left = deadline_s - (
-                            self._clock() - self._queue[0].t_enqueue
+                    # apply the policy, sleeping only as long as the
+                    # tightest remaining per-bucket budget (new submits
+                    # notify and re-decide)
+                    while not self._stopping and self._queue:
+                        t_bucket, reason, wait_us = self._decide_locked(
+                            self._clock()
                         )
-                        if left <= 0:
-                            reason = "deadline"
+                        if t_bucket is not None:
                             break
-                        self._cond.wait(left)
-                        if self._stopping or not self._queue:
-                            break
+                        self._cond.wait(
+                            wait_us * 1e-6
+                            if wait_us is not None and math.isfinite(wait_us)
+                            else None
+                        )
                     if not self._queue:
                         continue
-                else:
-                    reason = "drain"
-                batch = self._gather_locked()
+                    if t_bucket is None:  # stop raced the wait: drain
+                        reason = "drain"
+                batch = self._gather_locked(t_bucket)
             if batch:
                 self._fire(batch, reason)

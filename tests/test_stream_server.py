@@ -29,11 +29,13 @@ except ImportError:  # hermetic container: deterministic fixed-example sweep
 from repro.core.autoencoder import AutoencoderConfig, init_autoencoder
 from repro.kernels.lstm_scan.ops import SUBLANES
 from repro.serve.engine import StreamingAnomalyEngine
-from repro.serve.latency import LatencyHistogram
+from repro.serve.latency import ArrivalRateEstimator, LatencyHistogram
 from repro.serve.server import (
+    AdaptiveConfig,
     QueueFullError,
     ServerConfig,
     StreamServer,
+    _pad_width,
 )
 
 
@@ -126,11 +128,102 @@ class TestLatencyHistogram:
             LatencyHistogram().percentile(101)
 
 
+class TestArrivalRateEstimator:
+    """Satellite: the EWMA inter-arrival estimator under bursty, Poisson,
+    and silent-then-burst traces (injectable clock = plain timestamps)."""
+
+    def test_first_chunk_no_estimate_no_div_by_zero(self):
+        est = ArrivalRateEstimator()
+        est.observe(1.0)
+        assert est.gap_us is None and est.rate_hz is None
+        assert est.observed == 1
+
+    def test_steady_trace_converges_to_gap(self):
+        est = ArrivalRateEstimator(alpha=0.25)
+        for i in range(50):
+            est.observe(i * 100e-6)  # 100us apart
+        assert est.gap_us == pytest.approx(100.0, rel=1e-6)
+        assert est.rate_hz == pytest.approx(10_000.0, rel=1e-6)
+
+    def test_simultaneous_arrivals_zero_gap(self):
+        est = ArrivalRateEstimator(alpha=1.0)
+        est.observe(0.0)
+        est.observe(0.0)  # same instant (sub-clock-resolution burst)
+        assert est.gap_us == 0.0
+        assert est.rate_hz == float("inf")
+
+    def test_poisson_trace_tracks_mean(self):
+        rng = np.random.RandomState(0)
+        est = ArrivalRateEstimator(alpha=0.05)
+        t = 0.0
+        for gap in rng.exponential(200e-6, size=2000):
+            t += gap
+            est.observe(t)
+        assert 100.0 < est.gap_us < 400.0  # smoothed toward the 200us mean
+
+    def test_bursty_trace_weights_recent(self):
+        est = ArrivalRateEstimator(alpha=0.5)
+        t = 0.0
+        for gap_us in [500.0] * 10 + [10.0] * 10:
+            t += gap_us * 1e-6
+            est.observe(t)
+        assert est.gap_us < 50.0  # the recent fast burst dominates
+
+    def test_silent_then_burst_resets(self):
+        est = ArrivalRateEstimator(alpha=0.5, idle_reset_factor=50.0)
+        t = 0.0
+        for _ in range(5):
+            t += 100e-6
+            est.observe(t)
+        assert est.gap_us == pytest.approx(100.0)
+        t += 10.0  # 10s of silence: >> 50x the 100us estimate
+        est.observe(t)
+        # the idle gap neither becomes a sample nor leaves a stale
+        # estimate behind
+        assert est.gap_us is None and est.rate_hz is None
+        t += 20e-6
+        est.observe(t)  # the next in-burst gap re-seeds
+        assert est.gap_us == pytest.approx(20.0)
+
+    def test_long_idle_after_single_chunk(self):
+        est = ArrivalRateEstimator()
+        est.observe(0.0)
+        est.observe(100.0)  # 100s later: seeds a huge gap estimate...
+        est.observe(100.0 + 50e-6)
+        # ...which the next in-burst arrival re-seeds away at once
+        # (EWMA-decaying a 1e8us artifact would take hundreds of samples)
+        assert est.gap_us == pytest.approx(50.0)
+        est2 = ArrivalRateEstimator()
+        est2.observe(0.0)
+        est2.observe(0.0)
+        assert est2.rate_hz == float("inf")  # 0-gap guarded
+
+    def test_bad_params_raise(self):
+        with pytest.raises(ValueError):
+            ArrivalRateEstimator(alpha=0.0)
+        with pytest.raises(ValueError):
+            ArrivalRateEstimator(alpha=1.5)
+        with pytest.raises(ValueError):
+            ArrivalRateEstimator(idle_reset_factor=1.0)
+
+
 class TestServerConfig:
-    def test_max_coalesce_rounds_to_sublane_multiple(self):
-        assert ServerConfig(max_coalesce=1).max_coalesce == SUBLANES
-        assert ServerConfig(max_coalesce=12).max_coalesce == 2 * SUBLANES
+    def test_max_coalesce_honored_as_requested(self):
+        """The requested value is the gather cap verbatim (max_coalesce=1
+        really is no coalescing); program shapes are the pad ladder's
+        concern, not the cap's."""
+        assert ServerConfig(max_coalesce=1).max_coalesce == 1
+        assert ServerConfig(max_coalesce=12).max_coalesce == 12
         assert ServerConfig(max_coalesce=SUBLANES).max_coalesce == SUBLANES
+
+    def test_pad_width_ladder_is_bounded(self):
+        # powers of two below one sublane tile, sublane multiples above
+        assert [_pad_width(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+        assert _pad_width(SUBLANES + 1) == 2 * SUBLANES
+        assert _pad_width(3 * SUBLANES) == 3 * SUBLANES
+        # the ladder never pads by a full tile or more
+        for n in range(1, 65):
+            assert n <= _pad_width(n) < n + SUBLANES
 
     @pytest.mark.parametrize(
         "kw",
@@ -139,11 +232,34 @@ class TestServerConfig:
             dict(deadline_us=0),
             dict(queue_capacity=0),
             dict(overflow="spill"),
+            dict(adaptive="yes"),
         ],
     )
     def test_invalid_config_raises(self, kw):
         with pytest.raises(ValueError):
             ServerConfig(**kw)
+
+    @pytest.mark.parametrize(
+        "kw",
+        [
+            dict(max_deadline_us=0),
+            dict(min_deadline_us=1000.0),  # > default max_deadline_us
+            dict(ewma_alpha=0.0),
+            dict(ewma_alpha=1.5),
+            dict(idle_reset_factor=1.0),
+            dict(fill_headroom=0.0),
+            dict(min_coalesce=0),
+        ],
+    )
+    def test_invalid_adaptive_config_raises(self, kw):
+        with pytest.raises(ValueError):
+            AdaptiveConfig(**kw)
+
+    def test_adaptive_true_builds_defaults(self):
+        cfg = ServerConfig(adaptive=True)
+        assert isinstance(cfg.adaptive, AdaptiveConfig)
+        assert ServerConfig(adaptive=False).adaptive is None
+        assert ServerConfig().adaptive is None
 
     def test_engine_must_be_batch_one(self):
         multi = StreamingAnomalyEngine(_PARAMS, _CFG, batch=2)
@@ -180,6 +296,11 @@ class TestManualScheduling:
             eng, ServerConfig(deadline_us=200.0), clock=clock
         )
         x = np.zeros((4, 1), np.float32)
+        # "c" joins the engine but has no pending chunk afterward — with a
+        # joined stream still missing, waiting *can* improve fill, so the
+        # all-joined-pending fast path must not preempt the deadline
+        srv.submit("c", x)
+        srv.drain()
         srv.submit("a", x)
         srv.submit("b", x)
         # young + under-filled: the policy holds the batch back
@@ -191,7 +312,103 @@ class TestManualScheduling:
         clock.advance_us(2.0)
         assert srv.tick() == 2
         assert srv.stats.deadline_flushes == 1
-        assert srv.stats.batch_fill == {2: 1}
+        assert srv.stats.batch_fill == {1: 1, 2: 1}
+
+    def test_all_joined_pending_flushes_immediately(self):
+        """The 1-stream fast path: when every joined stream already has a
+        pending chunk, waiting out the deadline cannot improve batch fill
+        — flush at once, at any deadline."""
+        clock = FakeClock()
+        eng = _engine()
+        srv = StreamServer(
+            eng, ServerConfig(deadline_us=1e9), clock=clock
+        )
+        x = np.zeros((4, 1), np.float32)
+        srv.submit("a", x)
+        assert srv.tick() == 1  # no clock advance, 1e9us deadline
+        assert srv.stats.fastpath_flushes == 1
+        assert eng.stream_ids == ("a",)
+        # now "a" is joined: a chunk from "b" alone must NOT fast-path
+        # (waiting could still pick up a's next chunk)...
+        srv.submit("b", x)
+        assert srv.tick() == 0
+        # ...until "a" submits too, making every joined stream pending
+        srv.submit("a", x)
+        assert srv.tick() == 2
+        assert srv.stats.fastpath_flushes == 2
+
+    def test_fastpath_holds_per_bucket_fifo(self):
+        """The fast path flushes the *oldest* bucket; per-stream FIFO and
+        per-bucket gathering still hold (satellite: must hold per
+        chunk-length bucket)."""
+        clock = FakeClock()
+        eng = _engine()
+        srv = StreamServer(eng, ServerConfig(deadline_us=1e9), clock=clock)
+        T = eng.window
+        x = np.random.RandomState(13).randn(2, T, 1).astype(np.float32)
+        srv.submit("a", x[0, :5])
+        clock.advance_us(10.0)
+        srv.submit("b", x[1, :6])     # different bucket, younger
+        # both joined streams pending -> fast path; only the oldest
+        # bucket (t=5) flushes this tick
+        assert srv.tick() == 1
+        assert srv.stats.fastpath_flushes == 1
+        # "a" is now resident but silent: b's bucket must wait (a's next
+        # chunk could still arrive — and does, re-arming the fast path,
+        # which then flushes the *older* t=6 bucket before the fresh tails)
+        assert srv.tick() == 0
+        clock.advance_us(5.0)
+        srv.submit("a", x[0, 5:T])
+        clock.advance_us(5.0)
+        srv.submit("b", x[1, 6:T])
+        assert srv.tick() == 1        # b's t=6 chunk (oldest bucket)
+        assert srv.tick() == 1        # a's tail (older than b's tail)
+        # only b's tail is left; a is resident-silent again -> hold
+        assert srv.tick() == 0
+        assert srv.stats.fastpath_flushes == 3
+        srv.drain()
+        assert srv.pending == 0
+        want = _sequential_scores({
+            "a": [x[0, :5], x[0, 5:T]], "b": [x[1, :6], x[1, 6:T]],
+        })
+        _assert_scores_equal(srv.pop_scores(), want)
+
+    def test_nonhead_bucket_cannot_overstay_deadline(self):
+        """Regression (two-bucket starvation): a chunk whose length
+        buckets it behind a repeatedly-flushing head bucket still flushes
+        within ITS deadline — oldest-pending age is tracked per bucket,
+        not just at queue[0]."""
+        clock = FakeClock()
+        eng = _engine()
+        srv = StreamServer(
+            eng,
+            ServerConfig(max_coalesce=2, deadline_us=200.0),
+            clock=clock,
+        )
+        T = eng.window
+        x = np.random.RandomState(14).randn(4, T, 1).astype(np.float32)
+        # j joins the engine and goes silent: fast path stays off
+        srv.submit("j", x[3, :2])
+        srv.drain()
+        # t=0: stream b's t=6 chunk enqueues (head of the queue, even)
+        srv.submit("b", x[2, :6])
+        # t=5 traffic from a and d keeps filling and flushing its bucket
+        for i, t_now in enumerate((50.0, 130.0)):
+            clock.t = t_now * 1e-6
+            srv.submit(f"a{i}", x[0, :5])
+            srv.submit(f"d{i}", x[1, :5])
+            # the t=5 bucket is full (2 distinct streams == max_coalesce):
+            # it flushes, b's t=6 chunk stays behind
+            assert srv.tick() == 2
+            assert srv.stats.full_flushes == i + 1
+        assert srv.pending == 1  # b still queued
+        # ... but b's own age (205us > 200us deadline) must now win over
+        # any fresh head-bucket traffic
+        clock.t = 205e-6
+        srv.submit("a2", x[0, :5])  # young t=5 chunk at the head bucket
+        assert srv.tick() == 1      # flushes the t=6 bucket, not t=5
+        assert srv.stats.deadline_flushes == 1
+        assert srv.stats.latency.max_us <= 206.0
 
     def test_full_batch_flushes_without_deadline(self):
         clock = FakeClock()
@@ -289,6 +506,168 @@ class TestManualScheduling:
         assert srv.stats.latency.count == 2
         # "a" waited 100us (fake clock froze during the tick); "b" ~0
         assert srv.stats.latency.max_us >= 99.0
+
+
+class TestAdaptiveScheduling:
+    """The self-tuning policy: deadline from the per-bucket arrival-rate
+    EWMA (capped by max_deadline_us), effective width narrowed/widened
+    between ticks, and bit-equality preserved throughout."""
+
+    def _srv(self, clock, **adaptive_kw):
+        cfg = ServerConfig(
+            max_coalesce=SUBLANES,
+            adaptive=AdaptiveConfig(**adaptive_kw),
+        )
+        return StreamServer(_engine(), cfg, clock=clock)
+
+    def _join_silent(self, srv, clock, sid="silent"):
+        """Park one engine-resident stream with nothing pending, so the
+        all-joined-pending fast path stays out of the way."""
+        srv.submit(sid, np.zeros((2, 1), np.float32))
+        srv.drain()
+
+    def test_deadline_follows_arrival_rate(self):
+        """With a measured gap, the scheduler holds for ~gap*need*headroom
+        instead of the full max_deadline_us budget."""
+        clock = FakeClock()
+        srv = self._srv(clock, max_deadline_us=100_000.0,
+                        fill_headroom=1.0, ewma_alpha=1.0)
+        # park six silent residents: joined = 8, so filling the batch
+        # needs 6 more distinct arrivals after a and b
+        for i in range(6):
+            self._join_silent(srv, clock, sid=f"silent{i}")
+        x = np.zeros((4, 1), np.float32)
+        srv.submit("a", x)
+        clock.advance_us(100.0)
+        srv.submit("b", x)              # gap estimate: 100us
+        # need = min(width 8, joined 8) - fill 2 = 6 -> predicted fill
+        # 600us, measured from the oldest pending ("a" at t=0)
+        assert srv.tick() == 0          # a's age 100 < 600
+        clock.advance_us(499.0)
+        assert srv.tick() == 0          # a's age 599 < 600
+        clock.advance_us(2.0)
+        assert srv.tick() == 2          # expired at the predicted fill
+        assert srv.stats.deadline_flushes == 1
+
+    def test_deadline_expires_at_predicted_fill(self):
+        clock = FakeClock()
+        srv = self._srv(clock, max_deadline_us=100_000.0,
+                        fill_headroom=1.0, ewma_alpha=1.0)
+        self._join_silent(srv, clock)
+        x = np.zeros((4, 1), np.float32)
+        srv.submit("a", x)
+        clock.advance_us(100.0)
+        srv.submit("b", x)              # gap estimate: 100us
+        # need = min(width 8, joined 3) - fill 2 = 1 -> deadline 100us,
+        # measured from the oldest pending ("a", age already 100)
+        assert srv.tick() == 2
+        assert srv.stats.deadline_flushes == 1
+
+    def test_unfillable_batch_flushes_immediately(self):
+        """When the estimated fill time exceeds max_deadline_us, waiting
+        buys nothing — the batch flushes at min_deadline_us instead of
+        burning the whole budget (the fixed-policy pathology)."""
+        clock = FakeClock()
+        srv = self._srv(clock, max_deadline_us=500.0, fill_headroom=1.0,
+                        ewma_alpha=1.0)
+        for i in range(6):
+            self._join_silent(srv, clock, sid=f"silent{i}")
+        x = np.zeros((4, 1), np.float32)
+        # 400us gaps: filling 8 needs ~6*400 = 2400us >> 500us cap
+        srv.submit("a", x)
+        clock.advance_us(400.0)
+        srv.submit("b", x)
+        assert srv.tick() == 2          # flush now: zero extra wait
+        assert srv.stats.deadline_flushes == 1
+        # the fast chunks never waited out the 500us cap
+        assert srv.stats.latency.max_us <= 401.0
+
+    def test_cold_bucket_uses_max_deadline(self):
+        clock = FakeClock()
+        srv = self._srv(clock, max_deadline_us=500.0)
+        self._join_silent(srv, clock)
+        x = np.zeros((4, 1), np.float32)
+        srv.submit("a", x)              # first-ever t=4 chunk: no gap yet
+        assert srv.tick() == 0          # conservative: hold
+        clock.advance_us(499.0)
+        assert srv.tick() == 0
+        clock.advance_us(2.0)
+        assert srv.tick() == 1          # the cap still bounds the wait
+        assert srv.stats.deadline_flushes == 1
+
+    def test_width_narrows_when_queue_grows_and_rewidens(self):
+        """Engine-bottleneck shrink: queue depth growing across a tick
+        halves the effective width (>= min_coalesce); full batches with
+        backlog widen it back toward max_coalesce."""
+        clock = FakeClock()
+        cfg = ServerConfig(
+            max_coalesce=4 * SUBLANES,
+            adaptive=AdaptiveConfig(min_coalesce=SUBLANES),
+        )
+        srv = StreamServer(_engine(), cfg, clock=clock)
+        assert srv.effective_coalesce == 4 * SUBLANES
+        x = np.zeros((2, 1), np.float32)
+        n = 4 * SUBLANES
+        for i in range(n):
+            srv.submit(f"s{i}", x)
+        # during this tick 2n more chunks "arrive": depth grows across
+        # the tick -> engine-bound -> width halves
+        fired = {"n": 0}
+        orig = srv.engine.push_many
+
+        def push_and_arrive(ids, chunks):
+            res = orig(ids, chunks)
+            if fired["n"] == 0:
+                fired["n"] = 1
+                for i in range(2 * n):
+                    srv.submit(f"t{i}", x)
+            return res
+
+        srv.engine.push_many = push_and_arrive
+        assert srv.tick(force=True) == n
+        assert srv.effective_coalesce == 2 * SUBLANES
+        # draining the backlog with no new arrivals: full fills + backlog
+        # left -> width doubles back up (and no further shrink)
+        assert srv.tick(force=True) == 2 * SUBLANES
+        assert srv.effective_coalesce == 4 * SUBLANES
+        srv.drain()
+        assert srv.pending == 0
+
+    def test_adaptive_schedule_bit_equal_sequential(self):
+        """The whole adaptive machinery is numerically free: scripted
+        joins, ragged fills and drops under adaptive scheduling score
+        bit-equal to per-stream sequential replays."""
+        clock = FakeClock()
+        srv = StreamServer(
+            _engine(),
+            ServerConfig(max_coalesce=SUBLANES, adaptive=True),
+            clock=clock,
+        )
+        T = srv.engine.window
+        x = np.random.RandomState(21).randn(5, 2 * T, 1).astype(np.float32)
+        bounds = (0, 5, 11, 16, 2 * T)
+        chunk_lists = {
+            f"s{i}": [x[i, a:b] for a, b in zip(bounds, bounds[1:])]
+            for i in range(5)
+        }
+        rng = np.random.RandomState(22)
+        for j in range(len(bounds) - 1):
+            for sid in chunk_lists:
+                srv.submit(sid, chunk_lists[sid][j])
+                clock.advance_us(float(rng.randint(0, 300)))
+                srv.tick()  # adaptive policy decides; any outcome is legal
+        srv.drain()
+        srv.close_stream("s2")
+        rejoin = rng.randn(T, 1).astype(np.float32)
+        srv.submit("s2", rejoin[: T // 2])
+        srv.submit("s2", rejoin[T // 2 :])
+        srv.drain()
+        want = _sequential_scores(chunk_lists)
+        want["s2"] = want["s2"] + _sequential_scores(
+            {"s2": [rejoin[: T // 2], rejoin[T // 2 :]]}
+        )["s2"]
+        _assert_scores_equal(srv.pop_scores(), want)
+        assert srv.stats.processed == srv.stats.submitted
 
 
 class TestOverflow:
