@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve test-quant test-exec test-step test-server bench-kernels bench-stream bench-quant bench-exec bench-step bench-server bench
+.PHONY: test test-fast test-serve test-quant test-exec test-step test-server test-chaos bench-kernels bench-stream bench-quant bench-exec bench-step bench-server bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -34,6 +34,11 @@ test-step:
 # scheduler determinism, latency histogram)
 test-server:
 	$(PYTHON) -m pytest -x -q tests/test_stream_server.py
+
+# the fault-injection suite (glitch quarantine, engine faults + watchdog,
+# snapshot/restore, scheduler supervision, close-vs-batch race)
+test-chaos:
+	$(PYTHON) -m pytest -x -q tests/test_chaos.py
 
 # kernel + pipeline + streaming-serve rows, with the machine-readable artifact
 bench-kernels:

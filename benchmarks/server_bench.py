@@ -37,6 +37,14 @@ the shared ``BENCH_kernels.json`` artifact (``make bench-server``):
 * ``server.flush_mix`` — scheduler instrumentation from a threaded
   deadline-paced run: tick count with full / deadline / fastpath /
   drain flush split (informational; values are host-timing dependent).
+* ``server.sanitize_overhead`` — **hard gate** (PR 8): the per-chunk
+  NaN/Inf/saturation screen on the submit path must cost <= 5% of a
+  warm engine step for the same chunk.
+* ``server.restore_bitequal`` — **hard gate** (PR 8): a server
+  checkpointed mid-run (partial windows resident) and restarted via
+  ``StreamServer.restart_from`` scores the remaining chunks bit-equal
+  to the uninterrupted run, and the merged lineage equals sequential
+  per-stream replays.
 
 Interpret-mode timings on CPU are correctness-grade; on a TPU host the
 same rows time the compiled kernels.
@@ -44,6 +52,8 @@ same rows time the compiled kernels.
 
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
@@ -54,6 +64,7 @@ from repro.configs.gw import GW_MODELS
 from repro.core.autoencoder import init_autoencoder
 from repro.kernels.lstm_scan.ops import SUBLANES
 from repro.serve.engine import StreamingAnomalyEngine
+from repro.serve.health import screen_chunk
 from repro.serve.server import (
     AdaptiveConfig,
     ServerConfig,
@@ -78,6 +89,11 @@ GATE_1STREAM = 0.9
 
 #: hard gate: adaptive p99 / fixed p99 at equal offered load
 GATE_P99_RATIO = 1.0
+
+#: hard gate: per-chunk NaN/Inf/saturation screening must cost <= this
+#: fraction of a warm engine step for the same chunk (PR 8: sanitization
+#: rides the submit path, so it must be noise next to the step itself)
+GATE_SANITIZE_FRAC = 0.05
 
 
 def _time(fn, n_iter: int = 3) -> float:
@@ -113,11 +129,21 @@ def _throughput_pair(params, cfg, n_streams: int, data: np.ndarray):
 
     server_window()  # warm up: compile every fill/pad shape once
     srv.stats = ServerStats()  # keep compile stalls out of the histogram
-    n_iter = 3
-    t0 = time.perf_counter()
-    for _ in range(n_iter):
-        server_window()
-    us_srv = (time.perf_counter() - t0) / n_iter * 1e6 / n_chunks
+
+    def best_of(fn, n_iter: int = 5) -> float:
+        # min over runs, not mean: both sides of the speedup ratio are
+        # host-scheduling noisy on a shared CPU runner, and the gate
+        # compares their *ratio* — best-case per side estimates the
+        # code's actual cost (one noisy spike on either side flaked the
+        # near-parity 1-stream gate when this was a 3-run mean)
+        times = []
+        for _ in range(n_iter):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times) * 1e6
+
+    us_srv = best_of(server_window) / n_chunks
 
     seq = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
 
@@ -129,7 +155,8 @@ def _throughput_pair(params, cfg, n_streams: int, data: np.ndarray):
                 scores += seq.push(data[i : i + 1, pos : pos + CHUNK])
         return scores
 
-    us_seq = _time(sequential_window) / n_chunks
+    sequential_window()  # warm
+    us_seq = best_of(sequential_window) / n_chunks
     return us_srv, us_seq, srv
 
 
@@ -348,6 +375,117 @@ def _flush_mix_row(params, cfg) -> tuple:
             f"drops={st.drops}")
 
 
+def _sanitize_overhead_row(params, cfg) -> tuple:
+    """Screening cost per chunk vs a warm engine step for the same chunk
+    (hard gate: <= ``GATE_SANITIZE_FRAC`` of step time).  The screen is
+    one ``max(|x|)`` pass on the host; the step is the warm single-stream
+    ``push`` the screen fronts on the submit path."""
+    t_len = cfg.timesteps
+    rng = np.random.default_rng(8)
+    chunk = rng.standard_normal((CHUNK, 1)).astype(np.float32)
+    n_iter = 2000
+    screen_chunk(chunk, 1e6)  # warm
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        screen_chunk(chunk, 1e6)
+    screen_us = (time.perf_counter() - t0) / n_iter * 1e6
+
+    eng = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    data = rng.standard_normal((1, t_len, 1)).astype(np.float32)
+
+    def window():
+        for pos in range(0, t_len, CHUNK):
+            eng.push(data[:, pos : pos + CHUNK])
+
+    step_us = _time(window, n_iter=5) / (t_len // CHUNK)
+    frac = screen_us / step_us
+    ok = frac <= GATE_SANITIZE_FRAC
+    print(f"sanitize overhead    : {screen_us:7.2f} us/chunk screen vs "
+          f"{step_us:7.0f} us/chunk step ({frac * 100:.2f}%, gate <= "
+          f"{GATE_SANITIZE_FRAC * 100:.0f}%)")
+    row = ("server.sanitize_overhead", screen_us,
+           f"step_us={step_us:.1f}|fraction={frac:.4f}|"
+           f"chunk_t={CHUNK}|ok={int(ok)}")
+    if not ok:
+        raise RuntimeError(
+            f"chunk screening costs {screen_us:.2f} us = {frac * 100:.1f}% "
+            f"of a {step_us:.0f} us step (gate <= "
+            f"{GATE_SANITIZE_FRAC * 100:.0f}%) — sanitization must stay "
+            "noise next to the step it protects"
+        )
+    return row
+
+
+def _restore_bitequal_row(params, cfg) -> tuple:
+    """Snapshot -> restart -> resume equals the uninterrupted run, bit for
+    bit (hard gate).  Mid-run checkpoint with partial windows resident,
+    restored into a *fresh* engine + server; both lineages then score the
+    identical tail and must agree exactly, and the merged run must equal
+    sequential per-stream replays."""
+    t_len = cfg.timesteps
+    rng = np.random.default_rng(2207)
+    n, n_chunks = 4, 6  # 25-sample chunks on a 100 window: chunk 2 is
+    ids = [f"s{i}" for i in range(n)]  # mid-window at the checkpoint
+    data = rng.standard_normal((n, n_chunks * CHUNK, 1)).astype(np.float32)
+
+    def chunk(i, k):
+        return data[i, k * CHUNK : (k + 1) * CHUNK]
+
+    def drive(srv, lo, hi):
+        for k in range(lo, hi):
+            for i, sid in enumerate(ids):
+                srv.submit(sid, np.array(chunk(i, k)))
+            srv.drain()
+        return srv.pop_scores()
+
+    cut = 3  # 75 of 100 samples: every stream checkpoints mid-window
+    srv = StreamServer(
+        StreamingAnomalyEngine(params, cfg, batch=1, window=t_len),
+        ServerConfig(health=True),
+    )
+    head = drive(srv, 0, cut)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "server.ckpt.npz")
+        srv.checkpoint(path)
+        restarted = StreamServer.restart_from(
+            path,
+            StreamingAnomalyEngine(params, cfg, batch=1, window=t_len),
+            ServerConfig(health=True),
+        )
+        tail_a = drive(srv, cut, n_chunks)
+        tail_b = drive(restarted, cut, n_chunks)
+
+    seq = StreamingAnomalyEngine(params, cfg, batch=1, window=t_len)
+    equal = True
+    for i, sid in enumerate(ids):
+        seq.reset()
+        want = []
+        for k in range(n_chunks):
+            want += seq.push(chunk(i, k)[None])
+        merged = head.get(sid, []) + tail_a.get(sid, [])
+        resumed = tail_b.get(sid, [])
+        equal &= len(tail_a.get(sid, [])) == len(resumed) and all(
+            (np.asarray(a) == np.asarray(b)).all()
+            for a, b in zip(tail_a.get(sid, []), resumed)
+        )
+        equal &= len(merged) == len(want) and all(
+            (np.asarray(a) == np.asarray(b)).all()
+            for a, b in zip(merged, want)
+        )
+    print(f"restore bit-equality : {'OK' if equal else 'FAIL'} "
+          f"({n} streams checkpointed mid-window, resumed vs uninterrupted)")
+    row = ("server.restore_bitequal", 0.0,
+           f"equal={int(equal)}|streams={n}|checkpoint_chunk={cut}|"
+           f"ok={int(equal)}")
+    if not equal:
+        raise RuntimeError(
+            "a server restarted from a mid-run snapshot did not score "
+            "bit-equal to the uninterrupted run — snapshot/restore is "
+            "dropping or corrupting stream state"
+        )
+    return row
+
+
 def run() -> list[tuple]:
     rows = []
     cfg = GW_MODELS["gw_small"]
@@ -415,6 +553,8 @@ def run() -> list[tuple]:
     rows.append(_adaptive_vs_fixed_row(params, cfg))
     rows.append(_bitequal_gate(params, cfg))
     rows.append(_flush_mix_row(params, cfg))
+    rows.append(_sanitize_overhead_row(params, cfg))
+    rows.append(_restore_bitequal_row(params, cfg))
 
     if gate_1stream < GATE_1STREAM:  # the 0.42x regression, now gated
         raise RuntimeError(

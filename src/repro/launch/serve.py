@@ -34,6 +34,15 @@ a deadline that fills the batch with high probability (capped by
 already pending or the batch cannot fill within the cap.  Enqueue->score
 latency lands in a fixed-bin histogram; the run prints p50/p99/max plus
 the scheduler's tick, flush, batch-fill, and drop counters.
+``--sanitize {off,reject,hold,reset}`` screens every submitted chunk for
+NaN/Inf (and ``--saturation-limit``) before it can enter a batch, with
+the chosen quarantine policy; ``--checkpoint PATH`` snapshots the engine
+(every ``--checkpoint-interval-s`` seconds, from the scheduler thread)
+so a crashed server can resume; ``--restore PATH`` restores the engine
+from such a snapshot before serving (geometry/weight-dtype fingerprint
+checked — see ``serve/health.py``).  Any of these flags also turns on
+the post-step state watchdog and supervised scheduler restarts; the run
+then prints the health counters (rejected/held/resets/restarts/...).
 ``--plan-only`` prints the resolved execution plan for both segments
 (backend, placement, weight dtype, pack bytes) and exits without scoring —
 the dryrun-style smoke for serving configs.
@@ -121,6 +130,24 @@ def main():
                     help="aggregate Poisson chunk-arrival rate across the "
                          "fleet; 0 submits as fast as possible (server "
                          "mode saturation test)")
+    # fault tolerance (server mode; any of these enables the health layer)
+    ap.add_argument("--sanitize", choices=("off", "reject", "hold", "reset"),
+                    default="off",
+                    help="per-chunk NaN/Inf/saturation quarantine policy "
+                         "applied in submit, before a chunk can enter a "
+                         "coalesced batch (server mode)")
+    ap.add_argument("--saturation-limit", type=float, default=None,
+                    help="|x| above this screens as a saturated glitch "
+                         "(with --sanitize; default: amplitude unchecked)")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="periodically snapshot the engine (streams, "
+                         "partial windows, threshold) to PATH from the "
+                         "scheduler thread (server mode)")
+    ap.add_argument("--checkpoint-interval-s", type=float, default=5.0,
+                    help="seconds between --checkpoint snapshots")
+    ap.add_argument("--restore", default=None, metavar="PATH",
+                    help="restore the engine from a snapshot before "
+                         "serving (fingerprint-checked; server mode)")
     args = ap.parse_args()
 
     if args.mode == "anomaly":
@@ -224,20 +251,39 @@ def serve_server(args, params, cfg, ds):
     """Continuous-batching serving: Poisson arrivals through the deadline
     coalescer (``serve/server.py``), scheduler metrics as the output."""
     from repro.serve.engine import StreamingAnomalyEngine
+    from repro.serve.health import HealthConfig
     from repro.serve.server import AdaptiveConfig, ServerConfig, StreamServer
 
     engine = StreamingAnomalyEngine(
         params, cfg, batch=1, placement=args.placement,
         chunk_len=args.chunk_len,
     )
-    server = StreamServer(engine, ServerConfig(
+    health = None
+    if args.sanitize != "off" or args.checkpoint or args.restore:
+        health = HealthConfig(
+            sanitize=args.sanitize,
+            saturation_limit=args.saturation_limit,
+            checkpoint_path=args.checkpoint,
+            checkpoint_interval_s=(
+                args.checkpoint_interval_s if args.checkpoint else None
+            ),
+        )
+    server_cfg = ServerConfig(
         max_coalesce=args.max_coalesce,
         deadline_us=args.deadline_us,
         queue_capacity=args.queue_capacity,
         overflow=args.overflow,
         adaptive=(AdaptiveConfig(max_deadline_us=args.max_deadline_us)
                   if args.adaptive else None),
-    ))
+        health=health,
+    )
+    if args.restore:
+        server = StreamServer.restart_from(args.restore, engine, server_cfg)
+        print(f"restored engine from {args.restore}: "
+              f"{len(engine.stream_ids)} stream(s) resident, "
+              f"threshold={engine.threshold}")
+    else:
+        server = StreamServer(engine, server_cfg)
     n_streams = max(1, args.streams)
     chunk = args.chunk or cfg.timesteps
     rng = np.random.default_rng(2)
@@ -303,6 +349,16 @@ def serve_server(args, params, cfg, ds):
     print(f"enqueue->score latency: p50={s.latency.percentile(50):.0f}us "
           f"p99={s.latency.percentile(99):.0f}us "
           f"max={s.latency.max_us:.0f}us over {s.latency.count} chunks")
+    if health is not None:
+        print(f"health: {s.rejected} rejected, {s.held} held, "
+              f"{s.sanitize_resets} sanitize resets, "
+              f"{s.watchdog_resets} watchdog resets, "
+              f"{s.holddown_suppressed} scores held down, "
+              f"{s.engine_errors} engine errors, "
+              f"{s.callback_errors} callback errors, "
+              f"{s.scheduler_restarts} scheduler restarts, "
+              f"{s.checkpoints} checkpoints"
+              + (f" -> {args.checkpoint}" if args.checkpoint else ""))
 
 
 def print_plan(args, params, cfg) -> None:

@@ -54,6 +54,12 @@ from repro.core.backends import (  # noqa: F401  (re-exports)
 )
 from repro.kernels.lstm_scan.ops import SUBLANES
 from repro.models.api import get_model
+from repro.serve.health import (
+    SNAPSHOT_VERSION,
+    check_fingerprint,
+    read_snapshot,
+    write_snapshot,
+)
 
 
 def _pad_width(n: int) -> int:
@@ -276,6 +282,17 @@ class StreamingAnomalyEngine:
         self._zero_state1_jit = jax.jit(
             lambda: self._exec_enc.zero_state(1)
         )
+        # post-step numeric watchdog helpers: one jitted batched abs-max
+        # per pool size (see state_absmax)
+        self._absmax_jits: dict = {}
+        # window completion (gather states -> latent slice -> pad -> decode
+        # + score) compiled as ONE call per done-group size: done eagerly,
+        # the tree concat + last_hidden getitem + pad concats cost ~5 host
+        # dispatches per window — measured as ~45% of a lone stream's
+        # server wall time (see _finish_fn); the lock-step push path gets
+        # the same fusion (lazy, below)
+        self._finish_jits: dict = {}
+        self._finishw_jit = None
         self._score_window = jax.jit(
             lambda params, ex_dec, latent, x: reconstruction_error_from_latent(
                 params, latent, x, cfg, exec_dec=ex_dec
@@ -339,6 +356,9 @@ class StreamingAnomalyEngine:
         self._exec_dec = self._exec_dec.update_params(dec_p)
         self._enc_step = self._exec_enc.step_jit(donate=self._donate)
         self._coalesce_jits = {}  # closed over the superseded executor
+        self._absmax_jits = {}
+        self._finish_jits = {}
+        self._finishw_jit = None
         self.reset()
 
     @property
@@ -395,6 +415,152 @@ class StreamingAnomalyEngine:
     def drop_stream(self, stream_id) -> None:
         """Release one named stream's state and partial window."""
         self._streams.pop(stream_id, None)
+
+    # -- fault tolerance: snapshot/restore + numeric watchdog ----------------
+
+    def fingerprint(self) -> dict:
+        """The geometry + dtype identity a snapshot must match to be
+        restorable into this engine: every key here changes either the
+        state leaves' shapes/dtypes or the meaning of their values."""
+        cfg = self.cfg
+        packed = self._packed_enc
+        return {
+            "hidden": list(cfg.hidden),
+            "boundary": int(cfg.boundary),
+            "input_dim": int(cfg.input_dim),
+            "timesteps": int(cfg.timesteps),
+            "window": int(self.window),
+            "batch": int(self.batch),
+            "dtype": str(jnp.dtype(cfg.dtype)),
+            "acts": cfg.acts.name,
+            "carry_state": bool(self.carry_state),
+            "state_layout": self._exec_enc.plan.backend.state_layout,
+            "weight_dtype": (
+                packed.weight_dtype if packed is not None else "native"
+            ),
+        }
+
+    def snapshot(self) -> dict:
+        """Serialize every stream's resident state to host memory: the
+        lock-step ``push`` path's (h, c)/partial window and the whole
+        ``push_many`` pool, plus the calibrated threshold and the
+        ``fingerprint()`` that gates ``restore``.  All arrays are copied
+        (``np.array``) — donation of the live buffers on the next push
+        cannot invalidate a snapshot already taken.  Pair with
+        ``save_snapshot``/``restore`` for the on-disk round trip; a
+        restored engine resumes **bit-equal** to an uninterrupted run
+        (hard-gated in ``server.restore_bitequal``)."""
+
+        def host_leaves(state) -> list[np.ndarray]:
+            return [
+                np.array(leaf) for leaf in jax.tree_util.tree_leaves(state)
+            ]
+
+        return {
+            "version": SNAPSHOT_VERSION,
+            "fingerprint": self.fingerprint(),
+            "threshold": float(self.threshold),
+            "state": host_leaves(self._state),
+            "chunks": [np.array(c) for c in self._chunks],
+            "filled": int(self._filled),
+            "streams": {
+                sid: {
+                    "state": host_leaves(slot.state),
+                    "chunks": [np.array(c) for c in slot.chunks],
+                    "filled": int(slot.filled),
+                }
+                for sid, slot in self._streams.items()
+            },
+        }
+
+    def save_snapshot(self, path) -> None:
+        """``snapshot()`` to ``path`` as a versioned ``.npz`` (atomic
+        write: temp file + rename)."""
+        write_snapshot(path, self.snapshot())
+
+    def restore(self, snap) -> None:
+        """Load a snapshot (in-memory dict or a path from
+        ``save_snapshot``) into this engine, replacing all stream state.
+
+        The snapshot's version and geometry/``weight_dtype`` fingerprint
+        are checked first (``SnapshotMismatchError`` on any disagreement)
+        — state arrays from a differently-shaped or differently-quantized
+        engine are never installed.  After ``restore`` the engine scores
+        bit-equal to one that was never interrupted: the state leaves,
+        partial-window chunks, fill counts, and threshold all round-trip
+        exactly.
+        """
+        if isinstance(snap, (str, bytes)) or hasattr(snap, "__fspath__"):
+            snap = read_snapshot(snap)
+        if snap.get("version") != SNAPSHOT_VERSION:
+            from repro.serve.health import SnapshotMismatchError
+
+            raise SnapshotMismatchError(
+                f"snapshot schema version {snap.get('version')!r} != "
+                f"{SNAPSHOT_VERSION} supported by this engine"
+            )
+        check_fingerprint(self.fingerprint(), snap["fingerprint"])
+
+        def device_state(template, leaves):
+            treedef = jax.tree_util.tree_structure(template)
+            return jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(leaf) for leaf in leaves]
+            )
+
+        self.threshold = float(snap["threshold"])
+        self._state = device_state(self._zero_state_jit(), snap["state"])
+        self._chunks = [np.array(c) for c in snap["chunks"]]
+        self._filled = int(snap["filled"])
+        self._streams = {}
+        zero1 = self._zero_state1_jit()
+        for sid, s in snap["streams"].items():
+            self._streams[sid] = _StreamSlot(
+                state=device_state(zero1, s["state"]),
+                chunks=[np.array(c) for c in s["chunks"]],
+                filled=int(s["filled"]),
+            )
+
+    def state_absmax(self, stream_ids) -> np.ndarray:
+        """Max ``|h|, |c|`` per named stream — the post-step numeric
+        watchdog's probe.  NaN propagates (a poisoned stream reads NaN,
+        Inf reads inf), so ``not (value <= limit)`` catches non-finite
+        and exploded states in one comparison.  Streams not resident in
+        the pool read 0.  Batched: one jitted gather + reduce per pool
+        size (cached), not one host round-trip per stream.
+        """
+        ids = list(stream_ids)
+        out = np.zeros(len(ids), dtype=np.float64)
+        present = [
+            (i, self._streams[sid])
+            for i, sid in enumerate(ids)
+            if sid in self._streams
+        ]
+        if not present:
+            return out
+        n = len(present)
+        fn = self._absmax_jits.get(n)
+        if fn is None:
+            ax = self._state_batch_axis()
+
+            def absmax_n(states):
+                batched = jax.tree_util.tree_map(
+                    lambda *leaves: jnp.concatenate(leaves, axis=ax), *states
+                )
+                per_leaf = [
+                    jnp.max(
+                        jnp.abs(leaf.astype(jnp.float32)),
+                        axis=tuple(d for d in range(leaf.ndim) if d != ax),
+                    )
+                    for leaf in jax.tree_util.tree_leaves(batched)
+                ]
+                return jnp.max(jnp.stack(per_leaf, axis=0), axis=0)
+
+            fn = jax.jit(absmax_n)
+            self._absmax_jits[n] = fn
+        vals = np.asarray(fn(tuple(slot.state for _, slot in present)))
+        for (i, _), v in zip(present, vals):
+            out[i] = v
+        return out
 
     def _state_batch_axis(self) -> int:
         # packed layout carries (L, B, W) pairs; layers layout [(B, H), ...]
@@ -492,10 +658,9 @@ class StreamingAnomalyEngine:
             )
             piece = np.array(chunks[:, pos : pos + take])
             # gather -> one B=N step -> scatter, compiled as one call: the
-            # per-piece host cost no longer scales with the pool size
-            new_states = step_n(
-                jnp.asarray(piece), tuple(s.state for s in slots)
-            )
+            # per-piece host cost no longer scales with the pool size (the
+            # numpy piece transfers inside the jit — no eager device_put)
+            new_states = step_n(piece, tuple(s.state for s in slots))
             for i, slot in enumerate(slots):
                 slot.state = new_states[i]
                 slot.chunks.append(piece[i : i + 1])
@@ -512,56 +677,91 @@ class StreamingAnomalyEngine:
                     out[sid].append(score)
         return out
 
+    def _finish_fn(self, n: int):
+        """One jitted gather->latent->pad->decode->score per done-group
+        size ``n``.
+
+        The whole window-completion pipeline compiles as a single program:
+        the per-stream state concat, the ``last_hidden`` slice, the pad up
+        the program-shape ladder, and the decode + MSE tail.  Done with
+        eager ops those are ~5 host dispatches per completed window — on a
+        lone stream that was ~45% of the server's per-window wall time.
+        The pad rows are inert zeros: any batch-fill level scores through
+        an already-compiled decode program (rows are independent, so the
+        real scores are unchanged — a continuously-batching server would
+        otherwise pay one trace/compile stall per distinct completion-
+        group size), while a lone stream decodes one row, not eight.
+        """
+        fn = self._finish_jits.get(n)
+        if fn is None:
+            ax = self._state_batch_axis()
+            exec_enc, exec_dec, cfg = self._exec_enc, self._exec_dec, self.cfg
+            pad = _pad_width(n) - n
+
+            def fin(params, states, xs):
+                batched = (
+                    states[0] if n == 1 else jax.tree_util.tree_map(
+                        lambda *leaves: jnp.concatenate(leaves, axis=ax),
+                        *states,
+                    )
+                )
+                latent = exec_enc.last_hidden(batched)
+                if pad:
+                    latent = jnp.concatenate(
+                        [latent,
+                         jnp.zeros((pad,) + latent.shape[1:], latent.dtype)]
+                    )
+                    xs = jnp.concatenate(
+                        [xs, jnp.zeros((pad,) + xs.shape[1:], xs.dtype)]
+                    )
+                return reconstruction_error_from_latent(
+                    params, latent, xs, cfg, exec_dec=exec_dec
+                )
+
+            fn = jax.jit(fin)
+            self._finish_jits[n] = fn
+        return fn
+
     def _finish_streams(self, slots: list) -> list[np.ndarray]:
         """Score the streams that just completed a window — one batched
         decode for the whole group (bit-equal to per-stream scoring: the
         decode + MSE tail is row-independent)."""
-        # batch the latent extraction: ONE last_hidden on the tree-concat
-        # state instead of one eager gather per stream (at 64 streams the
-        # per-slot getitems alone cost more than the whole step call)
-        ax = self._state_batch_axis()
-        batched = jax.tree_util.tree_map(
-            lambda *leaves: jnp.concatenate(leaves, axis=ax),
-            *[s.state for s in slots],
-        )
-        latent = self._exec_enc.last_hidden(batched)
+        k = len(slots)
         xs = np.concatenate(
             [np.concatenate(s.chunks, axis=1) for s in slots], axis=0
         )
-        # pad the done group up the program-shape ladder with inert zero
-        # rows: any batch-fill level then scores through an already-
-        # compiled decode program (the rows are independent, so real
-        # scores are unchanged — a continuously-batching server would
-        # otherwise pay one trace/compile stall per distinct completion-
-        # group size), while a lone stream decodes one row, not eight
-        k = len(slots)
-        k_pad = _pad_width(k) - k
-        if k_pad:
-            latent = jnp.concatenate(
-                [latent, jnp.zeros((k_pad,) + latent.shape[1:], latent.dtype)]
-            )
-            xs = np.concatenate(
-                [xs, np.zeros((k_pad,) + xs.shape[1:], xs.dtype)]
-            )
         scores = np.asarray(
-            self._score_window(self.params, self._exec_dec, latent,
-                               jnp.asarray(xs))
+            self._finish_fn(k)(
+                self.params, tuple(s.state for s in slots), xs
+            )
         )[:k]
         for slot in slots:
             slot.chunks, slot.filled = [], 0
             if not self.carry_state:
                 slot.state = self._zero_state1_jit()
-        return [scores[i : i + 1] for i in range(len(slots))]
+        return [scores[i : i + 1] for i in range(k)]
 
     def _latent(self) -> jax.Array:
         """Last encoder layer's current hidden — the RepeatVector input."""
         return self._exec_enc.last_hidden(self._state)
 
     def _finish_window(self) -> np.ndarray:
-        x = jnp.asarray(np.concatenate(self._chunks, axis=1))
-        scores = np.asarray(
-            self._score_window(self.params, self._exec_dec, self._latent(), x)
-        )
+        # latent slice + decode + score as ONE jitted call, like the pool
+        # path's _finish_fn — eager last_hidden/asarray per window was the
+        # lock-step path's largest host cost
+        fn = self._finishw_jit
+        if fn is None:
+            exec_enc, exec_dec, cfg = self._exec_enc, self._exec_dec, self.cfg
+
+            def fin(params, state, xs):
+                return reconstruction_error_from_latent(
+                    params, exec_enc.last_hidden(state), xs, cfg,
+                    exec_dec=exec_dec,
+                )
+
+            fn = self._finishw_jit = jax.jit(fin)
+        x = np.concatenate(self._chunks, axis=1)
+        scores = np.asarray(fn(self.params, self._state, x))
         self._chunks, self._filled = [], 0
         if not self.carry_state:
             self._state = self._zero_state()

@@ -64,6 +64,7 @@ Two drive modes share all scheduling logic:
 
 from __future__ import annotations
 
+import logging
 import math
 import threading
 import time
@@ -75,15 +76,20 @@ import numpy as np
 
 from repro.kernels.lstm_scan.ops import SUBLANES
 
+from .health import ChunkRejectedError, HealthConfig, screen_chunk
 from .latency import ArrivalRateEstimator, LatencyHistogram
 
 __all__ = [
     "AdaptiveConfig",
+    "ChunkRejectedError",
+    "HealthConfig",
     "QueueFullError",
     "ServerConfig",
     "ServerStats",
     "StreamServer",
 ]
+
+logger = logging.getLogger(__name__)
 
 
 # the {1, 2, 4} + sublane-multiples program-shape ladder is shared with
@@ -177,6 +183,13 @@ class ServerConfig:
     ``pad_to_sublanes`` — pad partial batches up the program-shape
     ladder with inert pad streams: bounded set of compiled shapes across
     fill levels.
+    ``health`` — a ``HealthConfig`` (or ``True`` for defaults): input
+    sanitization + stream quarantine, the post-step state watchdog,
+    scheduler supervision, the ``stop(drain=True)`` deadline, and
+    periodic checkpointing.  ``None`` (default) disables the quarantine/
+    watchdog/supervision machinery, but per-batch fault isolation —
+    engine-step exceptions and raising ``on_score`` callbacks never kill
+    the scheduler thread — is always on.
     """
 
     max_coalesce: int = SUBLANES
@@ -185,6 +198,7 @@ class ServerConfig:
     overflow: str = "block"
     pad_to_sublanes: bool = True
     adaptive: AdaptiveConfig | bool | None = None
+    health: HealthConfig | bool | None = None
 
     def __post_init__(self):
         if self.max_coalesce < 1:
@@ -211,6 +225,17 @@ class ServerConfig:
                 "adaptive must be an AdaptiveConfig, True, or None, got "
                 f"{self.adaptive!r}"
             )
+        if self.health is True:
+            self.health = HealthConfig()
+        elif self.health is False:
+            self.health = None
+        elif self.health is not None and not isinstance(
+            self.health, HealthConfig
+        ):
+            raise ValueError(
+                "health must be a HealthConfig, True, or None, got "
+                f"{self.health!r}"
+            )
 
 
 @dataclass
@@ -227,6 +252,16 @@ class ServerStats:
     fastpath_flushes: int = 0  # every joined stream pending: waiting is moot
     drain_flushes: int = 0     # forced (drain / shutdown)
     windows_scored: int = 0
+    # fault-tolerance counters (serve/health.py)
+    rejected: int = 0            # chunks refused by sanitize="reject"
+    held: int = 0                # chunks skipped by sanitize="hold"
+    sanitize_resets: int = 0     # streams reset by sanitize="reset"
+    watchdog_resets: int = 0     # streams reset by the post-step watchdog
+    holddown_suppressed: int = 0  # scores withheld during a reset hold-down
+    callback_errors: int = 0     # on_score raised (logged, never fatal)
+    engine_errors: int = 0       # engine-step batches that raised
+    scheduler_restarts: int = 0  # supervised scheduler-thread restarts
+    checkpoints: int = 0         # periodic engine snapshots written
     batch_fill: Counter = field(default_factory=Counter)
     latency: LatencyHistogram = field(default_factory=LatencyHistogram)
 
@@ -242,6 +277,15 @@ class ServerStats:
             "fastpath_flushes": self.fastpath_flushes,
             "drain_flushes": self.drain_flushes,
             "windows_scored": self.windows_scored,
+            "rejected": self.rejected,
+            "held": self.held,
+            "sanitize_resets": self.sanitize_resets,
+            "watchdog_resets": self.watchdog_resets,
+            "holddown_suppressed": self.holddown_suppressed,
+            "callback_errors": self.callback_errors,
+            "engine_errors": self.engine_errors,
+            "scheduler_restarts": self.scheduler_restarts,
+            "checkpoints": self.checkpoints,
             "batch_fill": dict(sorted(self.batch_fill.items())),
         }
         out.update(self.latency.summary("latency"))
@@ -290,11 +334,27 @@ class StreamServer:
         self._clock = clock
         self._input_dim = engine.cfg.input_dim
 
+        self._health: HealthConfig | None = self.config.health
+
         self._cond = threading.Condition()
         self._queue: deque[_Pending] = deque()
         self._stopping = False
         self._drain_on_stop = True
         self._thread: threading.Thread | None = None
+        # fault-tolerance state: streams of the batch currently inside the
+        # engine (and the subset closed/reset while it was in flight, whose
+        # slots must be re-dropped and scores suppressed), per-stream score
+        # hold-down counters after a quarantine/watchdog reset, per-stream
+        # error marks (pop_errors), and the scheduler heartbeat/supervisor
+        self._inflight: set = set()
+        self._closed_inflight: set = set()
+        self._holddown: dict = {}
+        self._errors: dict = {}
+        self._heartbeat: float | None = None
+        self._restarts = 0
+        self._sup_thread: threading.Thread | None = None
+        self._sup_stop = threading.Event()
+        self._last_checkpoint: float | None = None
         # adaptive scheduler state: effective gather width (narrowed /
         # widened between ticks), per-bucket arrival estimators, and the
         # queue depth at the end of the previous tick (the engine-
@@ -317,18 +377,39 @@ class StreamServer:
         """Enqueue one chunk for ``stream_id`` (thread-safe).
 
         ``chunk``: (t, input_dim) with t >= 1 — or (1, t, input_dim), the
-        engine's push shape, squeezed for convenience.  The chunk is
-        copied (producers may reuse their buffers).  Never calls into the
-        engine; backpressure follows ``config.overflow``.
+        engine's push shape, squeezed for convenience.  Shape, length and
+        dtype are validated *here*, naming the stream — a bad chunk fails
+        in the producer's own call, not as an opaque jit error from
+        inside a coalesced batch on the scheduler thread.  The chunk is
+        copied (producers may reuse their buffers).  When
+        ``config.health`` enables sanitization, the chunk is screened for
+        NaN/Inf/saturation before it can enter a batch and the configured
+        quarantine policy (reject/hold/reset) is applied.  Never calls
+        into the engine step; backpressure follows ``config.overflow``
+        (``QueueFullError`` semantics unchanged by any health policy).
         """
         chunk = np.asarray(chunk)
         if chunk.ndim == 3 and chunk.shape[0] == 1:
             chunk = chunk[0]
+        # dtype.kind beats two np.issubdtype calls on the per-chunk path
+        # (f=float, i/u=int; bool/complex/str/object all screen out)
+        if chunk.dtype.kind not in "fiu":
+            raise ValueError(
+                f"stream {stream_id!r}: chunk must be real-valued numeric, "
+                f"got dtype {chunk.dtype} (shape {chunk.shape})"
+            )
         if chunk.ndim != 2 or chunk.shape[0] < 1 or chunk.shape[1] != self._input_dim:
             raise ValueError(
-                f"chunk must be (t, {self._input_dim}) with t >= 1, "
+                f"stream {stream_id!r}: chunk must be "
+                f"(t, {self._input_dim}) with t >= 1, "
                 f"got {np.asarray(chunk).shape}"
             )
+        health = self._health
+        if health is not None and health.sanitize != "off":
+            reason = screen_chunk(chunk, health.saturation_limit)
+            if reason is not None:
+                self._quarantine(stream_id, reason)
+                return
         item = _Pending(stream_id, np.array(chunk), self._clock())
         with self._cond:
             while len(self._queue) >= self.config.queue_capacity:
@@ -363,14 +444,65 @@ class StreamServer:
             est.observe(item.t_enqueue)
             self._cond.notify_all()
 
+    def _quarantine(self, stream_id, reason: str) -> None:
+        """Apply the configured sanitize policy to one screened-out chunk
+        (the chunk itself is never enqueued)."""
+        policy = self._health.sanitize
+        if policy == "reject":
+            with self._cond:
+                self.stats.rejected += 1
+            raise ChunkRejectedError(
+                f"stream {stream_id!r}: chunk rejected — {reason}"
+            )
+        if policy == "hold":
+            # skip the chunk, keep the stream's resident state frozen: the
+            # stream's scores stay equal to a replay of its clean chunks
+            with self._cond:
+                self.stats.held += 1
+            logger.warning(
+                "stream %r: bad chunk held back (%s); resident state kept",
+                stream_id, reason,
+            )
+            return
+        # "reset": the glitch invalidates the stream's window in progress —
+        # discard its pending chunks, zero its engine state, and hold down
+        # the next holddown_windows scores while the state re-warms
+        with self._cond:
+            kept = deque(p for p in self._queue if p.stream_id != stream_id)
+            self.stats.cancelled += len(self._queue) - len(kept)
+            self._queue = kept
+            self.stats.sanitize_resets += 1
+            if self._health.holddown_windows:
+                self._holddown[stream_id] = self._health.holddown_windows
+            if stream_id in self._inflight:
+                self._closed_inflight.add(stream_id)
+            self._cond.notify_all()
+        with self._engine_lock:
+            self.engine.drop_stream(stream_id)
+        logger.warning(
+            "stream %r: bad chunk triggered state reset (%s); next %d "
+            "window score(s) held down", stream_id, reason,
+            self._health.holddown_windows,
+        )
+
     def close_stream(self, stream_id) -> int:
         """Leave: discard the stream's pending chunks (returned as a
-        count), release its engine slot and partial window."""
+        count), release its engine slot and partial window.
+
+        Safe against an in-flight batch: if the scheduler already
+        gathered one of this stream's chunks, the slot ``push_many``
+        re-creates is re-dropped when the batch completes and the
+        stream's scores from that batch are not delivered — a drop can
+        never leak stale ``(h, c)`` into a later rejoin.
+        """
         with self._cond:
             kept = deque(p for p in self._queue if p.stream_id != stream_id)
             dropped = len(self._queue) - len(kept)
             self._queue = kept
             self.stats.cancelled += dropped
+            self._holddown.pop(stream_id, None)
+            if stream_id in self._inflight:
+                self._closed_inflight.add(stream_id)
             self._cond.notify_all()
         with self._engine_lock:
             self.engine.drop_stream(stream_id)
@@ -387,6 +519,22 @@ class StreamServer:
         with self._results_lock:
             out, self._results = self._results, {}
         return out
+
+    def pop_errors(self) -> dict:
+        """Per-stream error marks accumulated since the last call:
+        ``{stream_id: [reason, ...]}``.  A stream lands here when its
+        batch's engine step raised (the whole batch is error-marked and
+        reset, not the whole server) or the post-step watchdog reset it;
+        its queued chunks keep flowing — the mark is the signal that a
+        window boundary was lost."""
+        with self._results_lock:
+            out, self._errors = self._errors, {}
+        return out
+
+    def _mark_errors(self, stream_ids, reason: str) -> None:
+        with self._results_lock:
+            for sid in stream_ids:
+                self._errors.setdefault(sid, []).append(reason)
 
     # -- scheduler core (shared by thread and manual modes) ------------------
 
@@ -467,6 +615,16 @@ class StreamServer:
         """
         if not self._queue:
             return None, None, None
+        if len(self._queue) == 1:
+            # lone-pending fast path: when the single queued chunk's stream
+            # is the only stream the server knows about, no waiting can add
+            # a distinct stream — skip the bucket-stats/set building that
+            # otherwise dominates a lone stream's per-tick host cost
+            item = self._queue[0]
+            sid = item.stream_id
+            if all(s == sid for s in self.engine.stream_ids):
+                reason = "full" if self._width <= 1 else "fastpath"
+                return item.chunk.shape[0], reason, None
         stats = self._bucket_stats_locked()
         pending_ids = {item.stream_id for item in self._queue}
         joined = set(self.engine.stream_ids) | pending_ids
@@ -526,9 +684,24 @@ class StreamServer:
         return batch
 
     def _fire(self, batch: list[_Pending], reason: str) -> None:
-        """One scheduler tick: gathered batch -> one ``push_many`` call."""
+        """One scheduler tick: gathered batch -> one ``push_many`` call.
+
+        Fault isolation happens here, per batch: an engine-step exception
+        error-marks and resets *this batch's* streams (the server keeps
+        serving everyone else), the post-step watchdog auto-resets any
+        stream whose resident state came out non-finite/exploded, streams
+        closed while the batch was in flight get their recreated slots
+        re-dropped and their scores suppressed, and a raising ``on_score``
+        callback is counted + logged instead of killing the scheduler
+        thread.
+        """
         ids = [p.stream_id for p in batch]
-        chunks = np.stack([p.chunk for p in batch])  # (N, t, input_dim)
+        if len(batch) == 1:
+            # lone-stream fast path: a view, not a copy — push_many copies
+            # each piece before the slot keeps a reference
+            chunks = batch[0].chunk[None]
+        else:
+            chunks = np.stack([p.chunk for p in batch])  # (N, t, input_dim)
         n_real = len(ids)
         n_pad = 0
         if self.config.pad_to_sublanes:
@@ -538,13 +711,72 @@ class StreamServer:
             chunks = np.concatenate(
                 [chunks, np.zeros((n_pad,) + chunks.shape[1:], chunks.dtype)]
             )
+        health = self._health
+        step_error: str | None = None
+        bad_state: set = set()
         with self._engine_lock:
-            res = self.engine.push_many(ids, chunks)
-            for pid in self._pad_ids[:n_pad]:
-                # pad slots are throwaway: dropping re-zeroes on next use,
-                # so pad rows never accumulate window fill across ticks
-                self.engine.drop_stream(pid)
+            try:
+                res = self.engine.push_many(ids, chunks)
+            except Exception as e:  # noqa: BLE001 — isolation boundary
+                # one bad batch must not take the server down: reset every
+                # stream in it (their state may be absent or half-advanced)
+                # and error-mark them; everyone else is untouched
+                logger.exception(
+                    "engine step failed for a batch of %d stream(s)", n_real
+                )
+                step_error = f"engine step failed: {type(e).__name__}: {e}"
+                res = None
+                for sid in ids:
+                    self.engine.drop_stream(sid)
+            else:
+                for pid in self._pad_ids[:n_pad]:
+                    # pad slots are throwaway: dropping re-zeroes on next
+                    # use, so pad rows never accumulate fill across ticks
+                    self.engine.drop_stream(pid)
+                if health is not None and health.watchdog:
+                    # post-step numeric watchdog: a stream whose (h, c)
+                    # came out non-finite or exploded is already poisoned —
+                    # every later score would be garbage.  Auto-reset it
+                    # (fresh zero state next chunk) and suppress this
+                    # tick's scores for it.
+                    absmax = self.engine.state_absmax(
+                        [p.stream_id for p in batch]
+                    )
+                    for p, m in zip(batch, absmax):
+                        if not m <= health.state_limit:
+                            bad_state.add(p.stream_id)
+                            self.engine.drop_stream(p.stream_id)
+            # the closed-in-flight set must be read (and the recreated
+            # slots re-dropped) before the engine lock is released: a
+            # close_stream that completed *before* push_many started
+            # already dropped its slot once, and push_many just recreated
+            # it — leaking stale (h, c) into any rejoin.  (Taking _cond
+            # inside _engine_lock is safe: no code path holds _cond while
+            # acquiring the engine lock.)
+            with self._cond:
+                closed = set(self._closed_inflight)
+                self._inflight = set()
+                self._closed_inflight = set()
+            for sid in closed:
+                self.engine.drop_stream(sid)
         done = self._clock()
+
+        if step_error is not None:
+            self._mark_errors([p.stream_id for p in batch], step_error)
+            with self._cond:
+                self.stats.ticks += 1
+                self.stats.engine_errors += 1
+                if health is not None and health.holddown_windows:
+                    for p in batch:
+                        self._holddown[p.stream_id] = health.holddown_windows
+                self._cond.notify_all()  # wake blocked producers
+            return
+        if bad_state:
+            self._mark_errors(
+                sorted(bad_state, key=str),
+                f"state watchdog reset (|h,c| exceeded "
+                f"{health.state_limit:g} or went non-finite)",
+            )
 
         n_windows = sum(len(res[p.stream_id]) for p in batch)
         with self._cond:
@@ -553,6 +785,10 @@ class StreamServer:
             st.processed += n_real
             st.windows_scored += n_windows
             st.batch_fill[n_real] += 1
+            st.watchdog_resets += len(bad_state)
+            if bad_state and health is not None and health.holddown_windows:
+                for sid in bad_state:
+                    self._holddown[sid] = health.holddown_windows
             if reason == "full" or n_real >= self._width:
                 st.full_flushes += 1
             elif reason == "deadline":
@@ -592,15 +828,42 @@ class StreamServer:
             self._cond.notify_all()  # wake blocked producers
 
         for p in batch:
-            scores = res[p.stream_id]
+            sid = p.stream_id
+            if sid in closed or sid in bad_state:
+                # closed/reset while in flight, or poisoned: these scores
+                # belong to a stream that no longer exists in that lineage
+                continue
+            scores = res[sid]
+            if scores and sid in self._holddown:
+                # post-reset hold-down: the state is still re-warming, so
+                # the first window score(s) after a reset are withheld
+                with self._cond:
+                    hold = self._holddown.get(sid, 0)
+                    drop = min(hold, len(scores))
+                    if drop:
+                        self.stats.holddown_suppressed += drop
+                    if hold - drop > 0:
+                        self._holddown[sid] = hold - drop
+                    else:
+                        self._holddown.pop(sid, None)
+                scores = scores[drop:]
             if not scores:
                 continue
             if self._on_score is not None:
                 for s in scores:
-                    self._on_score(p.stream_id, s)
+                    try:
+                        self._on_score(sid, s)
+                    except Exception:  # noqa: BLE001 — isolation boundary
+                        # a raising user callback must never kill the
+                        # scheduler thread (satellite fix: counted + logged)
+                        logger.exception(
+                            "on_score callback raised for stream %r", sid
+                        )
+                        with self._cond:
+                            self.stats.callback_errors += 1
             else:
                 with self._results_lock:
-                    self._results.setdefault(p.stream_id, []).extend(scores)
+                    self._results.setdefault(sid, []).extend(scores)
 
     # -- manual drive (tests / benchmarks) -----------------------------------
 
@@ -611,15 +874,19 @@ class StreamServer:
         deadline, or the all-joined-pending fast path); ``force=True``
         flushes whatever is pending (drain semantics)."""
         with self._cond:
+            now = self._clock()
+            self._heartbeat = now
             if not self._queue:
                 return 0
             if force:
                 t_bucket, reason = None, "drain"
             else:
-                t_bucket, reason, _ = self._decide_locked(self._clock())
+                t_bucket, reason, _ = self._decide_locked(now)
                 if t_bucket is None:
                     return 0
             batch = self._gather_locked(t_bucket)
+            self._inflight = {p.stream_id for p in batch}
+            self._closed_inflight = set()
         if not batch:
             return 0
         self._fire(batch, reason)
@@ -634,32 +901,146 @@ class StreamServer:
                 return total
             total += n
 
+    # -- health / checkpointing ----------------------------------------------
+
+    def heartbeat_age_s(self) -> float | None:
+        """Seconds since the scheduler last proved liveness (``None``
+        before the first tick / in manual mode before any ``tick()``)."""
+        with self._cond:
+            hb = self._heartbeat
+        return None if hb is None else max(0.0, self._clock() - hb)
+
+    def healthy(self) -> bool:
+        """Liveness check: the scheduler thread is running (or the server
+        is in manual mode) and, when ``health.heartbeat_timeout_s`` is
+        configured, its heartbeat is fresh.  A wedged engine call cannot
+        be killed from Python — but it *can* be detected here (and
+        ``stop``'s deadline keeps it from hanging shutdown)."""
+        thread = self._thread
+        if thread is None:
+            return True  # manual / unstarted mode: nothing to supervise
+        if not thread.is_alive():
+            return False
+        health = self._health
+        if health is None:
+            return True
+        age = self.heartbeat_age_s()
+        return age is None or age <= health.heartbeat_timeout_s
+
+    def checkpoint(self, path: str | None = None) -> str:
+        """Snapshot the engine (every stream's state, partial windows,
+        threshold) to ``path`` — default ``health.checkpoint_path`` —
+        atomically, and count it.  Chunks still waiting in the arrival
+        queue are *not* part of the snapshot: a checkpoint captures the
+        engine-resident lineage; un-gathered chunks belong to producers
+        and must be re-submitted after ``restart_from``."""
+        if path is None:
+            health = self._health
+            path = health.checkpoint_path if health is not None else None
+        if path is None:
+            raise ValueError(
+                "no checkpoint path: pass one explicitly or set "
+                "HealthConfig.checkpoint_path"
+            )
+        with self._engine_lock:
+            self.engine.save_snapshot(path)
+        with self._cond:
+            self.stats.checkpoints += 1
+        return path
+
+    def _maybe_checkpoint(self) -> None:
+        """Periodic checkpointing on the scheduler thread (both knobs must
+        be set); a failing write is logged, never fatal."""
+        health = self._health
+        if (
+            health is None
+            or health.checkpoint_interval_s is None
+            or health.checkpoint_path is None
+        ):
+            return
+        now = self._clock()
+        if (
+            self._last_checkpoint is not None
+            and now - self._last_checkpoint < health.checkpoint_interval_s
+        ):
+            return
+        self._last_checkpoint = now
+        try:
+            self.checkpoint()
+        except Exception:  # noqa: BLE001 — isolation boundary
+            logger.exception("periodic checkpoint failed")
+
+    @classmethod
+    def restart_from(
+        cls, path, engine, config: ServerConfig | None = None, **kw
+    ) -> "StreamServer":
+        """Resume serving from a checkpoint: restore ``engine`` from the
+        snapshot at ``path`` (version + fingerprint gated) and wrap it in
+        a fresh server.  Every stream in the snapshot resumes bit-equal
+        to an uninterrupted run; the old server's arrival queue is not
+        part of the snapshot (producers re-submit un-scored chunks)."""
+        engine.restore(path)
+        return cls(engine, config, **kw)
+
     # -- threaded drive ------------------------------------------------------
 
     def start(self) -> "StreamServer":
         if self._thread is not None and self._thread.is_alive():
             raise RuntimeError("scheduler thread already running")
         self._stopping = False
+        self._restarts = 0
+        self._sup_stop = threading.Event()
         self._thread = threading.Thread(
-            target=self._loop, name="stream-server", daemon=True
+            target=self._run, name="stream-server", daemon=True
         )
         self._thread.start()
+        health = self._health
+        if health is not None and health.supervise:
+            self._sup_thread = threading.Thread(
+                target=self._supervise_loop,
+                name="stream-server-supervisor",
+                daemon=True,
+            )
+            self._sup_thread.start()
         return self
 
-    def stop(self, drain: bool = True) -> None:
+    def stop(self, drain: bool = True, deadline_s: float | None = None) -> bool:
         """Stop the scheduler thread; ``drain=True`` (default) processes
-        every pending chunk first, ``False`` abandons the queue."""
+        every pending chunk first, ``False`` abandons the queue.
+
+        ``deadline_s`` (default ``health.drain_deadline_s``; ``None``
+        waits forever) bounds the wait: a wedged engine step cannot hang
+        shutdown past it.  Returns True when the scheduler exited cleanly
+        within the deadline; False when it was abandoned (the daemon
+        thread is left behind — it cannot be killed — and the remaining
+        queue is cancelled)."""
+        if deadline_s is None and self._health is not None:
+            deadline_s = self._health.drain_deadline_s
+        self._sup_stop.set()
         with self._cond:
             self._stopping = True
             self._drain_on_stop = drain
             self._cond.notify_all()
+        if self._sup_thread is not None:
+            self._sup_thread.join()
+            self._sup_thread = None
+        clean = True
         if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if not drain:
+            self._thread.join(deadline_s)
+            if self._thread.is_alive():
+                clean = False
+                logger.error(
+                    "scheduler thread did not exit within the %.3fs stop "
+                    "deadline (wedged engine step?); abandoning it",
+                    deadline_s,
+                )
+            else:
+                self._thread = None
+        if not drain or not clean:
             with self._cond:
                 self.stats.cancelled += len(self._queue)
                 self._queue.clear()
+        return clean
 
     def __enter__(self) -> "StreamServer":
         return self.start()
@@ -667,11 +1048,70 @@ class StreamServer:
     def __exit__(self, *exc) -> None:
         self.stop(drain=True)
 
+    def _run(self) -> None:
+        """Thread target: ``_loop`` behind a crash boundary.  Per-batch
+        faults are already isolated inside ``_fire``; anything that still
+        escapes (a scheduler bug, not a stream's fault) is logged and
+        ends the thread — the supervisor, when enabled, restarts it."""
+        try:
+            self._loop()
+        except Exception:  # noqa: BLE001 — crash boundary
+            logger.exception("scheduler thread crashed")
+
+    def _supervise_loop(self) -> None:
+        interval = self._health.supervise_interval_s
+        while not self._sup_stop.wait(interval):
+            self._supervise_once()
+
+    def _supervise_once(self) -> bool:
+        """One supervision pass (extracted so tests can drive it without
+        the poll cadence): if the scheduler thread died, restart it after
+        bounded exponential backoff — ``restart_backoff_s`` doubling per
+        restart up to ``max_backoff_s``, at most ``max_restarts`` times.
+        Returns True iff a restart was performed."""
+        health = self._health
+        with self._cond:
+            if self._stopping:
+                return False
+            thread = self._thread
+            if thread is None or thread.is_alive():
+                return False
+            if self._restarts >= health.max_restarts:
+                return False
+            self._restarts += 1
+            n = self._restarts
+            self.stats.scheduler_restarts += 1
+        backoff = min(
+            health.restart_backoff_s * (2 ** (n - 1)), health.max_backoff_s
+        )
+        if self._sup_stop.wait(backoff):
+            return False  # stop() raced the backoff
+        with self._cond:
+            if self._stopping:
+                return False
+            logger.warning(
+                "scheduler thread died; supervised restart %d/%d",
+                n, health.max_restarts,
+            )
+            self._thread = threading.Thread(
+                target=self._run, name="stream-server", daemon=True
+            )
+            self._thread.start()
+        return True
+
     def _loop(self) -> None:
+        # while idle with health configured, wake periodically so the
+        # heartbeat stays fresh (an idle scheduler is healthy, not wedged)
+        health = self._health
+        idle_wait = (
+            health.heartbeat_timeout_s / 4.0 if health is not None else None
+        )
         while True:
             with self._cond:
+                self._heartbeat = self._clock()
                 while not self._queue and not self._stopping:
-                    self._cond.wait()
+                    self._cond.wait(idle_wait)
+                    self._heartbeat = self._clock()
                 if self._stopping and not (self._drain_on_stop and self._queue):
                     return
                 t_bucket, reason = None, "drain"
@@ -688,12 +1128,16 @@ class StreamServer:
                         self._cond.wait(
                             wait_us * 1e-6
                             if wait_us is not None and math.isfinite(wait_us)
-                            else None
+                            else idle_wait
                         )
+                        self._heartbeat = self._clock()
                     if not self._queue:
                         continue
                     if t_bucket is None:  # stop raced the wait: drain
                         reason = "drain"
                 batch = self._gather_locked(t_bucket)
+                self._inflight = {p.stream_id for p in batch}
+                self._closed_inflight = set()
             if batch:
                 self._fire(batch, reason)
+                self._maybe_checkpoint()

@@ -1,0 +1,179 @@
+"""Fault injectors for the serving robustness suite (``test_chaos.py``).
+
+Each injector models one production failure mode the robustness layer
+(PR 8) must absorb, in a form deterministic enough for property-style
+tests:
+
+* ``FaultyEngine`` — delegating engine wrapper that raises on scripted
+  ``push_many`` call indices (an accelerator step blowing up mid-batch);
+* ``BlockingEngine`` — delegating wrapper whose ``push_many`` parks on a
+  ``threading.Event`` (a wedged device call, for stop-deadline tests);
+* ``CloseRaceEngine`` — delegating wrapper that runs ``close_stream``
+  from another thread *while* ``push_many`` is executing, and only
+  proceeds once the closer has registered its in-flight tombstone — the
+  narrowest reproducible interleaving of the drop-vs-batch race;
+* ``SkewClock`` — a manual clock whose reads jump by scripted offsets
+  (NTP step / suspend-resume skew against the deadline scheduler);
+* ``corrupt`` — build NaN / Inf / saturated chunks, and ``glitch_plan``
+  — deterministically mark which (stream, chunk index) pairs a driver
+  should corrupt.
+
+None of this imports pytest: the injectors are plain objects reusable
+from benchmarks or an interactive session.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+__all__ = [
+    "BlockingEngine",
+    "CloseRaceEngine",
+    "FaultyEngine",
+    "SkewClock",
+    "corrupt",
+    "glitch_plan",
+]
+
+
+class _DelegatingEngine:
+    """Forward everything to the wrapped engine except what a subclass
+    overrides (``StreamServer`` only needs ``batch``/``cfg`` attributes
+    plus the ``push_many``/``drop_stream``/``stream_ids`` surface, all of
+    which delegation covers)."""
+
+    def __init__(self, engine):
+        self._engine = engine
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+
+class FaultyEngine(_DelegatingEngine):
+    """Raise on scripted ``push_many`` call indices (0-based), delegate
+    otherwise.  ``calls`` counts every ``push_many`` attempt, including
+    the failed ones, so tests can script "fail the k-th batch"."""
+
+    def __init__(self, engine, fail_calls=(), exc=RuntimeError):
+        super().__init__(engine)
+        self.fail_calls = set(fail_calls)
+        self.exc = exc
+        self.calls = 0
+
+    def push_many(self, ids, chunks):
+        i = self.calls
+        self.calls += 1
+        if i in self.fail_calls:
+            raise self.exc(f"injected engine fault at push_many call {i}")
+        return self._engine.push_many(ids, chunks)
+
+
+class BlockingEngine(_DelegatingEngine):
+    """Park ``push_many`` on ``release`` for the scripted call indices —
+    a wedged accelerator call.  ``entered`` is set the moment a blocked
+    call begins, so the test can synchronize before asserting that
+    ``stop``'s deadline fires."""
+
+    def __init__(self, engine, block_calls=(0,)):
+        super().__init__(engine)
+        self.block_calls = set(block_calls)
+        self.release = threading.Event()
+        self.entered = threading.Event()
+        self.calls = 0
+
+    def push_many(self, ids, chunks):
+        i = self.calls
+        self.calls += 1
+        if i in self.block_calls:
+            self.entered.set()
+            self.release.wait()
+        return self._engine.push_many(ids, chunks)
+
+
+class CloseRaceEngine(_DelegatingEngine):
+    """Reproduce the close-vs-in-flight-batch race deterministically.
+
+    On the scripted call index, while ``push_many`` is already executing
+    on the scheduler thread (the server's engine lock held), a second
+    thread calls ``server.close_stream(stream_id)`` — which registers the
+    in-flight tombstone under the server's queue lock and then blocks on
+    the engine lock.  ``push_many`` waits until the tombstone is visible
+    before doing the real step, so the batch *always* completes after the
+    close began: exactly the interleaving where a recreated slot would
+    leak stale state if ``_fire`` did not re-drop it.
+
+    Call ``attach(server, stream_id)`` after constructing the server.
+    """
+
+    def __init__(self, engine, race_call=0):
+        super().__init__(engine)
+        self.race_call = race_call
+        self.calls = 0
+        self.server = None
+        self.stream_id = None
+        self.closer: threading.Thread | None = None
+        self.closed_dropped: int | None = None
+
+    def attach(self, server, stream_id):
+        self.server = server
+        self.stream_id = stream_id
+
+    def push_many(self, ids, chunks):
+        i = self.calls
+        self.calls += 1
+        if i == self.race_call and self.server is not None:
+
+            def _close():
+                self.closed_dropped = self.server.close_stream(self.stream_id)
+
+            self.closer = threading.Thread(target=_close, daemon=True)
+            self.closer.start()
+            # close_stream sets the tombstone under the queue lock *before*
+            # blocking on the engine lock (held by our caller), so this
+            # spin always terminates — and guarantees the close "happened
+            # first" from the race's point of view
+            while self.stream_id not in self.server._closed_inflight:
+                pass
+        return self._engine.push_many(ids, chunks)
+
+
+class SkewClock:
+    """Manual monotonic-ish clock with scripted skew: ``advance_us`` is
+    normal progress, ``jump_s`` injects an NTP-step / suspend-resume
+    discontinuity (forward or *backward* — the scheduler must tolerate a
+    non-monotonic read without stalling or crashing)."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+        self.reads = 0
+
+    def __call__(self) -> float:
+        self.reads += 1
+        return self.t
+
+    def advance_us(self, us: float):
+        self.t += us * 1e-6
+
+    def jump_s(self, s: float):
+        self.t += s
+
+
+def corrupt(shape, kind: str, dtype=np.float32, value: float = 1e12):
+    """One bad chunk: ``kind`` in {"nan", "inf", "saturated"} (saturated
+    uses ``value``, meant to exceed the configured saturation_limit)."""
+    fill = {"nan": np.nan, "inf": np.inf, "saturated": value}[kind]
+    return np.full(shape, fill, dtype=dtype)
+
+
+def glitch_plan(n_streams: int, n_chunks: int, every: int = 5, phase: int = 3):
+    """Deterministic corruption schedule: the set of (stream index,
+    chunk index) pairs to replace with a bad chunk — staggered per
+    stream so glitches land in different batches."""
+    return {
+        (s, c)
+        for s in range(n_streams)
+        for c in range(n_chunks)
+        if (c + phase * s) % every == every - 1
+    }

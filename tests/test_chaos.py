@@ -1,0 +1,544 @@
+"""Fault-injection suite for the serving robustness layer (PR 8).
+
+The property under test, end to end: **faults stay local**.  Under
+injected NaN/Inf/saturated chunks, engine-step exceptions, poisoned
+resident state, clock skew, mid-batch closes, and a mid-run
+snapshot/restore, every *unaffected* stream's scores stay bit-equal to a
+fault-free sequential replay — and the affected streams degrade exactly
+as their configured policy says (reject loudly / hold state / reset with
+a hold-down), never silently.
+
+All scheduling is driven in manual-tick mode with injectable clocks
+where determinism matters; the supervision/stop-deadline tests use the
+threaded drive with event-synchronized injectors (no raw sleeps as the
+primary synchronization).
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from chaos import (
+    BlockingEngine,
+    CloseRaceEngine,
+    FaultyEngine,
+    SkewClock,
+    corrupt,
+    glitch_plan,
+)
+from repro.core.autoencoder import AutoencoderConfig, init_autoencoder
+from repro.serve.engine import StreamingAnomalyEngine
+from repro.serve.health import (
+    ChunkRejectedError,
+    HealthConfig,
+    SnapshotMismatchError,
+)
+from repro.serve.server import QueueFullError, ServerConfig, StreamServer
+
+_CFG = AutoencoderConfig(hidden=(9, 9), latent_boundary=1, timesteps=12)
+_PARAMS = init_autoencoder(jax.random.PRNGKey(7), _CFG)
+_DIM = _CFG.input_dim
+
+
+def _engine(**kw):
+    return StreamingAnomalyEngine(_PARAMS, _CFG, batch=1, **kw)
+
+
+def _server(engine=None, *, health=True, on_score=None, clock=None, **cfg_kw):
+    kw = {}
+    if on_score is not None:
+        kw["on_score"] = on_score
+    if clock is not None:
+        kw["clock"] = clock
+    return StreamServer(
+        engine if engine is not None else _engine(),
+        ServerConfig(health=health, **cfg_kw),
+        **kw,
+    )
+
+
+def _chunks(seed, n, t=6):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((t, _DIM)).astype(np.float32) for _ in range(n)]
+
+
+def _replay(chunk_lists: dict) -> dict:
+    """Ground truth: each stream's chunks replayed solo through a fresh
+    engine (the bit-equality reference for everything below)."""
+    seq = _engine()
+    out = {}
+    for sid, chunks in chunk_lists.items():
+        seq.reset()
+        scores = []
+        for c in chunks:
+            scores += seq.push(c[None])
+        out[sid] = scores
+    return out
+
+
+def _assert_scores_equal(got: dict, want: dict):
+    assert set(got) == set(want), (sorted(got, key=str), sorted(want, key=str))
+    for sid in want:
+        assert len(got[sid]) == len(want[sid]), sid
+        for g, w in zip(got[sid], want[sid]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def _wait_until(pred, timeout=10.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.005)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+# ---------------------------------------------------------------------------
+# pillar 1: input sanitization + quarantine policies
+# ---------------------------------------------------------------------------
+
+
+class TestGlitchQuarantine:
+    def test_hold_glitched_streams_score_their_clean_chunks(self):
+        """sanitize="hold": a glitched chunk is skipped with state frozen,
+        so every stream — glitched or not — scores bit-equal to a replay
+        of its *clean* chunks; untouched streams see full-replay scores."""
+        streams = [f"s{i}" for i in range(4)]
+        chunks = {sid: _chunks(i, 10) for i, sid in enumerate(streams)}
+        bad = glitch_plan(n_streams=4, n_chunks=10)
+        # leave streams 0 and 2 entirely clean
+        bad = {(s, c) for (s, c) in bad if s in (1, 3)}
+        srv = _server(health=HealthConfig(sanitize="hold"))
+        for c in range(10):
+            for s, sid in enumerate(streams):
+                chunk = (
+                    corrupt((6, _DIM), "nan") if (s, c) in bad else chunks[sid][c]
+                )
+                srv.submit(sid, chunk)
+            srv.drain()
+        clean = {
+            sid: [c for j, c in enumerate(chs) if (i, j) not in bad]
+            for i, (sid, chs) in enumerate(chunks.items())
+        }
+        _assert_scores_equal(srv.pop_scores(), _replay(clean))
+        assert srv.stats.held == len(bad)
+        assert srv.pop_errors() == {}
+
+    def test_reject_raises_and_stream_survives(self):
+        srv = _server(health=HealthConfig(sanitize="reject"))
+        chunks = _chunks(1, 4)
+        srv.submit("a", chunks[0])
+        with pytest.raises(ChunkRejectedError, match="stream 'a'.*NaN"):
+            srv.submit("a", corrupt((6, _DIM), "nan"))
+        with pytest.raises(ChunkRejectedError, match="Inf"):
+            srv.submit("a", corrupt((6, _DIM), "inf"))
+        for c in chunks[1:]:
+            srv.submit("a", c)
+        srv.drain()
+        # the rejected chunks never touched the engine: scores equal a
+        # replay of exactly the accepted chunks
+        _assert_scores_equal(srv.pop_scores(), _replay({"a": chunks}))
+        assert srv.stats.rejected == 2
+
+    def test_saturation_limit_screens_amplitude(self):
+        srv = _server(
+            health=HealthConfig(sanitize="reject", saturation_limit=100.0)
+        )
+        with pytest.raises(ChunkRejectedError, match="saturated"):
+            srv.submit("a", corrupt((6, _DIM), "saturated", value=1e6))
+        # amplitude under the limit passes
+        srv.submit("a", np.full((6, _DIM), 99.0, np.float32))
+        assert srv.pending == 1
+
+    def test_reset_policy_fresh_lineage_with_holddown(self):
+        """sanitize="reset": the glitched stream restarts from zero state
+        (post-glitch scores equal a fresh replay of post-glitch chunks,
+        first ``holddown_windows`` suppressed); other streams unaffected."""
+        a_chunks = _chunks(10, 10)
+        b_chunks = _chunks(11, 10)
+        srv = _server(health=HealthConfig(sanitize="reset", holddown_windows=1))
+        glitch_at = 3
+        for c in range(10):
+            srv.submit("a", a_chunks[c])
+            srv.submit(
+                "b", corrupt((6, _DIM), "inf") if c == glitch_at else b_chunks[c]
+            )
+            srv.drain()
+        got = srv.pop_scores()
+        want_a = _replay({"a": a_chunks})["a"]
+        # b: 2 chunks/window -> chunks 0,1 scored before the glitch; chunk
+        # 2's half-filled window is discarded by the reset; chunks 4..9
+        # replay from zero state with the first post-reset score held down
+        pre = _replay({"b": b_chunks[:2]})["b"]
+        post = _replay({"b": b_chunks[glitch_at + 1 :]})["b"]
+        _assert_scores_equal(got, {"a": want_a, "b": pre + post[1:]})
+        assert srv.stats.sanitize_resets == 1
+        assert srv.stats.holddown_suppressed == 1
+
+    def test_queue_full_semantics_unchanged_by_health(self):
+        srv = _server(
+            health=True, queue_capacity=2, overflow="error"
+        )
+        srv.submit("a", _chunks(0, 1)[0])
+        srv.submit("b", _chunks(1, 1)[0])
+        with pytest.raises(QueueFullError):
+            srv.submit("c", _chunks(2, 1)[0])
+
+
+# ---------------------------------------------------------------------------
+# pillar 1b: engine-step faults + the post-step watchdog
+# ---------------------------------------------------------------------------
+
+
+class TestEngineFaults:
+    def test_engine_exception_isolated_to_its_batch(self):
+        """A raising engine step error-marks *that batch's* streams and
+        resets them; a different bucket's batch is untouched and stays
+        bit-equal; the failed stream keeps serving afterward."""
+        eng = FaultyEngine(_engine(), fail_calls={0})
+        srv = _server(eng, health=HealthConfig(holddown_windows=0))
+        a_chunks = _chunks(20, 4, t=12)  # one window per chunk
+        b_chunks = _chunks(21, 2, t=6)   # separate length bucket
+        srv.submit("a", a_chunks[0])
+        assert srv.tick(force=True) == 1  # injected fault fires here
+        errs = srv.pop_errors()
+        assert list(errs) == ["a"] and "engine step failed" in errs["a"][0]
+        assert srv.stats.engine_errors == 1
+        assert srv.pop_scores() == {}
+        # the other bucket, and subsequent batches of the same stream,
+        # flow bit-equal to replay
+        for c in b_chunks:
+            srv.submit("b", c)
+        for c in a_chunks[1:]:
+            srv.submit("a", c)
+        srv.drain()
+        _assert_scores_equal(
+            srv.pop_scores(),
+            _replay({"a": a_chunks[1:], "b": b_chunks}),
+        )
+        assert srv.pop_errors() == {}
+
+    def test_watchdog_resets_poisoned_state(self):
+        """A stream whose resident (h, c) went NaN (whatever the cause) is
+        auto-reset and error-marked; its batch peers are untouched.  The
+        probe chunks stay *inside* a window (t=2 on a 12-window): a
+        window completion re-zeroes state anyway, mid-window is exactly
+        where poison persists."""
+        eng = _engine()
+        srv = _server(eng, health=HealthConfig(holddown_windows=0))
+        a0, b0 = _chunks(30, 1)[0], _chunks(31, 1)[0]
+        ap, bp = _chunks(32, 1, t=2)[0], _chunks(33, 1, t=2)[0]
+        b1 = _chunks(34, 1, t=4)[0]
+        srv.submit("a", a0)
+        srv.submit("b", b0)
+        srv.drain()
+        slot = eng._streams["a"]
+        slot.state = jax.tree_util.tree_map(
+            lambda x: x * np.nan, slot.state
+        )
+        srv.submit("a", ap)
+        srv.submit("b", bp)
+        srv.drain()  # 6+2 samples: no window boundary — poison persists
+        assert srv.stats.watchdog_resets == 1
+        errs = srv.pop_errors()
+        assert list(errs) == ["a"] and "watchdog" in errs["a"][0]
+        assert "a" not in eng.stream_ids  # slot released: fresh on rejoin
+        # b never saw the poison and completes its window untouched;
+        # a restarts a fresh lineage
+        a_fresh = _chunks(35, 2)
+        for c in a_fresh:
+            srv.submit("a", c)
+        srv.submit("b", b1)
+        srv.drain()
+        _assert_scores_equal(
+            srv.pop_scores(),
+            _replay({"a": a_fresh, "b": [b0, bp, b1]}),
+        )
+
+    def test_watchdog_off_lets_scores_flow(self):
+        eng = _engine()
+        srv = _server(eng, health=HealthConfig(watchdog=False))
+        srv.submit("a", _chunks(32, 1)[0])
+        srv.drain()
+        assert srv.stats.watchdog_resets == 0
+
+
+# ---------------------------------------------------------------------------
+# pillar 2: snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotRestore:
+    def test_midrun_checkpoint_restart_bitequal(self, tmp_path):
+        """Snapshot mid-run (partial windows in flight), restore into a
+        *fresh* engine + server, finish both: the restarted lineage's
+        scores are bit-equal to the uninterrupted one's."""
+        path = str(tmp_path / "ck.npz")
+        streams = ["s0", "s1", "s2"]
+        chunks = {sid: _chunks(40 + i, 7) for i, sid in enumerate(streams)}
+        srv = _server(health=True)
+        for c in range(3):  # odd total: partial windows resident
+            for sid in streams:
+                srv.submit(sid, chunks[sid][c])
+            srv.drain()
+        mid = srv.pop_scores()
+        srv.checkpoint(path)
+        assert srv.stats.checkpoints == 1
+
+        restarted = StreamServer.restart_from(
+            path, _engine(), ServerConfig(health=True)
+        )
+        for c in range(3, 7):
+            for sid in streams:
+                srv.submit(sid, np.array(chunks[sid][c]))
+                restarted.submit(sid, np.array(chunks[sid][c]))
+            srv.drain()
+            restarted.drain()
+        tail_uninterrupted = srv.pop_scores()
+        tail_restarted = restarted.pop_scores()
+        _assert_scores_equal(tail_restarted, tail_uninterrupted)
+        # and the whole lineage equals a sequential replay
+        merged = {
+            sid: mid.get(sid, []) + tail_uninterrupted.get(sid, [])
+            for sid in streams
+        }
+        _assert_scores_equal(merged, _replay(chunks))
+
+    def test_restore_carries_threshold(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        eng = _engine()
+        eng.threshold = 0.125
+        eng.save_snapshot(path)
+        eng2 = _engine()
+        eng2.restore(path)
+        assert eng2.threshold == 0.125
+
+    def test_fingerprint_mismatch_refused(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        _engine().save_snapshot(path)
+        other_cfg = AutoencoderConfig(
+            hidden=(6, 6), latent_boundary=1, timesteps=12
+        )
+        other = StreamingAnomalyEngine(
+            init_autoencoder(jax.random.PRNGKey(1), other_cfg),
+            other_cfg,
+            batch=1,
+        )
+        with pytest.raises(SnapshotMismatchError, match="hidden"):
+            other.restore(path)
+
+    def test_version_gate(self):
+        eng = _engine()
+        snap = eng.snapshot()
+        snap["version"] = 999
+        with pytest.raises(SnapshotMismatchError, match="version"):
+            _engine().restore(snap)
+
+    def test_unserializable_stream_id_fails_at_snapshot(self, tmp_path):
+        eng = _engine()
+        eng.push_many([("tuple", "id")], np.zeros((1, 2, _DIM), np.float32))
+        with pytest.raises(ValueError, match="not snapshot-serializable"):
+            eng.save_snapshot(str(tmp_path / "ck.npz"))
+
+
+# ---------------------------------------------------------------------------
+# pillar 3: scheduler supervision, stop deadline, clock skew
+# ---------------------------------------------------------------------------
+
+
+class _FireCrash:
+    """Make the *scheduler loop itself* crash (not an engine fault — those
+    are isolated per batch): shadows ``server._fire`` and raises on the
+    first scripted calls, then delegates."""
+
+    def __init__(self, server, crashes=1):
+        self._orig = server._fire
+        self.remaining = crashes
+
+    def __call__(self, batch, reason):
+        if self.remaining > 0:
+            self.remaining -= 1
+            raise RuntimeError("injected scheduler crash")
+        return self._orig(batch, reason)
+
+
+class TestSupervision:
+    _HEALTH = dict(
+        supervise=False,  # driven by hand via _supervise_once
+        restart_backoff_s=0.001,
+        max_backoff_s=0.002,
+        heartbeat_timeout_s=5.0,
+    )
+
+    def test_supervised_restart_resumes_serving(self):
+        srv = _server(health=HealthConfig(**self._HEALTH))
+        srv._fire = _FireCrash(srv, crashes=1)
+        srv.start()
+        try:
+            srv.submit("a", _chunks(50, 1)[0])
+            _wait_until(
+                lambda: not srv._thread.is_alive(), msg="scheduler crash"
+            )
+            assert not srv.healthy()
+            assert srv._supervise_once() is True
+            assert srv.stats.scheduler_restarts == 1
+            assert srv.healthy()
+            # the crashed tick's gathered chunk is lost (error isolation is
+            # per *engine* batch; a scheduler crash is a bug, not a stream
+            # fault) — new work flows through the restarted thread
+            chunks = _chunks(51, 2)
+            for c in chunks:
+                srv.submit("a", c)
+            _wait_until(
+                lambda: srv.pop_scores().get("a"), msg="post-restart score"
+            )
+        finally:
+            srv.stop()
+
+    def test_restart_budget_bounded(self):
+        srv = _server(
+            health=HealthConfig(max_restarts=2, **self._HEALTH)
+        )
+        srv._fire = _FireCrash(srv, crashes=99)
+        srv.start()
+        try:
+            for expected in (1, 2):
+                srv.submit("a", _chunks(52, 1)[0])
+                _wait_until(
+                    lambda: not srv._thread.is_alive(), msg="crash"
+                )
+                assert srv._supervise_once() is (True)
+                assert srv.stats.scheduler_restarts == expected
+            srv.submit("a", _chunks(53, 1)[0])
+            _wait_until(lambda: not srv._thread.is_alive(), msg="crash")
+            # budget exhausted: no further restart
+            assert srv._supervise_once() is False
+            assert srv.stats.scheduler_restarts == 2
+        finally:
+            srv.stop()
+
+    def test_supervisor_thread_end_to_end(self):
+        health = HealthConfig(
+            supervise=True,
+            supervise_interval_s=0.005,
+            restart_backoff_s=0.001,
+            max_backoff_s=0.002,
+        )
+        srv = _server(health=health)
+        srv._fire = _FireCrash(srv, crashes=1)
+        srv.start()
+        try:
+            srv.submit("a", _chunks(54, 1)[0])
+            _wait_until(
+                lambda: srv.stats.scheduler_restarts >= 1,
+                msg="supervisor restart",
+            )
+            chunks = _chunks(55, 2)
+            for c in chunks:
+                srv.submit("a", c)
+            _wait_until(
+                lambda: srv.pop_scores().get("a"), msg="post-restart score"
+            )
+        finally:
+            srv.stop()
+
+    def test_stop_deadline_survives_wedged_engine(self):
+        eng = BlockingEngine(_engine(), block_calls={0})
+        srv = _server(
+            eng, health=HealthConfig(supervise=False, heartbeat_timeout_s=0.05)
+        )
+        srv.start()
+        try:
+            srv.submit("a", _chunks(56, 1)[0])
+            assert eng.entered.wait(10.0)
+            srv.submit("b", _chunks(57, 1)[0])  # will be abandoned
+            _wait_until(lambda: not srv.healthy(), msg="stale heartbeat")
+            t0 = time.monotonic()
+            assert srv.stop(drain=True, deadline_s=0.2) is False
+            assert time.monotonic() - t0 < 5.0
+            assert srv.pending == 0  # abandoned queue cancelled
+            assert srv.stats.cancelled >= 1
+        finally:
+            eng.release.set()  # unwedge so the daemon thread exits
+
+    def test_clock_skew_does_not_break_determinism(self):
+        """Forward and backward clock jumps against the deadline
+        scheduler: no crash, no stall, scores bit-equal to replay."""
+        clk = SkewClock()
+        srv = _server(health=True, clock=clk, deadline_us=200.0)
+        chunks = {sid: _chunks(60 + i, 6) for i, sid in enumerate("ab")}
+        jumps = [3600.0, -7200.0, 0.25, -0.001, 1e6]
+        for c in range(6):
+            for sid in "ab":
+                srv.submit(sid, chunks[sid][c])
+            clk.jump_s(jumps[c % len(jumps)])
+            srv.tick()
+            clk.advance_us(300.0)  # past the deadline budget
+            srv.tick()
+        srv.drain()
+        _assert_scores_equal(srv.pop_scores(), _replay(chunks))
+
+
+# ---------------------------------------------------------------------------
+# satellite: close_stream racing an in-flight batch
+# ---------------------------------------------------------------------------
+
+
+class TestCloseInflightRace:
+    def test_close_mid_batch_suppresses_scores_and_slot(self):
+        """close_stream lands while its stream's batch is inside
+        push_many: the recreated slot must be re-dropped (no stale (h, c)
+        for a rejoin) and the closed stream's scores not delivered."""
+        eng = CloseRaceEngine(_engine(), race_call=1)
+        srv = _server(eng, health=True)
+        eng.attach(srv, "a")
+        a, b = _chunks(70, 2), _chunks(71, 2)
+        srv.submit("a", a[0])
+        srv.submit("b", b[0])
+        srv.drain()  # call 0: half windows fill
+        srv.submit("a", a[1])
+        srv.submit("b", b[1])
+        srv.drain()  # call 1: the race — close("a") mid-step
+        eng.closer.join(10.0)
+        assert eng.closed_dropped == 0  # no pending chunks at close time
+        assert "a" not in eng.stream_ids
+        got = srv.pop_scores()
+        # b's window score delivered bit-equal; a's suppressed entirely
+        _assert_scores_equal(got, _replay({"b": b}))
+        # rejoin "a": fresh zero state, NOT the pre-close lineage — its
+        # scores equal a fresh replay of only the new chunks
+        fresh = _chunks(72, 2)
+        for c in fresh:
+            srv.submit("a", c)
+        srv.drain()
+        _assert_scores_equal(srv.pop_scores(), _replay({"a": fresh}))
+
+
+# ---------------------------------------------------------------------------
+# satellite: callback isolation
+# ---------------------------------------------------------------------------
+
+
+class TestCallbackIsolation:
+    def test_throwing_on_score_threaded_does_not_kill_scheduler(self):
+        calls = []
+
+        def bad_cb(sid, score):
+            calls.append((sid, np.asarray(score)))
+            raise ValueError("user callback bug")
+
+        srv = _server(on_score=bad_cb, health=True)
+        chunks = _chunks(80, 4)
+        with srv:
+            for c in chunks:
+                srv.submit("a", c)
+            _wait_until(lambda: len(calls) >= 2, msg="callback deliveries")
+        assert srv.stats.callback_errors == len(calls) == 2
+        assert srv._thread is None  # clean stop: thread survived the raises
+        want = _replay({"a": chunks})["a"]
+        for (sid, got), w in zip(calls, want):
+            assert sid == "a"
+            np.testing.assert_array_equal(got, np.asarray(w))

@@ -388,3 +388,75 @@ class TestEffectiveImpl:
                                 timesteps=T, acts=PAPER_HW, impl="fused_stack")
         cfg2, eff, reason = resolve_impl(cfg, "fused_stack")
         assert eff == "fused_stack" and reason is None and cfg2 is cfg
+
+
+class TestSnapshotRestore:
+    """Engine-level snapshot/restore (PR 8): the lock-step ``push`` path
+    and the ``push_many`` pool round-trip through the versioned on-disk
+    format bit-exactly, mid-window, with geometry gated by fingerprint.
+    (Server-level restart and fault paths live in ``test_chaos.py``.)"""
+
+    def test_lockstep_midwindow_roundtrip_bitequal(self, small, tmp_path):
+        params, cfg, x = small
+        path = str(tmp_path / "engine.npz")
+        a = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        a.push(x[:, :7])                      # mid-window: 7 of T samples
+        a.save_snapshot(path)
+        b = StreamingAnomalyEngine(params, cfg, batch=3, window=T)
+        b.restore(path)
+        assert b.filled == 7
+        (sa,) = a.push(x[:, 7:])
+        (sb,) = b.push(x[:, 7:])
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+    def test_carry_state_survives_restore(self, small, tmp_path):
+        params, cfg, x = small
+        path = str(tmp_path / "engine.npz")
+        a = StreamingAnomalyEngine(
+            params, cfg, batch=3, window=T, carry_state=True
+        )
+        a.push(x)                              # window 1: state now carried
+        a.save_snapshot(path)
+        b = StreamingAnomalyEngine(
+            params, cfg, batch=3, window=T, carry_state=True
+        )
+        b.restore(path)
+        w2 = x[:, ::-1].copy()
+        (sa,) = a.push(w2)
+        (sb,) = b.push(w2)
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+    def test_fingerprint_gates_batch_and_carry(self, small, tmp_path):
+        from repro.serve.health import SnapshotMismatchError
+
+        params, cfg, x = small
+        path = str(tmp_path / "engine.npz")
+        StreamingAnomalyEngine(params, cfg, batch=3, window=T).save_snapshot(
+            path
+        )
+        wrong_batch = StreamingAnomalyEngine(params, cfg, batch=2, window=T)
+        with pytest.raises(SnapshotMismatchError, match="batch"):
+            wrong_batch.restore(path)
+        wrong_carry = StreamingAnomalyEngine(
+            params, cfg, batch=3, window=T, carry_state=True
+        )
+        with pytest.raises(SnapshotMismatchError, match="carry_state"):
+            wrong_carry.restore(path)
+
+    def test_pool_roundtrip_with_partial_windows(self, small, tmp_path):
+        params, cfg, x = small
+        path = str(tmp_path / "engine.npz")
+        a = StreamingAnomalyEngine(params, cfg, batch=1)
+        a.push_many(["u", "v"], np.stack([x[0, :5], x[1, :5]]))
+        a.save_snapshot(path)
+        b = StreamingAnomalyEngine(params, cfg, batch=1)
+        b.restore(path)
+        assert sorted(b.stream_ids) == ["u", "v"]
+        tail = np.stack([x[0, 5:T], x[1, 5:T]])
+        ra = a.push_many(["u", "v"], tail)
+        rb = b.push_many(["u", "v"], tail)
+        for sid in ("u", "v"):
+            assert len(ra[sid]) == len(rb[sid]) == 1
+            np.testing.assert_array_equal(
+                np.asarray(ra[sid][0]), np.asarray(rb[sid][0])
+            )

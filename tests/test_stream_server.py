@@ -495,6 +495,44 @@ class TestManualScheduling:
         srv.submit("a", np.zeros((1, 4, 1), np.float32))  # push shape ok
         assert srv.pending == 1
 
+    def test_submit_errors_name_the_stream_and_shape(self):
+        """Satellite fix: a bad chunk fails in the producer's own submit
+        call with the stream and offending shape/dtype named — not as an
+        opaque jit error from inside a coalesced batch."""
+        srv = StreamServer(_engine())
+        with pytest.raises(ValueError, match=r"stream 'det-7'.*\(3, 9\)"):
+            srv.submit("det-7", np.zeros((3, 9), np.float32))
+        with pytest.raises(ValueError, match=r"stream 'det-7'.*complex64"):
+            srv.submit("det-7", np.zeros((4, 1), np.complex64))
+        with pytest.raises(ValueError, match=r"stream 'det-7'.*<U1"):
+            srv.submit("det-7", np.array([["x"]]))
+        # integer chunks are fine (upcast by the engine like any numeric)
+        srv.submit("det-7", np.zeros((4, 1), np.int32))
+        assert srv.pending == 1
+
+    def test_throwing_callback_counted_not_fatal_manual(self):
+        """Satellite fix: a raising on_score callback is counted + logged;
+        the tick completes and later windows still deliver."""
+        boom = {"n": 0}
+
+        def cb(sid, score):
+            boom["n"] += 1
+            raise RuntimeError("user bug")
+
+        eng = _engine()
+        srv = StreamServer(eng, on_score=cb)
+        T = eng.window
+        x = np.random.RandomState(3).randn(1, 2 * T, 1).astype(np.float32)
+        srv.submit("a", x[0, :T])
+        srv.drain()  # callback raises inside this tick
+        assert boom["n"] == 1
+        assert srv.stats.callback_errors == 1
+        srv.submit("a", x[0, T:])
+        srv.drain()
+        assert boom["n"] == 2  # still delivering after the raise
+        assert srv.stats.callback_errors == 2
+        assert srv.stats.windows_scored == 2
+
     def test_latency_histogram_records_per_chunk(self):
         clock = FakeClock()
         eng = _engine()
