@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve test-quant test-exec test-step test-server test-chaos bench-kernels bench-stream bench-quant bench-exec bench-step bench-server bench
+.PHONY: test test-fast test-serve test-quant test-exec test-step test-server test-chaos test-autotune tune bench-kernels bench-stream bench-quant bench-exec bench-step bench-server bench-autotune bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -40,6 +40,17 @@ test-server:
 test-chaos:
 	$(PYTHON) -m pytest -x -q tests/test_chaos.py
 
+# the autotune subsystem (knob spaces, tuned-plan cache, cached planning,
+# sweep harness, roofline model, HLO custom-call costs)
+test-autotune:
+	$(PYTHON) -m pytest -x -q tests/test_autotune.py
+
+# measure the standard smoke grid on THIS machine and populate the
+# tuned-plan cache (runs/autotune/tuned.json) that `--tune cached` serving
+# reads; run on the hardware you serve on
+tune:
+	$(PYTHON) -m repro.launch.tune --smoke
+
 # kernel + pipeline + streaming-serve rows, with the machine-readable artifact
 bench-kernels:
 	$(PYTHON) -m benchmarks.run --only kernels_bench,pipeline_balance,stream --json BENCH_kernels.json
@@ -67,6 +78,14 @@ bench-step:
 # p50/p99 under load, scheduler bit-equality gate) merged into the artifact
 bench-server:
 	$(PYTHON) -m benchmarks.run --only server --json BENCH_kernels.json --merge
+
+# autotune.* rows (smoke sweep best-vs-default hard gate >= 1.0x, roofline
+# model-gated predicted-vs-measured rows) merged into the artifact.  CI
+# runs this BEFORE bench-kernels (which rewrites BENCH_kernels.json), so
+# it redirects to its own artifact with AUTOTUNE_JSON=BENCH_autotune.json.
+AUTOTUNE_JSON ?= BENCH_kernels.json
+bench-autotune:
+	$(PYTHON) -m benchmarks.run --only autotune --json $(AUTOTUNE_JSON) --merge
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

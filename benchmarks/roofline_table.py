@@ -14,27 +14,50 @@ resident on TPU — counted once as the middle estimate); temp is adjusted by
 removing the CPU-backend bf16->f32 convert shadows that do not exist on TPU.
 MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (prefill/decode).
 
-Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI —
+carried by ``repro.autotune.model.TPU_V5E``; the three time terms are
+computed by ``roofline_terms_from_counts`` (one implementation shared with
+the autotuner's fitted perf model), this module only assembles the byte
+counts and the table.
 """
 
 from __future__ import annotations
 
 import glob
 import json
+import os
 from pathlib import Path
 
-PEAK = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+from repro.autotune.model import TPU_V5E, roofline_terms_from_counts
 
-HBM_PER_CHIP = 16 * 2**30  # v5e
+# legacy aliases — the datasheet constants live on the HardwareModel now
+PEAK = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+LINK_BW = TPU_V5E.link_bw
+
+HBM_PER_CHIP = TPU_V5E.hbm_bytes
+
+#: model's bound names -> this table's historical column vocabulary
+_BOUND_NAMES = {"compute": "compute", "hbm": "memory", "link": "collective"}
 
 
 def load_cells(run_dir: str = "runs/dryrun") -> list[dict]:
-    out = []
-    for f in sorted(glob.glob(f"{run_dir}/*.json")):
-        out.append(json.loads(Path(f).read_text()))
-    return out
+    """Parsed dry-run cells.  A missing or empty run dir raises — an empty
+    table looks exactly like a healthy all-skipped run, so silence here
+    has previously hidden a wrong --run-dir for a whole CI cycle."""
+    if not os.path.isdir(run_dir):
+        raise FileNotFoundError(
+            f"roofline run dir {run_dir!r} does not exist; generate cells "
+            "with the dry-run driver (see EXPERIMENTS.md) or pass the "
+            "directory that holds them"
+        )
+    files = sorted(glob.glob(f"{run_dir}/*.json"))
+    if not files:
+        raise FileNotFoundError(
+            f"roofline run dir {run_dir!r} contains no *.json cells; an "
+            "empty table would render as success — refusing"
+        )
+    return [json.loads(Path(f).read_text()) for f in files]
 
 
 def roofline_terms(rec: dict, shape_meta: dict) -> dict | None:
@@ -50,10 +73,13 @@ def roofline_terms(rec: dict, shape_meta: dict) -> dict | None:
     temp_adj = max(raw_temp - artifact, 0)
     hbm_bytes = (mem["argument_bytes"] or 0) + (mem["output_bytes"] or 0) + temp_adj
     coll = sum(rec.get("collective_bytes", {}).values())
-    t_c = rec["hlo_dot_flops"] / PEAK
-    t_m = hbm_bytes / HBM_BW
-    t_l = coll / LINK_BW
-    dominant = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))[1]
+    terms = roofline_terms_from_counts(
+        rec["hlo_dot_flops"], hbm_bytes, coll, hw=TPU_V5E
+    )
+    t_c = terms["t_compute_us"] * 1e-6
+    t_m = terms["t_hbm_us"] * 1e-6
+    t_l = terms["t_link_us"] * 1e-6
+    dominant = _BOUND_NAMES[terms["bound"]]
     # model flops (global)
     kind = shape_meta["kind"]
     bsz, seq = shape_meta["global_batch"], shape_meta["seq_len"]

@@ -19,6 +19,12 @@ import sys
 #: ok-flag fields in derived strings (gated rows) must parse as booleans
 _OK_FLAG = re.compile(r"(?:^|\|)ok=([^|]*)")
 
+#: model-gated rows (``gate=model``) must carry the full predicted/measured
+#: pair and the stated margin — a gate whose prediction is missing from the
+#: artifact cannot be audited after the fact
+_GATE_MODEL = re.compile(r"(?:^|\|)gate=model(?:\||$)")
+_MODEL_FIELDS = ("predicted=", "measured=", "margin=")
+
 
 def validate_rows(module: str, rows) -> list[tuple]:
     """Minimal row-schema gate applied to every benchmark module's output
@@ -66,6 +72,15 @@ def validate_rows(module: str, rows) -> list[tuple]:
                 f"benchmark {module!r} gated row {name!r} has non-boolean "
                 f"ok-flag {m.group(1)!r} (must be 0 or 1)"
             )
+        if _GATE_MODEL.search(derived):
+            missing = [f for f in _MODEL_FIELDS if f not in derived]
+            if missing:
+                raise ValueError(
+                    f"benchmark {module!r} model-gated row {name!r} is "
+                    f"missing required field(s) {missing} — gate=model rows "
+                    "must state the predicted/measured pair and the margin "
+                    "they were judged against"
+                )
         out.append((name, float(us), derived))
     return out
 
@@ -91,6 +106,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        autotune_bench,
         exec_bench,
         fig8,
         fig10,
@@ -119,6 +135,7 @@ def main() -> None:
         "exec": exec_bench.run,
         "step": step_bench.run,
         "server": server_bench.run,
+        "autotune": autotune_bench.run,
         "roofline_table": lambda: roofline_table.run(args.rundir),
     }
     if args.only:

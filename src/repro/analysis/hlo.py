@@ -43,6 +43,12 @@ _COLLECTIVES = (
     "collective-permute",
 )
 
+#: SPMD-partitioner bookkeeping custom-calls: sharding annotations, not
+#: kernels — they move no bytes on the device and must not be costed
+_PARTITIONER_CUSTOM_CALLS = frozenset(
+    {"Sharding", "SPMDFullToShardShape", "SPMDShardToFullShape"}
+)
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
@@ -55,6 +61,28 @@ def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
             continue
         shape = tuple(int(x) for x in dims.split(",") if x) if dims else ()
         out.append((dt, shape))
+    return out
+
+
+def _split_operands(s: str) -> list[str]:
+    """Split an HLO operand list on top-level commas (shape dims and layout
+    annotations carry commas inside []/{} — those stay intact)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            tok = "".join(cur).strip()
+            if tok:
+                out.append(tok)
+            cur = []
+        else:
+            cur.append(ch)
+    tok = "".join(cur).strip()
+    if tok:
+        out.append(tok)
     return out
 
 
@@ -77,6 +105,17 @@ class HloAnalysis:
     #: natively, so these buffers do not exist on the target hardware —
     #: memory reports subtract them as "CPU-lowering artifact".
     convert_artifact_bytes: float = 0.0
+    #: custom-call accounting: XLA's cost model treats a custom-call (how a
+    #: compiled Pallas kernel appears in HLO) as a black box — zero FLOPs,
+    #: zero bytes.  We rebuild a floor from the instruction's *interface*:
+    #: bytes = operand buffers + result buffers (the kernel must at least
+    #: stream its arguments through HBM), FLOPs = 2 x result elements (one
+    #: multiply-add per output — a deliberate lower bound; the true count
+    #: needs kernel knowledge the HLO no longer carries).  Both honour the
+    #: while-trip multipliers, so a scanned kernel counts per trip.
+    custom_call_bytes: float = 0.0
+    custom_call_flops: float = 0.0
+    custom_call_count: int = 0
 
     @property
     def total_collective_bytes(self) -> float:
@@ -241,6 +280,43 @@ def analyze_hlo(text: str) -> HloAnalysis:
                 seen_artifacts.add(m.group(1))
                 out.convert_artifact_bytes += nbytes
 
+    # ---- custom-calls (Pallas kernels post-compile) -----------------------
+    ccall_re = re.compile(r"%?[\w\.\-]+\s*=\s*" + _TYPE + r"\s+custom-call\(")
+    target_re = re.compile(r'custom_call_target="([^"]+)"')
+    for cname, lines in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if m_c == 0.0:
+            continue
+        for line in lines:
+            cm = ccall_re.match(line)
+            if not cm:
+                continue
+            tm = target_re.search(line)
+            target = tm.group(1) if tm else ""
+            if target in _PARTITIONER_CUSTOM_CALLS:
+                continue  # SPMD bookkeeping ops move no real bytes
+            res_type = cm.group(1)
+            res_shapes = _parse_shapes(res_type)
+            res_elems = sum(
+                math.prod(shape) if shape else 1 for _, shape in res_shapes
+            )
+            nbytes = _nbytes(res_type)
+            # operand region: between "custom-call(" and the attribute list
+            tail = line[cm.end():]
+            cut = tail.find("custom_call_target=")
+            operands = tail[:cut] if cut >= 0 else tail
+            operands = operands.rstrip().rstrip(",").rstrip()
+            if operands.endswith(")"):
+                operands = operands[:-1]
+            for tok in _split_operands(operands):
+                if _parse_shapes(tok):  # typed operand printer
+                    nbytes += _nbytes(tok)
+                elif tok.startswith("%"):  # bare operand: symbol table
+                    nbytes += _nbytes(sym.get((cname, tok[1:]), ""))
+            out.custom_call_bytes += m_c * nbytes
+            out.custom_call_flops += m_c * 2.0 * res_elems
+            out.custom_call_count += 1
+
     # ---- collectives ------------------------------------------------------------
     coll_re = re.compile(r"%?[\w\.\-]+\s*=\s*" + _TYPE + r"\s+([\w\-]+)\(")
     for cname, lines in comps.items():
@@ -286,3 +362,40 @@ def cost_analysis_dict(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost or {}
+
+
+def compiled_costs(compiled) -> dict:
+    """Best-available FLOP/byte totals for a compiled executable.
+
+    Combines the three accounting sources this module knows about, each
+    covering a hole in the others:
+
+    * ``cost_analysis()`` — XLA's own totals: right for straight-line
+      element-wise/dot code, wrong under ``while`` (visits the body once)
+      and blind to custom-calls;
+    * ``dot_flops`` — this module's scan-aware dot walk: takes over
+      whenever it exceeds the XLA number (i.e. the program scans);
+    * ``custom_call_bytes``/``custom_call_flops`` — interface-derived
+      floors for compiled Pallas kernels, which both of the above count
+      as zero.
+
+    Returns a plain dict (the autotuner's roofline fit consumes it):
+    ``flops`` = max(xla, dot walk) + custom-call floor, ``bytes`` =
+    XLA bytes-accessed + custom-call floor, plus the raw components for
+    reporting.
+    """
+    cost = cost_analysis_dict(compiled)
+    hlo = analyze_hlo(compiled.as_text())
+    xla_flops = float(cost.get("flops", 0.0) or 0.0)
+    xla_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    return {
+        "flops": max(xla_flops, hlo.dot_flops) + hlo.custom_call_flops,
+        "bytes": xla_bytes + hlo.custom_call_bytes,
+        "xla_flops": xla_flops,
+        "xla_bytes": xla_bytes,
+        "dot_flops": hlo.dot_flops,
+        "custom_call_flops": hlo.custom_call_flops,
+        "custom_call_bytes": hlo.custom_call_bytes,
+        "custom_call_count": hlo.custom_call_count,
+        "collective_bytes": hlo.total_collective_bytes,
+    }

@@ -1,0 +1,56 @@
+"""Empirical-roofline autotuner: measure the knob grid, fit a perf model,
+cache the winners, gate CI on predictions.
+
+The paper's whole method is a design-space search: per-layer reuse factors
+are chosen so *measured* initiation intervals balance against a resource
+model (Sec. IV).  The TPU reproduction's analogous knobs — ``chunk_len``,
+``fuse_gates``, ``block_b``, ``n_chunks``, ``weight_dtype`` — were
+hand-set defaults until this subsystem.  The flow mirrors the paper's:
+
+    space.py   per-backend knob grids, legality pulled from the
+               ``core.backends`` capability table (the sweep can never
+               propose a plan ``plan_stack`` would reject)
+    sweep.py   measured min-of-k timing of the grid per (geometry, batch,
+               dtype, backend) on the real device, emitted as JSONL
+    model.py   analytic roofline fit over those records (FLOPs/bytes from
+               ``analysis.hlo.compiled_costs``), reporting
+               predicted-vs-measured error per configuration
+    cache.py   versioned tuned-config store keyed by (geometry, backend,
+               dtype, device fingerprint); ``plan_stack(tune="cached")``
+               consults it so ``StackPlan`` resolves tuned knobs instead
+               of ``DEFAULT_CHUNK_LEN``-style constants
+
+``python -m repro.launch.tune`` runs a sweep and populates the cache;
+``benchmarks/autotune_bench.py`` turns best-vs-default speedup and model
+fit error into gated BENCH rows.
+"""
+
+from .cache import (  # noqa: F401
+    CACHE_VERSION,
+    TunedPlanCache,
+    canonical_weight_dtype,
+    device_fingerprint,
+    get_cache,
+    lookup_tuned,
+    set_cache,
+)
+from .model import (  # noqa: F401
+    HardwareModel,
+    RooflineFit,
+    TPU_V5E,
+    attach_costs,
+    config_costs,
+    fit_roofline,
+    predict_pack_bytes,
+    roofline_terms_from_counts,
+)
+from .space import KnobPoint, knob_space  # noqa: F401
+from .sweep import (  # noqa: F401
+    SweepCase,
+    best_record,
+    default_record,
+    read_jsonl,
+    run_sweep,
+    sweep_case,
+    write_jsonl,
+)

@@ -1,0 +1,265 @@
+"""Analytic roofline model fitted against measured sweep records.
+
+The paper sizes its design against a resource model (DSPs, BRAM, II) and
+checks the model against measured latency; our analogue is the classic
+roofline:
+
+    t(config) = c0 + sec_per_flop * FLOPs + sec_per_byte * bytes
+
+with FLOP/byte counts extracted from the *compiled* program
+(``analysis.hlo.compiled_costs`` — scan-aware dot walk + custom-call
+interface floors, so Pallas kernels are not counted as zero) and the
+three coefficients fitted by non-negative least squares over measured
+sweep records.  The fit reports predicted-vs-measured relative error per
+record — that error is itself a gated bench row, so a model that drifts
+from reality fails CI rather than silently mis-gating.
+
+``HardwareModel`` carries the datasheet constants (TPU v5e defaults);
+``roofline_terms_from_counts`` turns raw counts into per-resource time
+floors for the roofline table; ``predict_pack_bytes`` is the exact
+closed-form pack size the quant bench gates against.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# hardware constants
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """Datasheet constants of one accelerator (per chip)."""
+
+    name: str
+    peak_flops: float          # FLOP/s (dense, compute dtype)
+    hbm_bw: float              # B/s HBM streaming
+    link_bw: float             # B/s per inter-chip link direction
+    hbm_bytes: int = 16 * 2**30
+
+
+TPU_V5E = HardwareModel(
+    name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+)
+
+
+def roofline_terms_from_counts(flops: float, hbm_bytes: float,
+                               link_bytes: float = 0.0, *,
+                               hw: HardwareModel = TPU_V5E) -> dict:
+    """Per-resource time floors (microseconds) + the binding resource.
+
+    The classic roofline argument: each resource imposes an independent
+    lower bound, the achievable latency is their max.  This is the one
+    place counts become times — ``benchmarks/roofline_table.py`` routes
+    through here instead of keeping its own arithmetic.
+    """
+    t_compute = flops / hw.peak_flops * 1e6
+    t_hbm = hbm_bytes / hw.hbm_bw * 1e6
+    t_link = link_bytes / hw.link_bw * 1e6
+    terms = {"compute": t_compute, "hbm": t_hbm, "link": t_link}
+    bound = max(terms, key=terms.get)
+    return {
+        "t_compute_us": t_compute,
+        "t_hbm_us": t_hbm,
+        "t_link_us": t_link,
+        "t_bound_us": terms[bound],
+        "bound": bound,
+    }
+
+
+# ---------------------------------------------------------------------------
+# FLOP/byte extraction for a plan (compile, then read the program)
+# ---------------------------------------------------------------------------
+
+def config_costs(cfgs: Sequence, impl: str, *, batch: int = 8,
+                 t_len: int = 8, weight_dtype: str | None = None,
+                 knobs: dict | None = None, seed: int = 0) -> dict:
+    """FLOP/byte counts of the serving-shaped call for one configuration.
+
+    Builds the same callable the sweep times (the executor's step for
+    stateful backends, the forward otherwise), compiles it, and reads
+    ``analysis.hlo.compiled_costs`` off the executable — so the model is
+    fitted against exactly the program that was measured, not a
+    paper-napkin recount of it.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.hlo import compiled_costs
+    from repro.core.executor import plan_stack
+    from repro.core.lstm import init_lstm
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(cfgs) + 1)
+    params = [init_lstm(k, c) for k, c in zip(keys, cfgs)]
+    plan = plan_stack(cfgs, impl=impl, weight_dtype=weight_dtype,
+                      **(knobs or {}))
+    ex = plan.bind(params)
+    xs = jax.random.normal(
+        keys[-1], (batch, t_len, cfgs[0].in_dim), jnp.float32
+    )
+    if plan.backend.stateful:
+        state = ex.zero_state(batch)
+        compiled = jax.jit(
+            lambda x, s: ex.step(x, s)
+        ).lower(xs, state).compile()
+    else:
+        compiled = jax.jit(
+            lambda x: ex(x, return_state=False)
+        ).lower(xs).compile()
+    return compiled_costs(compiled)
+
+
+def attach_costs(records: Sequence[dict]) -> list[dict]:
+    """Attach ``costs`` (flops/bytes of the measured program) to sweep
+    records, compiling once per distinct (case, knobs) — records that
+    share a program share the compile."""
+    from repro.core.lstm import LstmConfig
+
+    memo: dict[tuple, dict] = {}
+    out = []
+    for rec in records:
+        knobs = rec.get("knobs") or {}
+        key = (
+            tuple(tuple(d) for d in rec["dims"]), rec["impl"],
+            rec.get("weight_dtype"), rec["batch"], rec["t_len"],
+            tuple(sorted(knobs.items())),
+        )
+        if key not in memo:
+            cfgs = [LstmConfig(in_dim=a, hidden=b) for a, b in rec["dims"]]
+            memo[key] = config_costs(
+                cfgs, rec["impl"], batch=rec["batch"], t_len=rec["t_len"],
+                weight_dtype=rec.get("weight_dtype"), knobs=knobs,
+            )
+        out.append({**rec, "costs": dict(memo[key])})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the fit
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RooflineFit:
+    """Fitted coefficients + the fit's own report card.
+
+    ``sec_per_flop``/``sec_per_byte`` are the fitted *achieved* rates
+    (their reciprocals are the effective FLOP/s and B/s this machine
+    actually delivered on these programs); ``c0`` absorbs dispatch and
+    launch overhead.  All three are constrained non-negative — a negative
+    rate is a fit artifact, never physics.
+    """
+
+    c0: float
+    sec_per_flop: float
+    sec_per_byte: float
+    n_records: int
+    median_rel_err: float
+    max_rel_err: float
+    #: per-record (case, point, predicted_us, measured_us, rel_err)
+    per_record: tuple = ()
+
+    def predict_us(self, flops: float, nbytes: float) -> float:
+        return (
+            self.c0 + self.sec_per_flop * flops + self.sec_per_byte * nbytes
+        ) * 1e6
+
+    def describe(self) -> str:
+        eff_flops = 1.0 / self.sec_per_flop if self.sec_per_flop else float("inf")
+        eff_bw = 1.0 / self.sec_per_byte if self.sec_per_byte else float("inf")
+        return (
+            f"roofline fit over {self.n_records} records: "
+            f"c0={self.c0 * 1e6:.1f}us "
+            f"eff_compute={eff_flops / 1e9:.2f}GFLOP/s "
+            f"eff_bw={eff_bw / 1e9:.2f}GB/s "
+            f"rel_err median={self.median_rel_err:.3f} "
+            f"max={self.max_rel_err:.3f}"
+        )
+
+
+def _nnls(A: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Tiny active-set non-negative least squares (3 columns — no scipy
+    in the image).  Solve unconstrained, clamp negative coefficients to
+    zero, re-solve over the surviving columns until all are >= 0."""
+    active = list(range(A.shape[1]))
+    x = np.zeros(A.shape[1])
+    for _ in range(A.shape[1] + 1):
+        if not active:
+            break
+        sol, *_ = np.linalg.lstsq(A[:, active], y, rcond=None)
+        if np.all(sol >= -1e-18):
+            x[:] = 0.0
+            x[active] = np.maximum(sol, 0.0)
+            return x
+        active = [c for c, v in zip(active, sol) if v > 0]
+    x[:] = 0.0
+    if active:
+        sol, *_ = np.linalg.lstsq(A[:, active], y, rcond=None)
+        x[active] = np.maximum(sol, 0.0)
+    return x
+
+
+def fit_roofline(records: Sequence[dict]) -> RooflineFit:
+    """Fit t = c0 + sec_per_flop * flops + sec_per_byte * bytes over
+    measured records (each needs ``us`` and ``costs`` — run
+    ``attach_costs`` first).  Rows are weighted by 1/measured so fast and
+    slow cases contribute comparable *relative* residuals."""
+    rows = [r for r in records if r.get("costs") and r.get("us")]
+    if not rows:
+        raise ValueError(
+            "no records with both timing and costs; run attach_costs on "
+            "the sweep output first"
+        )
+    secs = np.array([r["us"] * 1e-6 for r in rows])
+    A = np.array([
+        [1.0, r["costs"]["flops"], r["costs"]["bytes"]] for r in rows
+    ])
+    w = 1.0 / secs  # relative-error weighting
+    coef = _nnls(A * w[:, None], secs * w)
+    pred = A @ coef
+    rel = np.abs(pred - secs) / np.maximum(secs, 1e-12)
+    per_record = tuple(
+        (r.get("case", ""), r.get("point", ""), float(p * 1e6),
+         float(r["us"]), float(e))
+        for r, p, e in zip(rows, pred, rel)
+    )
+    return RooflineFit(
+        c0=float(coef[0]), sec_per_flop=float(coef[1]),
+        sec_per_byte=float(coef[2]), n_records=len(rows),
+        median_rel_err=float(np.median(rel)), max_rel_err=float(np.max(rel)),
+        per_record=per_record,
+    )
+
+
+# ---------------------------------------------------------------------------
+# closed-form pack size (the quant bench's model gate)
+# ---------------------------------------------------------------------------
+
+def predict_pack_bytes(cfgs: Sequence, weight_dtype: str | None = None) -> int:
+    """Exact bytes a ``PackedStack`` of these configs occupies.
+
+    Mirrors the pack layout analytically: ``w_x``/``w_h`` are
+    ``(L, W, 4W)`` at the storage dtype, the bias is ``(L, 4W)`` fp32
+    always (paper Sec. IV-A keeps biases 32-bit), int8 packs add
+    ``(L, 2, 4)`` fp32 per-gate dequant scales.  ``W`` is the kernel's
+    pack width (lane-rounded on TPU, exact on CPU) — taken from the same
+    ``_pack_width`` the kernels use, so this prediction tracks layout
+    changes instead of drifting from them.
+    """
+    from repro.kernels.lstm_stack.ops import _pack_width, resolve_weight_dtype
+
+    if not cfgs:
+        return 0
+    wd = resolve_weight_dtype(cfgs[0], override=weight_dtype)
+    itemsize = {"fp32": 4, "bf16": 2, "int8": 1}[wd]
+    n_layers = len(cfgs)
+    width = _pack_width(cfgs)
+    total = 2 * n_layers * width * 4 * width * itemsize  # w_x + w_h
+    total += n_layers * 4 * width * 4                    # fp32 bias
+    if wd == "int8":
+        total += n_layers * 2 * 4 * 4                    # (L, 2, 4) scales
+    return total

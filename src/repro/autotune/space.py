@@ -1,0 +1,140 @@
+"""Per-backend knob grids, legality pulled from the backend capability table.
+
+The paper's design space is per-layer reuse factors; ours is the plan-time
+knob tuple ``(chunk_len, block_b, fuse_gates, n_chunks)``.  This module is
+the *only* place sweep candidates are generated, and it generates them from
+``core.backends.BackendSpec.knobs`` — a backend that does not declare a
+knob never sees grid points for it, so the sweep cannot propose a plan
+``plan_stack`` would reject:
+
+* ``chunk_len``  — chunked-step backends only, capped by the step kernel's
+  ``MAX_STEP_UNROLL`` sequential-cell ceiling per layer count;
+* ``block_b``    — packing backends' batch tile; candidates are sublane
+  multiples no larger than the padded batch (bigger blocks only add pad);
+* ``fuse_gates`` — the step kernel's single ``[x;h] @ [W_x;W_h]`` gate
+  matmul; never proposed ``True`` for int8 packs (``s_x``/``s_h`` scale
+  two different accumulators — the kernel refuses the combination);
+* ``n_chunks``   — wavefront hand-off granularity; only divisors of the
+  case's chunk count are legal.
+
+``None`` on any axis means "the hand-set default" — every grid therefore
+contains the all-``None`` default point, which is what makes the
+``autotune.best_vs_default`` rows >= 1.0 by construction.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, fields
+from typing import Any, Sequence
+
+from repro.core.backends import get_backend
+
+
+@dataclass(frozen=True)
+class KnobPoint:
+    """One assignment of the tunable plan knobs; ``None`` = hand-set default."""
+
+    chunk_len: int | None = None
+    block_b: int | None = None
+    fuse_gates: bool | None = None
+    n_chunks: int | None = None
+
+    def overrides(self) -> dict[str, Any]:
+        """The non-default knobs, as ``plan_stack`` keyword arguments."""
+        return {
+            f.name: getattr(self, f.name)
+            for f in fields(self) if getattr(self, f.name) is not None
+        }
+
+    @property
+    def is_default(self) -> bool:
+        return not self.overrides()
+
+    def describe(self) -> str:
+        ov = self.overrides()
+        return ",".join(f"{k}={v}" for k, v in sorted(ov.items())) or "default"
+
+
+DEFAULT_POINT = KnobPoint()
+
+
+def _chunk_len_axis(n_layers: int) -> list[int | None]:
+    from repro.kernels.lstm_stack.step import MAX_STEP_UNROLL
+
+    ceil = max(1, MAX_STEP_UNROLL // max(1, n_layers))
+    vals = sorted({v for v in (4, 8, 16, 32, 64) if v <= ceil})
+    return [None] + vals
+
+
+def _block_b_axis(batch: int) -> list[int | None]:
+    from repro.kernels.lstm_scan.ops import SUBLANES, _round_up
+
+    batch_p = _round_up(max(batch, 1), SUBLANES)
+    vals = sorted({b for b in (8, 16, 32, 64, 128, 256) if b <= batch_p})
+    return [None] + vals
+
+
+def _n_chunks_axis(t_len: int | None) -> list[int | None]:
+    if t_len is None:
+        return [None]
+    vals = [n for n in (1, 2, 4) if n > 1 and t_len % n == 0]
+    return [None] + vals
+
+
+def knob_space(cfgs: Sequence, impl: str, *,
+               weight_dtype: str | None = None, batch: int = 8,
+               t_len: int | None = None,
+               max_points: int | None = None) -> list[KnobPoint]:
+    """Every legal knob assignment for (geometry, backend, dtype, batch).
+
+    ``max_points`` thins the grid deterministically (the default point is
+    always kept, the rest evenly strided) so CI smoke sweeps stay bounded
+    while the tune CLI can run the full grid.
+    """
+    spec = get_backend(impl)
+    wd = weight_dtype
+    if wd is None and cfgs:
+        wd = getattr(cfgs[0], "weight_dtype", None)
+
+    axes: dict[str, list] = {}
+    if "chunk_len" in spec.knobs:
+        axes["chunk_len"] = _chunk_len_axis(len(cfgs))
+    if "block_b" in spec.knobs:
+        axes["block_b"] = _block_b_axis(batch)
+    if "fuse_gates" in spec.knobs:
+        # int8 packs refuse fused gates (two accumulators, two scales);
+        # propose only the explicit-separate and default spellings there
+        axes["fuse_gates"] = [None, False] if wd == "int8" else [None, False, True]
+    if "n_chunks" in spec.knobs:
+        axes["n_chunks"] = _n_chunks_axis(t_len)
+
+    if not axes:
+        return [DEFAULT_POINT]
+    names = list(axes)
+    points = [
+        KnobPoint(**dict(zip(names, combo)))
+        for combo in itertools.product(*(axes[n] for n in names))
+    ]
+    # default point first (itertools.product with None-first axes puts it
+    # there already, but make the contract explicit)
+    points.sort(key=lambda p: not p.is_default)
+    if max_points is not None and len(points) > max_points:
+        rest = points[1:]
+        stride = max(1, -(-len(rest) // max(1, max_points - 1)))
+        points = [points[0]] + rest[::stride][: max_points - 1]
+    return points
+
+
+def check_legal(cfgs: Sequence, impl: str, point: KnobPoint, *,
+                weight_dtype: str | None = None) -> None:
+    """Resolve the point through ``plan_stack`` — raises iff illegal.
+
+    The space generator is supposed to make this unreachable for its own
+    output (regression-tested); it exists for hand-written points (the
+    tune CLI's ``--pin``) and as the test oracle.
+    """
+    from repro.core.executor import plan_stack
+
+    plan_stack(cfgs, impl=impl, weight_dtype=weight_dtype,
+               **point.overrides())

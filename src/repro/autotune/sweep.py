@@ -1,0 +1,215 @@
+"""Measured knob sweeps: time the grid, keep the receipts.
+
+The paper tunes reuse factors against *measured* initiation intervals —
+the resource model proposes, the measurement disposes (Sec. IV).  Same
+discipline here: ``space.knob_space`` proposes every legal knob
+assignment for a case, this module times each one min-of-k on the real
+device through the exact call surface serving uses (``StackExecutor``'s
+jitted step for stateful backends, the jitted forward otherwise), and
+emits plain-dict records that round-trip through JSONL.
+
+Three invariants the rest of the subsystem leans on:
+
+* every sweep contains the all-default point (``space`` puts it first),
+  so ``best_record(records).us <= default_record(records).us`` — the
+  bench's ``autotune.best_vs_default`` rows are >= 1.0 by construction;
+* records carry the full case identity (dims, impl, weight dtype,
+  batch, T) so ``model.attach_costs`` can recompute FLOP/byte terms
+  from a record alone and ``cache.put`` can key an entry from the
+  winner without the sweep object;
+* timing is min-of-k over ``reps``-call batches with a compile warmup
+  excluded — min (not mean) because scheduling noise is one-sided.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import get_backend
+from repro.core.executor import plan_stack
+from repro.core.lstm import LstmConfig, init_lstm
+
+from .space import KnobPoint, knob_space
+
+
+@dataclass(frozen=True)
+class SweepCase:
+    """One (geometry, backend, dtype, batch, chunk length) sweep target."""
+
+    dims: tuple[tuple[int, int], ...]
+    impl: str = "fused_step"
+    batch: int = 8
+    t_len: int = 8
+    weight_dtype: str | None = None
+    tag: str = ""
+
+    def cfgs(self) -> list[LstmConfig]:
+        return [LstmConfig(in_dim=a, hidden=b) for a, b in self.dims]
+
+
+def sweep_case(dims: Sequence[Sequence[int]], impl: str = "fused_step", *,
+               batch: int = 8, t_len: int = 8,
+               weight_dtype: str | None = None,
+               tag: str | None = None) -> SweepCase:
+    """Build a ``SweepCase`` with a canonical tag (the bench row suffix)."""
+    dims_t = tuple((int(a), int(b)) for a, b in dims)
+    if tag is None:
+        geo = "-".join(str(b) for _, b in dims_t)
+        wd = f"_{weight_dtype}" if weight_dtype else ""
+        tag = f"{impl}_{geo}{wd}_b{batch}_t{t_len}"
+    return SweepCase(dims=dims_t, impl=impl, batch=batch, t_len=t_len,
+                     weight_dtype=weight_dtype, tag=tag)
+
+
+def _case_inputs(case: SweepCase, seed: int = 0):
+    """(cfgs, params, xs) for a case — deterministic per (case, seed)."""
+    cfgs = case.cfgs()
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(cfgs) + 1)
+    params = [init_lstm(k, c) for k, c in zip(keys, cfgs)]
+    xs = jax.random.normal(
+        keys[-1], (case.batch, case.t_len, case.dims[0][0]), jnp.float32
+    )
+    return cfgs, params, xs
+
+
+def _timed_callable(ex, xs) -> Callable[[], Any]:
+    """The serving-shaped call to time: jitted step for stateful backends
+    (state NOT donated — the same buffers are reused every rep), jitted
+    forward for the rest."""
+    if ex.plan.backend.stateful:
+        state = ex.zero_state(xs.shape[0])
+        fn = ex.step_jit(donate=False)
+        return lambda: fn(xs, state)
+    fwd = jax.jit(lambda x: ex(x, return_state=False))
+    return lambda: fwd(xs)
+
+
+def _min_of_k_us(run: Callable[[], Any], k: int, reps: int) -> float:
+    jax.block_until_ready(run())  # compile + first-touch, excluded
+    best = math.inf
+    for _ in range(max(1, k)):
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(max(1, reps)):
+            out = run()
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / max(1, reps))
+    return best * 1e6
+
+
+def measure_point(case: SweepCase, point: KnobPoint, *,
+                  k: int = 3, reps: int = 3, seed: int = 0) -> dict:
+    """Time one knob assignment; returns the JSONL-ready record dict."""
+    cfgs, params, xs = _case_inputs(case, seed)
+    plan = plan_stack(cfgs, impl=case.impl, weight_dtype=case.weight_dtype,
+                      **point.overrides())
+    ex = plan.bind(params)
+    us = _min_of_k_us(_timed_callable(ex, xs), k, reps)
+    return {
+        "case": case.tag,
+        "dims": [list(d) for d in case.dims],
+        "impl": case.impl,
+        "weight_dtype": case.weight_dtype,
+        "batch": case.batch,
+        "t_len": case.t_len,
+        "knobs": point.overrides(),
+        "point": point.describe(),
+        "us": us,
+        "k": k,
+        "reps": reps,
+    }
+
+
+def run_sweep(case: SweepCase, *, k: int = 3, reps: int = 3,
+              max_points: int | None = None, seed: int = 0,
+              progress: Callable[[dict], None] | None = None) -> list[dict]:
+    """Measure every (thinned) legal knob point of a case.
+
+    Returns the records in grid order — the default point is always
+    ``records[0]``.  ``progress`` (if given) sees each record as it
+    lands, so the tune CLI can stream results.
+    """
+    get_backend(case.impl)  # unknown impl fails before any timing
+    cfgs = case.cfgs()
+    points = knob_space(
+        cfgs, case.impl, weight_dtype=case.weight_dtype,
+        batch=case.batch, t_len=case.t_len, max_points=max_points,
+    )
+    records = []
+    for point in points:
+        rec = measure_point(case, point, k=k, reps=reps, seed=seed)
+        records.append(rec)
+        if progress is not None:
+            progress(rec)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# record selection + JSONL round-trip
+# ---------------------------------------------------------------------------
+
+def default_record(records: Sequence[dict]) -> dict:
+    """The all-default-knobs record — the baseline every ratio divides by."""
+    for rec in records:
+        if not rec.get("knobs"):
+            return rec
+    raise ValueError(
+        "sweep records contain no default (all-None knobs) point; the "
+        "space generator always emits it first — were the records filtered?"
+    )
+
+
+def best_record(records: Sequence[dict]) -> dict:
+    """The fastest record.  Ties break toward the default point (no reason
+    to cache a knob override that merely matches the baseline)."""
+    if not records:
+        raise ValueError("no sweep records")
+    return min(records, key=lambda r: (r["us"], bool(r.get("knobs"))))
+
+
+def write_jsonl(records: Sequence[dict], path: str) -> str:
+    """One JSON object per line; parent directories created."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as fh:
+        for rec in records:
+            fh.write(json.dumps(rec, sort_keys=True) + "\n")
+    return path
+
+
+def read_jsonl(path: str) -> list[dict]:
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+def smoke_cases() -> tuple[SweepCase, ...]:
+    """The standard small sweep grid shared by the CI bench
+    (``benchmarks/autotune_bench.py``) and ``launch/tune.py --smoke``:
+    GW-small-shaped and 32-wide stacks, chunked-step and whole-wavefront
+    backends, one int8-storage case — every knob axis appears at least
+    once, nothing takes more than seconds to time."""
+    return (
+        sweep_case([(1, 9), (9, 9)], "fused_step", batch=8, t_len=8),
+        sweep_case([(1, 9), (9, 9)], "fused_stack", batch=8, t_len=50),
+        sweep_case([(1, 32), (32, 32)], "fused_step", batch=8, t_len=8,
+                   weight_dtype="int8"),
+        sweep_case([(1, 32), (32, 32)], "fused_stack", batch=8, t_len=50),
+    )
+
+
+def case_from_record(rec: dict) -> SweepCase:
+    """Rebuild the case identity a record was measured under (model fit +
+    cache population work from JSONL files alone)."""
+    return sweep_case(
+        rec["dims"], rec["impl"], batch=rec["batch"], t_len=rec["t_len"],
+        weight_dtype=rec.get("weight_dtype"), tag=rec.get("case") or None,
+    )

@@ -119,7 +119,7 @@ def decoder_layers(params: Params, cfg: AutoencoderConfig):
 def _segment_executor(
     params: Params, cfg: AutoencoderConfig, segment: str,
     *, placement: str = "local", mesh: Any = None, impl: str | None = None,
-    chunk_len: int | None = None,
+    chunk_len: int | None = None, tune: str = "default",
 ):
     """Plan + bind ONE segment ("enc" | "dec") — encode/decode build only
     the executor they run, so a one-shot forward never packs the other
@@ -132,14 +132,15 @@ def _segment_executor(
     )
     impl = cfg.impl if impl is None else impl
     return plan_stack(
-        cfgs, impl=impl, placement=placement, mesh=mesh, chunk_len=chunk_len
+        cfgs, impl=impl, placement=placement, mesh=mesh,
+        chunk_len=chunk_len, tune=tune,
     ).bind(plist)
 
 
 def segment_executors(
     params: Params, cfg: AutoencoderConfig,
     *, placement: str = "local", mesh: Any = None, impl: str | None = None,
-    chunk_len: int | None = None,
+    chunk_len: int | None = None, tune: str = "default",
 ):
     """(encoder, decoder) ``StackExecutor``s for an autoencoder config.
 
@@ -150,7 +151,8 @@ def segment_executors(
     pass the executors through their jitted steps; one-shot callers get the
     same executors implicitly via ``encode``/``decode``.
     """
-    kw = dict(placement=placement, mesh=mesh, impl=impl, chunk_len=chunk_len)
+    kw = dict(placement=placement, mesh=mesh, impl=impl,
+              chunk_len=chunk_len, tune=tune)
     return (
         _segment_executor(params, cfg, "enc", **kw),
         _segment_executor(params, cfg, "dec", **kw),

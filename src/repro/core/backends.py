@@ -62,6 +62,13 @@ class BackendSpec:
     #: low-latency step kernel (one grid step, in-kernel layer-0 mvm_x),
     #: longer ones fall back to the wavefront kernel
     chunked_step: bool = False
+    #: plan-time knobs the autotuner may sweep for this backend — the
+    #: single source of sweep legality (``autotune.space`` builds grids
+    #: from this, ``plan_stack`` rejects explicit knobs outside it):
+    #: "chunk_len" (step-kernel threshold), "block_b" (batch tile of the
+    #: local packed kernels), "fuse_gates" (step kernel's single gate
+    #: matmul), "n_chunks" (wavefront hand-off granularity)
+    knobs: tuple[str, ...] = ()
     #: (executor, xs, state) -> (h_seq, finals | None); filled in by
     #: core.executor when it registers the implementations
     forward: Any = None

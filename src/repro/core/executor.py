@@ -91,10 +91,35 @@ class StackPlan:
     #: chunked-step backends only: chunks with T <= chunk_len run the
     #: low-latency step kernel instead of the wavefront kernel
     chunk_len: int | None = None
+    #: batch tile of the local packed kernels (None = choose_blocking's
+    #: hand-set default); a tuned value comes from the autotune cache
+    block_b: int | None = None
+    #: step kernel's single [x;h] @ [W_x;W_h] gate matmul (None = the
+    #: kernel's documented default: fused on compiled TPU, separate dots
+    #: in interpret mode and always for int8)
+    fuse_gates: bool | None = None
+    #: where each resolved knob came from ("explicit" | "tuned" |
+    #: "default") — provenance metadata for operators (--plan-only),
+    #: excluded from equality/hash so tuned and hand-set plans with equal
+    #: knob values share jit traces
+    knob_sources: tuple = dataclasses.field(default=(), compare=False)
 
     @property
     def backend(self) -> BackendSpec:
         return get_backend(self.impl)
+
+    def knob_provenance(self) -> dict[str, tuple[Any, str]]:
+        """{knob: (resolved value, source)} for the backend's tunable knobs.
+
+        The audit surface behind ``launch/serve.py --plan-only``: operators
+        see exactly which knobs a serving engine resolved from the tuned
+        cache versus the hand-set defaults.
+        """
+        sources = dict(self.knob_sources)
+        return {
+            k: (getattr(self, k), sources.get(k, "default"))
+            for k in self.backend.knobs
+        }
 
     @property
     def n_layers(self) -> int:
@@ -137,6 +162,10 @@ class StackPlan:
         """One-line human summary (the launch --plan-only smoke prints it)."""
         dims = "->".join(str(c.hidden) for c in self.cfgs) or "(identity)"
         step = f" chunk_len={self.chunk_len}" if self.chunk_len else ""
+        if self.block_b is not None:
+            step += f" block_b={self.block_b}"
+        if self.fuse_gates is not None:
+            step += f" fuse_gates={self.fuse_gates}"
         return (
             f"impl={self.impl} placement={self.placement} "
             f"layers={self.n_layers} [{dims}] "
@@ -156,7 +185,9 @@ def _default_stage_mesh(n_layers: int):
 def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
                        weight_dtype: str | None, placement: str,
                        mesh, n_chunks: int | None,
-                       chunk_len: int | None) -> StackPlan:
+                       chunk_len: int | None, block_b: int | None,
+                       fuse_gates: bool | None,
+                       knob_sources: tuple) -> StackPlan:
     get_backend(impl)  # raises for unknown impl, even on empty segments
     if placement not in ("local", "sharded"):
         raise ValueError(
@@ -164,6 +195,7 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
         )
     if not cfgs:  # empty segment (e.g. latent_boundary=0): identity plan
         return StackPlan(cfgs=(), impl=IDENTITY)
+    sources = dict(knob_sources)
 
     # -- placement normalization -------------------------------------------
     if impl == "fused_stack_sharded":
@@ -172,10 +204,15 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
         if impl in ("fused_stack", "fused_step", "fused_stack_sharded"):
             # the step specialization is single-host; sharded placement
             # degrades fused_step to the sharded wavefront (serving configs
-            # keep one impl default across placements) — and drops its
-            # chunk_len with it, like the rest of the step request
+            # keep one impl default across placements) — and drops the
+            # whole step-kernel knob bundle with it (chunk_len, fuse_gates,
+            # block_b), like the rest of the step request
             if impl == "fused_step":
                 chunk_len = None
+            fuse_gates = None
+            block_b = None
+            sources.update(chunk_len="default", fuse_gates="default",
+                           block_b="default")
             impl = "fused_stack_sharded"
         else:
             raise ValueError(
@@ -191,6 +228,27 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
             "placement='sharded' to place sub-stacks on mesh devices"
         )
     spec = get_backend(impl)
+
+    # -- tunable-knob legality (the capability table decides) ---------------
+    if block_b is not None:
+        if "block_b" not in spec.knobs:
+            raise ValueError(
+                f"block_b only applies to the local packed-kernel backends "
+                f"(those declaring it in BackendSpec.knobs); got "
+                f"impl={impl!r}"
+            )
+        if block_b < 1:
+            raise ValueError(f"block_b must be >= 1, got {block_b}")
+    if fuse_gates is not None and "fuse_gates" not in spec.knobs:
+        raise ValueError(
+            f"fuse_gates only applies to the chunked-step backend "
+            f"(impl='fused_step'); got impl={impl!r}"
+        )
+    if n_chunks is not None and "n_chunks" not in spec.knobs:
+        raise ValueError(
+            f"n_chunks only applies to wavefront-pipelined backends "
+            f"(impl='wavefront' or sharded placement); got impl={impl!r}"
+        )
 
     # -- step-chunk resolution ---------------------------------------------
     if chunk_len is not None and not spec.chunked_step:
@@ -236,6 +294,15 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
         resolved_wd = resolve_weight_dtype(cfgs[0])
     else:
         resolved_wd = None
+    if fuse_gates and resolved_wd == "int8":
+        # the step kernel would refuse this at call time; fail at plan time
+        # like every other impl-dependent legality rule
+        raise ValueError(
+            "fuse_gates=True is incompatible with int8 packs: s_x and s_h "
+            "scale two different fp32 accumulators, which a single fused "
+            "[x;h] contraction would mix; drop fuse_gates or the int8 "
+            "weight_dtype"
+        )
 
     # -- placement resolution ----------------------------------------------
     if placement == "sharded":
@@ -255,28 +322,77 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
     return StackPlan(
         cfgs=cfgs, impl=impl, weight_dtype=resolved_wd,
         placement=placement, mesh=mesh, n_chunks=n_chunks,
-        chunk_len=chunk_len,
+        chunk_len=chunk_len, block_b=block_b, fuse_gates=fuse_gates,
+        knob_sources=tuple(sorted(sources.items())),
     )
+
+
+#: the knobs ``tune="cached"`` may resolve from the autotune store (must
+#: stay in sync with ``repro.autotune.cache.KNOB_NAMES``)
+_TUNABLE_KNOBS = ("chunk_len", "block_b", "fuse_gates", "n_chunks")
 
 
 def plan_stack(cfgs: Sequence[LstmConfig], impl: str = "split", *,
                weight_dtype: str | None = None, placement: str = "local",
                mesh=None, n_chunks: int | None = None,
-               chunk_len: int | None = None) -> StackPlan:
+               chunk_len: int | None = None, block_b: int | None = None,
+               fuse_gates: bool | None = None,
+               tune: str = "default") -> StackPlan:
     """Resolve an execution plan for a stacked LSTM segment — exactly once.
 
     All impl-dependent legality lives here (plan time), not at call time:
     unknown backends, quantized storage on a non-fused backend, storage
     wider than compute, heterogeneous fused segments, non-divisible
-    sharded stage splits, and a ``chunk_len`` on a backend without the
-    chunked-step capability all raise *now*.  Plans are cached on their
+    sharded stage splits, and a knob on a backend that does not declare it
+    (``chunk_len``/``block_b``/``fuse_gates``/``n_chunks`` — see
+    ``BackendSpec.knobs``) all raise *now*.  Plans are cached on their
     full argument tuple, so hot paths (including the deprecated
     ``lstm_stack_forward`` shim) re-resolve nothing.
+
+    ``tune="cached"`` consults the autotune store
+    (``repro.autotune.cache``) for measured-best knobs keyed by (geometry,
+    backend, weight dtype, device fingerprint): any knob not passed
+    explicitly resolves from the cache when an entry exists, falling back
+    to the deterministic hand-set defaults otherwise — a missing or stale
+    cache can never change behaviour, only speed.  Explicit knob arguments
+    always win (manual pinning).  The resolution is recorded per knob in
+    ``StackPlan.knob_sources`` ("explicit" | "tuned" | "default") so
+    ``--plan-only`` can audit what a serving engine will actually run.
     """
+    if tune not in ("default", "cached"):
+        raise ValueError(
+            f"unknown tune mode {tune!r}; choose 'default' (hand-set knob "
+            "defaults) or 'cached' (consult the autotune store)"
+        )
+    knobs = {"chunk_len": chunk_len, "block_b": block_b,
+             "fuse_gates": fuse_gates, "n_chunks": n_chunks}
+    sources = {
+        k: ("explicit" if v is not None else "default")
+        for k, v in knobs.items()
+    }
+    if tune == "cached" and cfgs:
+        from repro.autotune.cache import lookup_tuned
+
+        tuned = lookup_tuned(cfgs, impl, weight_dtype)
+        if tuned:
+            for k in _TUNABLE_KNOBS:
+                v = tuned.get(k)
+                if v is not None and knobs[k] is None:
+                    knobs[k] = v
+                    sources[k] = "tuned"
     return _plan_stack_cached(
-        tuple(cfgs), impl, weight_dtype, placement, mesh, n_chunks,
-        chunk_len,
+        tuple(cfgs), impl, weight_dtype, placement, mesh,
+        knobs["n_chunks"], knobs["chunk_len"], knobs["block_b"],
+        knobs["fuse_gates"], tuple(sorted(sources.items())),
     )
+
+
+def clear_plan_cache() -> None:
+    """Drop memoized plans.  Not required for correctness after mutating
+    the autotune store — ``plan_stack`` resolves tuned knobs *before* the
+    memo, so a new cache entry simply produces a new memo key — but tests
+    and long sweeps use it to keep plan identities fresh and bounded."""
+    _plan_stack_cached.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -453,7 +569,8 @@ def _forward_fused(ex: StackExecutor, xs, state):
     # bind() already validated the pack against the plan's cfgs; the helper
     # is the single fused dispatch shared with the deprecated shim
     return lstm_stack_forward_fused(
-        list(ex.params), xs, list(ex.plan.cfgs), state, packed=ex.packed
+        list(ex.params), xs, list(ex.plan.cfgs), state, packed=ex.packed,
+        block_b=ex.plan.block_b,
     )
 
 
@@ -498,6 +615,7 @@ def _step_fused(ex: StackExecutor, xs, state):
     _, h_f, c_f = lstm_stack_op(
         ex.packed.pad_input(xs), ex.packed.stacked, h, c,
         acts=ex.packed.acts, weight_dtype=ex.packed.weight_dtype,
+        block_b=ex.plan.block_b,
     )
     return h_f, c_f
 
@@ -516,6 +634,7 @@ def _step_chunked(ex: StackExecutor, xs, state):
     _, h_f, c_f = lstm_stack_step_op(
         ex.packed.pad_input(xs), ex.packed.stacked, h, c,
         acts=ex.packed.acts, weight_dtype=ex.packed.weight_dtype,
+        block_b=ex.plan.block_b, fuse_gates=ex.plan.fuse_gates,
     )
     return h_f, c_f
 
@@ -557,14 +676,18 @@ register_backend(BackendSpec(
     name="kernel", kernel_acts=True, forward=_forward_layerwise))
 register_backend(BackendSpec(
     name="fused_stack", packs=True, quantized=True, kernel_acts=True,
-    state_layout="packed", forward=_forward_fused, step=_step_fused))
+    state_layout="packed", knobs=("block_b",),
+    forward=_forward_fused, step=_step_fused))
 register_backend(BackendSpec(
     name="fused_step", packs=True, quantized=True, kernel_acts=True,
     state_layout="packed", chunked_step=True,
+    knobs=("chunk_len", "block_b", "fuse_gates"),
     forward=_forward_fused, step=_step_chunked))
 register_backend(BackendSpec(
     name="fused_stack_sharded", packs=True, quantized=True,
     kernel_acts=True, sharded=True, state_layout="packed",
+    knobs=("n_chunks",),
     forward=_forward_sharded, step=_step_sharded))
 register_backend(BackendSpec(
-    name="wavefront", stateful=False, forward=_forward_wavefront))
+    name="wavefront", stateful=False, knobs=("n_chunks",),
+    forward=_forward_wavefront))

@@ -475,6 +475,7 @@ def lstm_stack_forward_fused(
     initial_state: Sequence[tuple[jax.Array, jax.Array]] | None = None,
     *,
     packed: PackedStack | None = None,
+    block_b: int | None = None,
 ) -> tuple[jax.Array, list[tuple[jax.Array, jax.Array]]]:
     """Backend for core.lstm.lstm_stack_forward(impl="fused_stack").
 
@@ -484,6 +485,8 @@ def lstm_stack_forward_fused(
 
     Pass a pre-built ``packed`` (``pack_stack_cached``) to skip the in-trace
     pack entirely — the serve path does this once at engine init.
+    ``block_b`` overrides the kernel's hand-set batch tile (a tuned plan's
+    knob rides through here; None keeps ``choose_blocking``'s default).
     """
     if packed is None:
         packed = pack_stack_cached(params_list, cfgs)
@@ -498,6 +501,6 @@ def lstm_stack_forward_fused(
 
     hs, h_f, c_f = lstm_stack_op(
         packed.pad_input(xs), packed.stacked, h0, c0, acts=packed.acts,
-        weight_dtype=packed.weight_dtype,
+        weight_dtype=packed.weight_dtype, block_b=block_b,
     )
     return hs[..., : packed.hidden[-1]], packed.unpack_state(h_f, c_f)

@@ -88,6 +88,12 @@ def main():
                     help="fused-stack stage placement (anomaly mode): "
                          "'sharded' runs fused sub-stacks on mesh devices "
                          "with ppermute hand-off (fused_stack_sharded)")
+    ap.add_argument("--tune", choices=("default", "cached"),
+                    default="default",
+                    help="'cached' resolves plan knobs from the autotune "
+                         "store (runs/autotune/tuned.json; populate with "
+                         "python -m repro.launch.tune) — --plan-only shows "
+                         "which knobs came from the cache")
     ap.add_argument("--chunk-len", type=int, default=None,
                     help="step-kernel threshold: pushes with T <= chunk_len "
                          "run the low-latency step kernel (default: the "
@@ -198,7 +204,7 @@ def serve_anomaly(args):
 
     engine = StreamingAnomalyEngine(
         params, cfg, batch=1, placement=args.placement,
-        chunk_len=args.chunk_len,
+        chunk_len=args.chunk_len, tune=args.tune,
     )
     wd = engine._packed_enc.weight_dtype if engine._packed_enc else "n/a"
     print(f"{args.gw_model}: impl={engine.effective_impl} "
@@ -256,7 +262,7 @@ def serve_server(args, params, cfg, ds):
 
     engine = StreamingAnomalyEngine(
         params, cfg, batch=1, placement=args.placement,
-        chunk_len=args.chunk_len,
+        chunk_len=args.chunk_len, tune=args.tune,
     )
     health = None
     if args.sanitize != "off" or args.checkpoint or args.restore:
@@ -376,13 +382,22 @@ def print_plan(args, params, cfg) -> None:
         print(f"note: {reason}")
     exec_enc, exec_dec = segment_executors(
         params, cfg, impl=effective, placement=args.placement,
-        chunk_len=args.chunk_len,
+        chunk_len=args.chunk_len, tune=args.tune,
     )
     print(f"{args.gw_model}: resolved serving plan "
-          f"(window={cfg.timesteps}, requested fused_step)")
+          f"(window={cfg.timesteps}, requested fused_step, "
+          f"tune={args.tune})")
     for name, ex in (("encoder", exec_enc), ("decoder", exec_dec)):
         print(f"  {name}: {ex.plan.describe()} "
               f"pack_bytes={ex.packed_bytes}")
+        # per-knob provenance: which values a serving engine would really
+        # run, and whether each came from the tuned cache, an explicit
+        # flag, or the hand-set default
+        for knob, (value, source) in sorted(
+            ex.plan.knob_provenance().items()
+        ):
+            shown = "auto" if value is None else value
+            print(f"    {knob:<10} = {shown!s:<6} [{source}]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,170 @@
+"""Autotune CLI: sweep the knob grid, fit the model, populate the cache.
+
+The operator-facing end of ``repro.autotune`` — the paper's design-space
+search as a command:
+
+    # the standard smoke grid, full knob grids, cache populated in place
+    python -m repro.launch.tune --smoke
+
+    # one specific stack, e.g. the GW nominal encoder under int8 storage
+    python -m repro.launch.tune --dims 1x32,32x8 --impl fused_step \\
+        --weight-dtype int8 --batch 8 --t-len 8
+
+Cache entries are keyed by *exact* stack geometry, and the serving
+engines plan the encoder and decoder as separate segments — tune the
+segment geometries you serve (``serve --plan-only`` prints them), not
+the concatenated autoencoder stack.
+
+Each sweep times every legal knob assignment (min-of-``--k`` over
+``--reps``-call batches) through the same jitted surfaces serving uses,
+writes the raw records to ``--jsonl``, fits the roofline model over them
+(predicted-vs-measured error printed per record), and stores each case's
+measured-best knobs in the tuned-plan cache (``--cache``; default the
+store ``plan_stack(tune="cached")`` reads).  A case whose best point IS
+the default gets no cache entry — there is nothing to override.
+
+Everything is keyed by device fingerprint: run this on the hardware you
+serve on, or the entries will be (safely) ignored.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def parse_dims(text: str) -> list[tuple[int, int]]:
+    """``"1x32,32x8,8x8"`` -> ``[(1, 32), (32, 8), (8, 8)]``."""
+    dims = []
+    for part in text.split(","):
+        a, sep, b = part.strip().partition("x")
+        if not sep or not a.isdigit() or not b.isdigit():
+            raise ValueError(
+                f"bad --dims segment {part!r}: want in_dimxhidden pairs "
+                "like 1x32,32x8,8x8"
+            )
+        dims.append((int(a), int(b)))
+    if not dims:
+        raise ValueError("--dims parsed to an empty stack")
+    return dims
+
+
+def main(argv=None) -> int:
+    from repro.autotune.cache import (
+        DEFAULT_CACHE_PATH,
+        TunedPlanCache,
+        canonical_weight_dtype,
+        device_fingerprint,
+    )
+    from repro.autotune.model import attach_costs, fit_roofline
+    from repro.autotune.sweep import (
+        best_record,
+        default_record,
+        run_sweep,
+        smoke_cases,
+        sweep_case,
+        write_jsonl,
+    )
+
+    ap = argparse.ArgumentParser(
+        description="measure knob grids, fit the roofline model, cache "
+                    "the winners"
+    )
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the standard smoke grid (same cases the CI "
+                         "bench gates on) instead of a single --dims case")
+    ap.add_argument("--dims", default=None,
+                    help="stack geometry as in_dimxhidden pairs, e.g. "
+                         "1x32,32x8,8x8")
+    ap.add_argument("--impl", default="fused_step",
+                    help="backend to tune (default fused_step)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--t-len", type=int, default=8,
+                    help="chunk length timed per call (default 8)")
+    ap.add_argument("--weight-dtype", choices=("fp32", "bf16", "int8"),
+                    default=None)
+    ap.add_argument("--k", type=int, default=5,
+                    help="min-of-k timing samples per point (default 5)")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="calls per timing sample (default 5)")
+    ap.add_argument("--max-points", type=int, default=None,
+                    help="thin each grid to at most N points (default: "
+                         "the full grid)")
+    ap.add_argument("--jsonl", default="runs/autotune/sweep.jsonl",
+                    help="raw sweep records land here (JSONL)")
+    ap.add_argument("--cache", default=DEFAULT_CACHE_PATH,
+                    help="tuned-plan cache file to update")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="measure and report only; leave the cache alone")
+    args = ap.parse_args(argv)
+
+    if args.smoke == (args.dims is not None):
+        ap.error("pass exactly one of --smoke or --dims")
+    if args.smoke:
+        cases = list(smoke_cases())
+    else:
+        cases = [sweep_case(
+            parse_dims(args.dims), args.impl, batch=args.batch,
+            t_len=args.t_len, weight_dtype=args.weight_dtype,
+        )]
+
+    fp = device_fingerprint()
+    print(f"device fingerprint: {fp}")
+
+    all_records, winners = [], []
+    for case in cases:
+        print(f"\n== sweep {case.tag} ==")
+        records = run_sweep(
+            case, k=args.k, reps=args.reps, max_points=args.max_points,
+            progress=lambda r: print(f"  {r['point']:<42} {r['us']:10.1f}us"),
+        )
+        all_records += records
+        best, default = best_record(records), default_record(records)
+        ratio = default["us"] / best["us"]
+        print(f"  best: {best['point']} ({best['us']:.1f}us, "
+              f"{ratio:.3f}x vs default {default['us']:.1f}us)")
+        winners.append((case, best, default, ratio))
+
+    path = write_jsonl(all_records, args.jsonl)
+    print(f"\nwrote {len(all_records)} records to {path}")
+
+    print("\n== roofline fit (predicted vs measured) ==")
+    fitted = attach_costs(all_records)
+    fit = fit_roofline(fitted)
+    print(fit.describe())
+    for tag, point, pred, meas, err in fit.per_record:
+        print(f"  {tag:<42} {point:<28} model {pred:9.1f}us  "
+              f"measured {meas:9.1f}us  ({err:+.1%})")
+
+    if args.no_cache:
+        print("\n--no-cache: tuned-plan cache left untouched")
+        return 0
+
+    cache = TunedPlanCache.load(args.cache)
+    stored = 0
+    for case, best, default, ratio in winners:
+        if not best["knobs"]:
+            continue  # the default won; nothing to override
+        # key under the dtype the plan request resolves to, so a sweep run
+        # without --weight-dtype is found by plan_stack(tune="cached")
+        cache.put(
+            case.dims, case.impl,
+            canonical_weight_dtype(case.cfgs(), case.weight_dtype),
+            best["knobs"],
+            meta={
+                "best_us": best["us"], "default_us": default["us"],
+                "ratio": ratio, "point": best["point"],
+                "batch": case.batch, "t_len": case.t_len,
+                "k": best["k"], "reps": best["reps"],
+            },
+        )
+        stored += 1
+    saved = cache.save(args.cache)
+    print(f"\nstored {stored} tuned entr{'y' if stored == 1 else 'ies'} "
+          f"({len(cache)} total) in {saved}")
+    print('serving picks them up via plan_stack(tune="cached") / '
+          "launch.serve --tune cached")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

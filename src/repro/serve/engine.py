@@ -97,6 +97,9 @@ class AnomalyStreamEngine:
     #: stage placement for the fused path: "local" (one device) or
     #: "sharded" (sub-stacks on mesh devices, ``fused_stack_sharded``)
     placement: str = "local"
+    #: "cached" resolves plan knobs from the autotune store (measured-best
+    #: for this geometry/backend/device); "default" keeps hand-set knobs
+    tune: str = "default"
     #: backend the engine actually runs (output-only, set in __post_init__).
     effective_impl: str = field(init=False, default="")
     #: non-None iff the requested impl was declined (the logged reason).
@@ -125,6 +128,7 @@ class AnomalyStreamEngine:
         return segment_executors(
             self.params, self.cfg,
             impl=self.effective_impl, placement=self.placement,
+            tune=self.tune,
         )
 
     def calibrate(self, background: np.ndarray, fpr: float = 0.01):
@@ -205,6 +209,7 @@ class StreamingAnomalyEngine:
         impl: str | None = "fused_step",
         placement: str = "local",
         chunk_len: int | None = None,
+        tune: str = "default",
         carry_state: bool = False,
         donate: bool = True,
         threshold: float = float("inf"),
@@ -220,6 +225,7 @@ class StreamingAnomalyEngine:
         self.batch = batch
         self.placement = placement
         self.chunk_len = chunk_len
+        self.tune = tune
         self.window = int(window or self.cfg.timesteps)
         self.carry_state = carry_state
         self.threshold = threshold
@@ -264,7 +270,7 @@ class StreamingAnomalyEngine:
         self._exec_enc, self._exec_dec = segment_executors(
             self.params, cfg,
             impl=self.effective_impl, placement=self.placement,
-            chunk_len=chunk_len,
+            chunk_len=chunk_len, tune=self.tune,
         )
         self._enc_step = self._exec_enc.step_jit(donate=self._donate)
         # push_many's gather -> step -> scatter runs as ONE jitted call per

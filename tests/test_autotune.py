@@ -1,0 +1,685 @@
+"""The autotune subsystem: knob spaces, tuned-plan cache, cached planning,
+sweep harness, roofline model, and the HLO custom-call cost floor.
+
+The contracts under test:
+
+* every point the space generator proposes is legal for its backend (the
+  capability table is the single source of sweep legality), and the
+  all-default point always comes first;
+* the cache invalidates structurally (version, device fingerprint,
+  unknown knobs) and both ends key weight dtype the same way — a sweep
+  stored without an explicit dtype is found by a native plan request;
+* ``plan_stack(tune="cached")`` resolves tuned knobs with provenance,
+  explicit arguments beat tuned values, and an empty cache degrades to
+  the hand-set defaults (same plan, not an error);
+* a tuned plan computes the same function as the default plan:
+  bit-equal under fp32, within storage-dtype tolerance under bf16/int8;
+* cached knobs keep the steady-state serving invariants: zero re-traces,
+  zero re-packs after warm-up;
+* custom-call HLO ops get byte/FLOP floors (operand + result buffers,
+  while-trip multiplied), SPMD-partitioner bookkeeping is skipped;
+* the roofline fit recovers a synthetic linear law and never returns
+  negative rates.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo, compiled_costs
+from repro.autotune.cache import (
+    CACHE_VERSION,
+    KNOB_NAMES,
+    TunedPlanCache,
+    canonical_weight_dtype,
+    device_fingerprint,
+    lookup_tuned,
+    set_cache,
+)
+from repro.autotune.model import (
+    TPU_V5E,
+    attach_costs,
+    fit_roofline,
+    predict_pack_bytes,
+    roofline_terms_from_counts,
+)
+from repro.autotune.space import (
+    DEFAULT_POINT,
+    KnobPoint,
+    check_legal,
+    knob_space,
+)
+from repro.autotune.sweep import (
+    best_record,
+    case_from_record,
+    default_record,
+    read_jsonl,
+    run_sweep,
+    smoke_cases,
+    sweep_case,
+    write_jsonl,
+)
+from repro.core import pipeline
+from repro.core.backends import available_backends, get_backend
+from repro.core.executor import plan_stack
+from repro.core.lstm import LstmConfig, init_lstm
+
+SMALL_DIMS = ((1, 9), (9, 9))
+
+
+def _stack(key, dims, **cfg_kw):
+    cfgs = [LstmConfig(in_dim=a, hidden=b, **cfg_kw) for a, b in dims]
+    keys = jax.random.split(key, len(dims))
+    return [init_lstm(k, c) for k, c in zip(keys, cfgs)], cfgs
+
+
+@pytest.fixture(scope="module")
+def small_stack():
+    return _stack(jax.random.PRNGKey(0), SMALL_DIMS)
+
+
+@pytest.fixture
+def injected_cache():
+    """An empty in-memory cache installed as the process default; the
+    previous default is restored afterwards so test order cannot leak."""
+    cache = TunedPlanCache()
+    old = set_cache(cache)
+    try:
+        yield cache
+    finally:
+        set_cache(old)
+
+
+# ---------------------------------------------------------------------------
+# knob space
+# ---------------------------------------------------------------------------
+
+class TestKnobSpace:
+    def test_every_generated_point_is_legal(self, small_stack):
+        """The tentpole invariant: the space generator only proposes what
+        plan_stack accepts — checked for every registered backend."""
+        _, cfgs = small_stack
+        for impl in available_backends():
+            for point in knob_space(cfgs, impl, batch=8, t_len=8):
+                check_legal(cfgs, impl, point)
+
+    def test_default_point_always_first(self, small_stack):
+        _, cfgs = small_stack
+        for impl in available_backends():
+            points = knob_space(cfgs, impl, batch=8, t_len=8)
+            assert points[0].is_default, impl
+
+    def test_knobless_backends_get_default_only(self, small_stack):
+        _, cfgs = small_stack
+        for impl in available_backends():
+            if get_backend(impl).knobs:
+                continue
+            assert knob_space(cfgs, impl, batch=8, t_len=8) == [DEFAULT_POINT]
+
+    def test_int8_space_never_proposes_fused_gates(self, small_stack):
+        _, cfgs = small_stack
+        points = knob_space(
+            cfgs, "fused_step", weight_dtype="int8", batch=8, t_len=8
+        )
+        assert points, "int8 grid must not be empty"
+        assert all(p.fuse_gates is not True for p in points)
+        for point in points:
+            check_legal(cfgs, "fused_step", point, weight_dtype="int8")
+
+    def test_n_chunks_axis_only_proposes_divisors(self, small_stack):
+        _, cfgs = small_stack
+        points = knob_space(cfgs, "wavefront", batch=8, t_len=50)
+        n_chunks = {p.n_chunks for p in points}
+        assert n_chunks == {None, 2}  # 50 % 4 != 0, 1 is the default
+
+    def test_max_points_thins_but_keeps_default(self, small_stack):
+        _, cfgs = small_stack
+        full = knob_space(cfgs, "fused_step", batch=8, t_len=8)
+        assert len(full) > 4
+        thin = knob_space(cfgs, "fused_step", batch=8, t_len=8, max_points=4)
+        assert len(thin) <= 4
+        assert thin[0].is_default
+        assert set(thin) <= set(full)
+
+    def test_knob_point_overrides_and_describe(self):
+        p = KnobPoint(chunk_len=8, fuse_gates=False)
+        assert p.overrides() == {"chunk_len": 8, "fuse_gates": False}
+        assert not p.is_default
+        assert p.describe() == "chunk_len=8,fuse_gates=False"
+        assert DEFAULT_POINT.describe() == "default"
+
+
+# ---------------------------------------------------------------------------
+# tuned-plan cache
+# ---------------------------------------------------------------------------
+
+class TestTunedPlanCache:
+    def test_roundtrip_through_disk(self, tmp_path):
+        path = str(tmp_path / "tuned.json")
+        cache = TunedPlanCache()
+        cache.put(SMALL_DIMS, "fused_step", "fp32",
+                  {"chunk_len": 16, "block_b": None},
+                  meta={"ratio": 1.2})
+        cache.save(path)
+        loaded = TunedPlanCache.load(path)
+        assert len(loaded) == 1
+        # None-valued knobs are stripped at put time
+        assert loaded.lookup(SMALL_DIMS, "fused_step", "fp32") == {
+            "chunk_len": 16
+        }
+        assert loaded.entry_meta(SMALL_DIMS, "fused_step", "fp32") == {
+            "ratio": 1.2
+        }
+
+    def test_version_mismatch_discards_file(self, tmp_path):
+        path = str(tmp_path / "tuned.json")
+        cache = TunedPlanCache()
+        cache.put(SMALL_DIMS, "fused_step", "fp32", {"chunk_len": 16})
+        cache.save(path)
+        payload = json.loads(open(path).read())
+        payload["version"] = CACHE_VERSION + 1
+        open(path, "w").write(json.dumps(payload))
+        assert len(TunedPlanCache.load(path)) == 0
+
+    def test_missing_and_corrupt_files_yield_empty(self, tmp_path):
+        assert len(TunedPlanCache.load(str(tmp_path / "nope.json"))) == 0
+        bad = tmp_path / "bad.json"
+        bad.write_text("{ not json")
+        assert len(TunedPlanCache.load(str(bad))) == 0
+
+    def test_device_fingerprint_invalidates(self):
+        cache = TunedPlanCache()
+        cache.put(SMALL_DIMS, "fused_step", "fp32", {"chunk_len": 16},
+                  fingerprint="tpu:TPU_v5e:8")
+        # looked up on this host (cpu fingerprint): silently inert
+        assert cache.lookup(SMALL_DIMS, "fused_step", "fp32") is None
+        assert cache.lookup(
+            SMALL_DIMS, "fused_step", "fp32", fingerprint="tpu:TPU_v5e:8"
+        ) == {"chunk_len": 16}
+        assert "cpu" in device_fingerprint()
+
+    def test_unknown_knobs_rejected_at_put_and_load(self, tmp_path):
+        cache = TunedPlanCache()
+        with pytest.raises(ValueError, match="unknown tuned knob"):
+            cache.put(SMALL_DIMS, "fused_step", "fp32", {"warp_size": 32})
+        # a future-format file drops the bad entry, keeps the good one
+        path = str(tmp_path / "tuned.json")
+        cache.put(SMALL_DIMS, "fused_step", "fp32", {"chunk_len": 16})
+        cache.save(path)
+        payload = json.loads(open(path).read())
+        payload["entries"]["future|wd=fp32|1x9|cpu:cpu:1"] = {
+            "knobs": {"warp_size": 32}
+        }
+        open(path, "w").write(json.dumps(payload))
+        loaded = TunedPlanCache.load(path)
+        assert len(loaded) == 1
+        assert loaded.lookup(SMALL_DIMS, "fused_step", "fp32") is not None
+
+    def test_weight_dtype_keying_matches_between_store_and_plan(
+        self, injected_cache, small_stack
+    ):
+        """Regression: the tune CLI sweeps with weight_dtype=None (native
+        storage) while plan_stack resolves native fp32 cfgs to "fp32" —
+        both ends must canonicalize identically or CLI-produced entries
+        are unreachable from serving."""
+        _, cfgs = small_stack
+        wd = canonical_weight_dtype(cfgs, None)  # what the CLI stores under
+        assert wd == "fp32"
+        injected_cache.put(SMALL_DIMS, "fused_step", wd, {"chunk_len": 16})
+        assert lookup_tuned(cfgs, "fused_step") == {"chunk_len": 16}
+        assert lookup_tuned(cfgs, "fused_step", "fp32") == {"chunk_len": 16}
+
+    def test_weight_dtype_keying_int8_both_spellings(
+        self, injected_cache
+    ):
+        _, cfgs_plain = _stack(jax.random.PRNGKey(1), SMALL_DIMS)
+        _, cfgs_int8 = _stack(
+            jax.random.PRNGKey(1), SMALL_DIMS, weight_dtype="int8"
+        )
+        injected_cache.put(SMALL_DIMS, "fused_stack", "int8", {"block_b": 8})
+        # explicit argument spelling and cfg-carried spelling both hit
+        assert lookup_tuned(cfgs_plain, "fused_stack", "int8") == {
+            "block_b": 8
+        }
+        assert lookup_tuned(cfgs_int8, "fused_stack") == {"block_b": 8}
+        # a native request must NOT pick up the int8 entry
+        assert lookup_tuned(cfgs_plain, "fused_stack") is None
+
+    def test_knob_names_stay_in_sync_with_executor(self):
+        from repro.core.executor import _TUNABLE_KNOBS
+
+        assert tuple(KNOB_NAMES) == tuple(_TUNABLE_KNOBS)
+
+
+# ---------------------------------------------------------------------------
+# cached planning (plan_stack tune="cached")
+# ---------------------------------------------------------------------------
+
+class TestCachedPlanning:
+    def test_tuned_knobs_resolve_with_provenance(
+        self, injected_cache, small_stack
+    ):
+        _, cfgs = small_stack
+        injected_cache.put(
+            SMALL_DIMS, "fused_step", "fp32",
+            {"chunk_len": 16, "fuse_gates": False},
+        )
+        plan = plan_stack(cfgs, impl="fused_step", tune="cached")
+        assert plan.chunk_len == 16
+        assert plan.fuse_gates is False
+        prov = plan.knob_provenance()
+        assert prov["chunk_len"] == (16, "tuned")
+        assert prov["fuse_gates"] == (False, "tuned")
+        assert prov["block_b"] == (None, "default")
+
+    def test_explicit_knob_beats_tuned(self, injected_cache, small_stack):
+        _, cfgs = small_stack
+        injected_cache.put(
+            SMALL_DIMS, "fused_step", "fp32",
+            {"chunk_len": 16, "fuse_gates": False},
+        )
+        plan = plan_stack(cfgs, impl="fused_step", chunk_len=8, tune="cached")
+        assert plan.chunk_len == 8
+        prov = plan.knob_provenance()
+        assert prov["chunk_len"] == (8, "explicit")
+        assert prov["fuse_gates"] == (False, "tuned")
+
+    def test_empty_cache_falls_back_to_default_plan(
+        self, injected_cache, small_stack
+    ):
+        _, cfgs = small_stack
+        cached = plan_stack(cfgs, impl="fused_step", tune="cached")
+        default = plan_stack(cfgs, impl="fused_step")
+        # knob_sources is compare=False, so equal knobs mean equal plans
+        # (and therefore shared jit caches downstream)
+        assert cached == default
+        assert all(
+            src == "default"
+            for _, (_, src) in cached.knob_provenance().items()
+        )
+
+    def test_unknown_tune_mode_raises(self, small_stack):
+        _, cfgs = small_stack
+        with pytest.raises(ValueError, match="tune"):
+            plan_stack(cfgs, impl="fused_step", tune="aggressive")
+
+    def test_illegal_knobs_still_raise_at_plan_time(self, small_stack):
+        _, cfgs = small_stack
+        with pytest.raises(ValueError, match="block_b"):
+            plan_stack(cfgs, impl="split", block_b=8)
+        with pytest.raises(ValueError, match="fuse_gates"):
+            plan_stack(cfgs, impl="fused_stack", fuse_gates=True)
+        with pytest.raises(ValueError, match="n_chunks"):
+            plan_stack(cfgs, impl="fused_step", n_chunks=2)
+        with pytest.raises(ValueError, match="int8"):
+            plan_stack(cfgs, impl="fused_step", weight_dtype="int8",
+                       fuse_gates=True)
+
+    def test_sharded_degrade_drops_step_knobs_to_default(self, small_stack):
+        """A fused_step request under sharded placement degrades to the
+        sharded wavefront — the step-knob bundle must degrade with it, and
+        the provenance must say "default", not carry stale sources."""
+        _, cfgs = small_stack
+        plan = plan_stack(
+            cfgs, impl="fused_step", placement="sharded", chunk_len=8,
+        )
+        assert plan.impl == "fused_stack_sharded"
+        assert plan.chunk_len is None
+        prov = plan.knob_provenance()
+        # provenance reports the *resolved* backend's knobs — the step
+        # bundle is gone entirely, not left dangling with a stale source
+        assert "chunk_len" not in prov
+        assert prov["n_chunks"] == (None, "default")
+
+
+# ---------------------------------------------------------------------------
+# tuned plan == default plan (the function is knob-invariant)
+# ---------------------------------------------------------------------------
+
+class TestTunedPlanEquivalence:
+    def _outputs(self, dims, impl, wd, knobs, *, batch, t_len, injected):
+        params, cfgs = _stack(jax.random.PRNGKey(3), dims)
+        xs = jax.random.normal(
+            jax.random.PRNGKey(4), (batch, t_len, dims[0][0]), jnp.float32
+        )
+        default = plan_stack(cfgs, impl=impl, weight_dtype=wd).bind(params)
+        injected.put(dims, impl, canonical_weight_dtype(cfgs, wd), knobs)
+        tuned_plan = plan_stack(cfgs, impl=impl, weight_dtype=wd,
+                                tune="cached")
+        # guard: the comparison is vacuous if the knobs didn't resolve
+        assert any(
+            src == "tuned" for _, src in tuned_plan.knob_provenance().values()
+        )
+        tuned = tuned_plan.bind(params)
+        return (
+            default(xs, return_state=False), tuned(xs, return_state=False)
+        )
+
+    def test_fp32_tuned_plan_is_bit_equal(self, injected_cache):
+        y0, y1 = self._outputs(
+            SMALL_DIMS, "fused_stack", None, {"block_b": 8},
+            batch=16, t_len=12, injected=injected_cache,
+        )
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+    def test_fp32_tuned_chunking_is_bit_equal(self, injected_cache):
+        """Re-chunking the step scan (chunk_len) reorders nothing within a
+        timestep — fp32 outputs stay bit-identical."""
+        y0, y1 = self._outputs(
+            SMALL_DIMS, "fused_step", None,
+            {"chunk_len": 4, "fuse_gates": False},
+            batch=8, t_len=8, injected=injected_cache,
+        )
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+    def test_bf16_tuned_plan_within_storage_tolerance(self, injected_cache):
+        y0, y1 = self._outputs(
+            SMALL_DIMS, "fused_step", "bf16",
+            {"chunk_len": 4, "fuse_gates": True},
+            batch=8, t_len=8, injected=injected_cache,
+        )
+        np.testing.assert_allclose(
+            np.asarray(y0, np.float32), np.asarray(y1, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+    def test_int8_tuned_plan_within_storage_tolerance(self, injected_cache):
+        y0, y1 = self._outputs(
+            SMALL_DIMS, "fused_step", "int8", {"chunk_len": 4, "block_b": 8},
+            batch=8, t_len=8, injected=injected_cache,
+        )
+        np.testing.assert_allclose(
+            np.asarray(y0, np.float32), np.asarray(y1, np.float32),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+# ---------------------------------------------------------------------------
+# steady-state invariants with cached knobs
+# ---------------------------------------------------------------------------
+
+class TestSteadyStateWithTunedKnobs:
+    def test_cached_knobs_keep_zero_retrace_zero_repack(
+        self, injected_cache, small_stack
+    ):
+        """Cached-knob plans must keep the serving invariants: after
+        warm-up, re-planning + re-binding per call re-traces the jitted
+        step zero times and re-packs zero times (the tuned lookup happens
+        before the plan cache, so the resolved plan is a stable identity)."""
+        params, cfgs = small_stack
+        injected_cache.put(
+            SMALL_DIMS, "fused_step", "fp32",
+            {"chunk_len": 4, "fuse_gates": False},
+        )
+        xs = jax.random.normal(jax.random.PRNGKey(5), (8, 4, 1), jnp.float32)
+        ex = plan_stack(cfgs, impl="fused_step", tune="cached").bind(params)
+        assert ex.plan.chunk_len == 4  # tuned knobs actually active
+        traces = []
+
+        @jax.jit
+        def step(e, x, st):
+            traces.append(1)  # python side effect: runs at TRACE time only
+            return e.step(x, st)  # returns only the new native state
+
+        state = ex.zero_state(8)
+        state = jax.block_until_ready(step(ex, xs, state))
+        packs_before = pipeline.PACK_TRACE_COUNT
+        n_traces = len(traces)
+        for _ in range(5):
+            ex_i = plan_stack(
+                cfgs, impl="fused_step", tune="cached"
+            ).bind(params)
+            state = jax.block_until_ready(step(ex_i, xs, state))
+        assert len(traces) == n_traces, "cached-knob plans re-traced"
+        assert pipeline.PACK_TRACE_COUNT == packs_before, (
+            "cached-knob plans re-packed"
+        )
+
+
+# ---------------------------------------------------------------------------
+# sweep harness
+# ---------------------------------------------------------------------------
+
+class TestSweepHarness:
+    def test_smoke_sweep_and_jsonl_roundtrip(self, tmp_path):
+        case = sweep_case(SMALL_DIMS, "fused_step", batch=4, t_len=4)
+        records = run_sweep(case, k=1, reps=1, max_points=3)
+        assert 1 < len(records) <= 3
+        assert records[0]["knobs"] == {}  # default point first
+        assert default_record(records) is records[0]
+        best = best_record(records)
+        assert best["us"] <= records[0]["us"]
+        assert all(r["us"] > 0 for r in records)
+        path = str(tmp_path / "sweep.jsonl")
+        write_jsonl(records, path)
+        assert read_jsonl(path) == records
+        assert case_from_record(records[-1]) == case
+
+    def test_default_record_raises_when_filtered_out(self):
+        with pytest.raises(ValueError, match="default"):
+            default_record([{"knobs": {"chunk_len": 4}, "us": 1.0}])
+
+    def test_best_record_ties_break_toward_default(self):
+        records = [
+            {"knobs": {"chunk_len": 4}, "us": 1.0},
+            {"knobs": {}, "us": 1.0},
+        ]
+        assert best_record(records) is records[1]
+
+    def test_unknown_impl_fails_before_timing(self):
+        case = sweep_case(SMALL_DIMS, "warp_drive")
+        with pytest.raises(ValueError, match="warp_drive"):
+            run_sweep(case, k=1, reps=1, max_points=1)
+
+    def test_smoke_grid_cases_are_legal_and_tagged(self):
+        tags = set()
+        for case in smoke_cases():
+            tags.add(case.tag)
+            for point in knob_space(
+                case.cfgs(), case.impl, weight_dtype=case.weight_dtype,
+                batch=case.batch, t_len=case.t_len, max_points=3,
+            ):
+                check_legal(case.cfgs(), case.impl, point,
+                            weight_dtype=case.weight_dtype)
+        assert len(tags) == len(smoke_cases()), "bench row names collide"
+
+
+# ---------------------------------------------------------------------------
+# roofline model
+# ---------------------------------------------------------------------------
+
+class TestRooflineModel:
+    def test_fit_recovers_synthetic_linear_law(self):
+        c0, spf, spb = 5e-6, 2e-11, 1e-9
+        records = []
+        for i, (f, b) in enumerate(
+            [(1e6, 1e4), (1e7, 1e5), (5e7, 2e6), (2e8, 1e7), (1e6, 5e6)]
+        ):
+            us = (c0 + spf * f + spb * b) * 1e6
+            records.append({
+                "case": f"syn{i}", "point": "default", "knobs": {},
+                "us": us, "costs": {"flops": f, "bytes": b},
+            })
+        fit = fit_roofline(records)
+        assert fit.n_records == 5
+        assert fit.median_rel_err < 1e-6
+        assert fit.max_rel_err < 1e-6
+        np.testing.assert_allclose(fit.c0, c0, rtol=1e-6)
+        np.testing.assert_allclose(fit.sec_per_flop, spf, rtol=1e-6)
+        np.testing.assert_allclose(fit.sec_per_byte, spb, rtol=1e-6)
+        np.testing.assert_allclose(
+            fit.predict_us(1e7, 1e5), (c0 + spf * 1e7 + spb * 1e5) * 1e6,
+            rtol=1e-6,
+        )
+        assert "GFLOP/s" in fit.describe()
+
+    def test_fit_coefficients_never_negative(self):
+        # bytes anti-correlated with time: an unconstrained fit would go
+        # negative on sec_per_byte; the NNLS must clamp it instead
+        records = [
+            {"case": f"n{i}", "point": "default", "knobs": {},
+             "us": 10.0 + 2e-5 * f, "costs": {"flops": f, "bytes": b}}
+            for i, (f, b) in enumerate(
+                [(1e6, 9e6), (2e6, 5e6), (4e6, 2e6), (8e6, 1e5)]
+            )
+        ]
+        fit = fit_roofline(records)
+        assert fit.c0 >= 0
+        assert fit.sec_per_flop >= 0
+        assert fit.sec_per_byte >= 0
+
+    def test_fit_requires_costs(self):
+        with pytest.raises(ValueError, match="attach_costs"):
+            fit_roofline([{"case": "x", "us": 1.0}])
+
+    def test_roofline_terms_pick_the_binding_resource(self):
+        compute = roofline_terms_from_counts(1e15, 1e3, hw=TPU_V5E)
+        assert compute["bound"] == "compute"
+        hbm = roofline_terms_from_counts(1e6, 1e12, hw=TPU_V5E)
+        assert hbm["bound"] == "hbm"
+        link = roofline_terms_from_counts(1e6, 1e3, 1e12, hw=TPU_V5E)
+        assert link["bound"] == "link"
+        for terms in (compute, hbm, link):
+            assert terms["t_bound_us"] == max(
+                terms["t_compute_us"], terms["t_hbm_us"], terms["t_link_us"]
+            )
+
+    def test_attach_costs_on_sweep_records(self):
+        case = sweep_case(SMALL_DIMS, "fused_step", batch=4, t_len=4)
+        records = run_sweep(case, k=1, reps=1, max_points=2)
+        with_costs = attach_costs(records)
+        assert len(with_costs) == len(records)
+        for rec in with_costs:
+            assert rec["costs"]["flops"] > 0
+            assert rec["costs"]["bytes"] > 0
+        fit = fit_roofline(with_costs)
+        assert fit.n_records == len(records)
+
+    def test_predict_pack_bytes_matches_packed_stack_exactly(self):
+        """The quant bench's model gate rests on this being byte-exact."""
+        from repro.kernels.lstm_stack.ops import pack_stack
+
+        params, cfgs = _stack(jax.random.PRNGKey(6), ((1, 32), (32, 8)))
+        for wd in ("fp32", "bf16", "int8"):
+            predicted = predict_pack_bytes(cfgs, weight_dtype=wd)
+            measured = pack_stack(params, cfgs, weight_dtype=wd).packed_bytes
+            assert predicted == measured, (wd, predicted, measured)
+
+
+# ---------------------------------------------------------------------------
+# HLO custom-call cost floor (satellite: analysis/hlo)
+# ---------------------------------------------------------------------------
+
+_CCALL_TYPED = """\
+HloModule m
+
+ENTRY %main (p0: f32[8,16], w: f32[16,32]) -> f32[8,32] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %w = f32[16,32]{1,0} parameter(1)
+  %cc = f32[8,32]{1,0} custom-call(f32[8,16]{1,0} %p0, f32[16,32]{1,0} %w), custom_call_target="my_pallas_kernel"
+}
+"""
+
+_CCALL_BARE = """\
+HloModule m
+
+ENTRY %main (p0: f32[8,16], w: f32[16,32]) -> f32[8,32] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %w = f32[16,32]{1,0} parameter(1)
+  %cc = f32[8,32]{1,0} custom-call(%p0, %w), custom_call_target="my_pallas_kernel"
+}
+"""
+
+_CCALL_SHARDING = """\
+HloModule m
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %cc = f32[8,16]{1,0} custom-call(f32[8,16]{1,0} %p0), custom_call_target="Sharding"
+}
+"""
+
+_CCALL_IN_WHILE = """\
+HloModule m
+
+%cond (s: (s32[], f32[8,8])) -> pred[] {
+  %s = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %c = s32[] constant(5)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (s: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %s = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%s), index=1
+  %cc = f32[8,8]{1,0} custom-call(f32[8,8]{1,0} %x), custom_call_target="k"
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %t = (s32[], f32[8,8]) tuple(%ip, %cc)
+}
+
+ENTRY %main (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %w = (s32[], f32[8,8]) while(%p), condition=%cond, body=%body
+}
+"""
+
+
+class TestHloCustomCallCosts:
+    def test_typed_operands(self):
+        a = analyze_hlo(_CCALL_TYPED)
+        assert a.custom_call_count == 1
+        # result 8*32*4 + operands 8*16*4 + 16*32*4
+        assert a.custom_call_bytes == 1024 + 512 + 2048
+        assert a.custom_call_flops == 2.0 * 8 * 32
+
+    def test_bare_operands_resolve_via_symbol_table(self):
+        a = analyze_hlo(_CCALL_BARE)
+        assert a.custom_call_count == 1
+        assert a.custom_call_bytes == 1024 + 512 + 2048
+        assert a.custom_call_flops == 2.0 * 8 * 32
+
+    def test_spmd_partitioner_targets_are_skipped(self):
+        a = analyze_hlo(_CCALL_SHARDING)
+        assert a.custom_call_count == 0
+        assert a.custom_call_bytes == 0.0
+        assert a.custom_call_flops == 0.0
+
+    def test_while_trip_multiplier_applies(self):
+        a = analyze_hlo(_CCALL_IN_WHILE)
+        assert a.custom_call_count == 1
+        # (result 256 + operand 256) bytes * 5 trips
+        assert a.custom_call_bytes == 5 * (256 + 256)
+        assert a.custom_call_flops == 5 * 2.0 * 64
+
+    def test_compiled_costs_on_a_real_program(self):
+        f = jax.jit(lambda a, b: a @ b)
+        compiled = f.lower(
+            jnp.zeros((8, 16), jnp.float32), jnp.zeros((16, 32), jnp.float32)
+        ).compile()
+        costs = compiled_costs(compiled)
+        assert costs["flops"] >= 2 * 8 * 16 * 32
+        assert costs["bytes"] > 0
+        assert costs["custom_call_bytes"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# roofline table fail-loud (satellite: benchmarks/roofline_table)
+# ---------------------------------------------------------------------------
+
+class TestRooflineTableFailsLoudly:
+    def test_missing_run_dir_raises(self, tmp_path):
+        from benchmarks.roofline_table import load_cells
+
+        with pytest.raises(FileNotFoundError, match="does not exist"):
+            load_cells(str(tmp_path / "no_such_dir"))
+
+    def test_empty_run_dir_raises(self, tmp_path):
+        from benchmarks.roofline_table import load_cells
+
+        with pytest.raises(FileNotFoundError, match="no \\*.json"):
+            load_cells(str(tmp_path))
