@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve test-quant test-exec test-step test-server test-chaos test-autotune tune bench-kernels bench-stream bench-quant bench-exec bench-step bench-server bench-autotune bench
+.PHONY: test test-fast test-serve test-quant test-exec test-step test-server test-chaos test-autotune test-mixed tune bench-kernels bench-stream bench-quant bench-exec bench-step bench-server bench-autotune bench-mixed bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -44,6 +44,11 @@ test-chaos:
 # sweep harness, roofline model, HLO custom-call costs)
 test-autotune:
 	$(PYTHON) -m pytest -x -q tests/test_autotune.py
+
+# the heterogeneous mixed backend (per-layer storage splits, segment
+# chaining bit-equality, balancer, act_bits, tuned split, mixed serving)
+test-mixed:
+	$(PYTHON) -m pytest -x -q tests/test_mixed_stack.py
 
 # measure the standard smoke grid on THIS machine and populate the
 # tuned-plan cache (runs/autotune/tuned.json) that `--tune cached` serving
@@ -86,6 +91,12 @@ bench-server:
 AUTOTUNE_JSON ?= BENCH_kernels.json
 bench-autotune:
 	$(PYTHON) -m benchmarks.run --only autotune --json $(AUTOTUNE_JSON) --merge
+
+# mixed.* rows (chained bit-equality hard gate, measured-best split vs
+# best homogeneous hard gate >= 1.0x, fitted-balancer gate=model row)
+# merged into the shared artifact
+bench-mixed:
+	$(PYTHON) -m benchmarks.run --only mixed --json BENCH_kernels.json --merge
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast --json BENCH_kernels.json

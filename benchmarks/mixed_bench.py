@@ -1,0 +1,200 @@
+"""Mixed heterogeneous stacks: chained bit-equality + II-balanced splits.
+
+The paper balances per-layer initiation intervals by giving each layer its
+own resource assignment; the TPU analogue is the ``mixed`` backend's
+per-layer weight storage (int8 early / fp32 late) executed as a chain of
+homogeneous fused_step segments.  Two claims, both as gated rows:
+
+* ``mixed.vs_chained_bitequal`` — a mixed executor is *bit-equal* to
+  hand-chaining one homogeneous fused_step executor per segment, on the
+  batch forward AND the chunked streaming step path (hard gate: the whole
+  backend is defined as exactly that chaining — any drift is a bug);
+* ``mixed.balanced_vs_best_homogeneous`` — measure every candidate
+  int8-early/fp32-late split on the GW nominal autoencoder geometry
+  (homogeneous ends included), pick the measured-fastest: it can never be
+  slower than the best homogeneous assignment (hard gate >= 1.0, by
+  construction — the candidate set contains both ends);
+* ``mixed.model_split_gate`` — the roofline balancer's proposed split,
+  predicted vs measured (``gate=model`` row).  The roofline is fitted on
+  the measured split points themselves (same discipline as
+  ``autotune_bench``: datasheet floors are meaningless under CPU
+  interpret-mode dispatch overhead), so the gate checks that the fitted
+  model's proposal stays in contact with the measurement it came from —
+  the model proposes, the measurement disposes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import plan_stack
+from repro.core.lstm import LstmConfig, init_lstm
+from repro.core.stage_balance import choose_mixed_split, segment_runs
+
+#: the GW nominal autoencoder's concatenated stack geometry
+GW_DIMS = ((1, 32), (32, 8), (8, 8), (8, 32))
+
+#: soft margin for the balancer's predicted-vs-measured row (CPU
+#: interpret-mode dispatch overhead dominates these tiny stacks)
+MODEL_SPLIT_MARGIN = 5.0
+
+
+def _setup(dims, batch: int = 8, t_len: int = 8, seed: int = 0):
+    cfgs = [LstmConfig(in_dim=a, hidden=b) for a, b in dims]
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(cfgs) + 1)
+    params = [init_lstm(k, c) for k, c in zip(keys, cfgs)]
+    xs = jax.random.normal(keys[-1], (batch, t_len, dims[0][0]), jnp.float32)
+    return cfgs, params, xs
+
+
+def _leaves_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def bitequal_rows() -> list[tuple]:
+    """Mixed executor vs hand-chained homogeneous segments, bit for bit."""
+    wds = ("int8", "int8", "fp32", "fp32")
+    cfgs, params, xs = _setup(GW_DIMS)
+    mex = plan_stack(cfgs, impl="mixed", weight_dtype=wds).bind(params)
+
+    # the hand-built chain: one ordinary homogeneous fused_step executor
+    # per maximal equal-dtype run, exactly what the mixed plan segments
+    subs = []
+    for a, b in segment_runs(wds):
+        plan = plan_stack(cfgs[a:b], impl="fused_step", weight_dtype=wds[a])
+        subs.append(plan.bind(params[a:b]))
+
+    # batch forward
+    got = np.asarray(mex(xs, return_state=False))
+    h = xs
+    for sub in subs:
+        h = sub(h, return_state=False)
+    want = np.asarray(h)
+    batch_ok = np.array_equal(got, want)
+
+    # chunked streaming: two 4-step pushes through the native-layout step
+    state = mex.zero_state(xs.shape[0])
+    sub_states = [s.zero_state(xs.shape[0]) for s in subs]
+    for lo, hi in ((0, 4), (4, 8)):
+        chunk = xs[:, lo:hi]
+        state = mex.step(chunk, state)
+        h = chunk
+        for i, sub in enumerate(subs):
+            h, sub_states[i] = sub.step_with_output(h, sub_states[i])
+    stream_ok = _leaves_equal(tuple(state), tuple(sub_states)) and (
+        np.array_equal(
+            np.asarray(mex.last_hidden(state)),
+            np.asarray(subs[-1].last_hidden(sub_states[-1])),
+        )
+    )
+
+    ok = batch_ok and stream_ok
+    print(f"mixed vs hand-chained segments [{'+'.join(wds)}]: "
+          f"batch {'OK' if batch_ok else 'MISMATCH'}, "
+          f"stream {'OK' if stream_ok else 'MISMATCH'}")
+    if not ok:
+        raise RuntimeError(
+            "mixed executor diverged from hand-chained homogeneous "
+            f"fused_step segments (batch_ok={batch_ok}, "
+            f"stream_ok={stream_ok}) — the backend's defining contract is "
+            "exact equality with that chaining"
+        )
+    return [(
+        "mixed.vs_chained_bitequal", 0.0,
+        f"batch={int(batch_ok)}|stream={int(stream_ok)}|ok={int(ok)}",
+    )]
+
+
+def balanced_rows(k: int = 3, reps: int = 3) -> list[tuple]:
+    """Measure every prefix split on the GW AE geometry; gate the winner."""
+    from repro.autotune.sweep import _min_of_k_us, _timed_callable
+
+    cfgs, params, xs = _setup(GW_DIMS)
+    n = len(cfgs)
+    measured: dict[int, float] = {}
+    for split in range(n + 1):
+        ex = plan_stack(cfgs, impl="mixed", split=split).bind(params)
+        measured[split] = _min_of_k_us(_timed_callable(ex, xs), k, reps)
+        print(f"  split={split} ({'+'.join(ex.plan.weight_dtype):<24}) "
+              f"{measured[split]:10.1f}us")
+
+    chosen = min(measured, key=measured.get)
+    chosen_us = measured[chosen]
+    best_homog_us = min(measured[0], measured[n])
+    ratio = best_homog_us / chosen_us
+    ok = ratio >= 1.0
+    print(f"chosen split={chosen} ({chosen_us:.1f}us), best homogeneous "
+          f"{best_homog_us:.1f}us -> {ratio:.3f}x "
+          f"({'OK' if ok else 'REGRESSION'})")
+    if not ok:
+        raise RuntimeError(
+            f"measured-best mixed split {chosen} ({chosen_us:.1f}us) is "
+            f"slower than the best homogeneous assignment "
+            f"({best_homog_us:.1f}us) — impossible for a candidate set that "
+            "contains both homogeneous ends; the measurement harness is "
+            "inconsistent"
+        )
+    rows = [(
+        "mixed.balanced_vs_best_homogeneous", chosen_us,
+        f"chosen_split={chosen}|best_homogeneous_us={best_homog_us:.1f}"
+        f"|ratio={ratio:.3f}|ok={int(ok)}",
+    )]
+
+    # fit the roofline on the measured split points (compiled FLOP/byte
+    # counts of the exact programs timed above), then let the fitted model
+    # propose its split — judged against that split's measured point
+    from repro.autotune.model import config_costs, fit_roofline
+
+    costs = {
+        split: config_costs(cfgs, "mixed", knobs={"split": split})
+        for split in measured
+    }
+    fit = fit_roofline([
+        {"us": us, "costs": costs[split], "case": f"split{split}"}
+        for split, us in measured.items()
+    ])
+    print(fit.describe())
+    choice = choose_mixed_split(cfgs, fit=fit)
+    proposed = choice.split if choice.split is not None else chosen
+    predicted = fit.predict_us(
+        costs[proposed]["flops"], costs[proposed]["bytes"]
+    )
+    meas = measured[proposed]
+    hi, lo = max(predicted, meas), max(min(predicted, meas), 1e-9)
+    model_ok = hi / lo <= MODEL_SPLIT_MARGIN
+    print(f"balancer (fitted) proposes split={proposed}: predicted "
+          f"{predicted:.1f}us, measured {meas:.1f}us "
+          f"({'OK' if model_ok else 'off-model'})")
+    if hi / lo > 2 * MODEL_SPLIT_MARGIN:
+        raise RuntimeError(
+            f"fitted roofline predicts {predicted:.1f}us for its own "
+            f"proposed split {proposed} but {meas:.1f}us was measured — "
+            "the fit has lost contact with the very records it was fitted "
+            "on; the cost extraction is broken"
+        )
+    rows.append((
+        "mixed.model_split_gate", meas,
+        f"proposed_split={proposed}|predicted={predicted:.1f}"
+        f"|measured={meas:.1f}|margin={MODEL_SPLIT_MARGIN}"
+        f"|gate=model|ok={int(model_ok)}",
+    ))
+    return rows
+
+
+def run(k: int = 3, reps: int = 3) -> list[tuple]:
+    print("\n== mixed: heterogeneous stacks (chained bit-equality + "
+          "II-balanced splits) ==")
+    rows = bitequal_rows()
+    rows += balanced_rows(k=k, reps=reps)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -116,6 +116,31 @@ def auc_rows(steps: int) -> list[tuple]:
         print(f"AUC fused {wd:>4}: {auc[wd]:.3f}  (delta {delta:+.4f})")
         rows.append((f"quant.auc_fused_{wd}", 0.0,
                      f"{auc[wd]:.3f}|delta={delta:+.4f}"))
+    # heterogeneous storage through the mixed backend: the paper's
+    # mixed-precision axis (narrow early layers, full-precision late) must
+    # land between the homogeneous ends, and both ends routed through the
+    # mixed chain must agree with the fused rows above
+    n = len(cfg.hidden)
+    for tag, wds in (
+        ("int8_early", ("int8",) + ("fp32",) * (n - 1)),
+        ("all_int8", ("int8",) * n),
+        ("all_fp32", ("fp32",) * n),
+    ):
+        c = dataclasses.replace(cfg, impl="mixed", weight_dtypes=wds)
+        a = evaluate_auc(params, c, ds)
+        delta = a - auc["fp32"]
+        print(f"AUC mixed {'+'.join(wds):>10}: {a:.3f}  (delta {delta:+.4f})")
+        rows.append((f"quant.auc_mixed_{tag}", 0.0,
+                     f"{a:.3f}|delta={delta:+.4f}"))
+    # in-kernel activation fake-quant on the fp32 fused path (paper: 16-bit
+    # activations with a 32-bit cell carry; 8 bits shows the cliff)
+    for bits in (16, 8):
+        c = dataclasses.replace(cfg, impl="fused_stack", act_bits=bits)
+        a = evaluate_auc(params, c, ds)
+        delta = a - auc["fp32"]
+        print(f"AUC act_bits={bits:2d} (fp32): {a:.3f}  (delta {delta:+.4f})")
+        rows.append((f"quant.auc_mixed_act{bits}", 0.0,
+                     f"{a:.3f}|delta={delta:+.4f}"))
     print("(paper: quantization effect on AUC negligible)")
     return rows
 

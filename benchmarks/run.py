@@ -111,6 +111,7 @@ def main() -> None:
         fig8,
         fig10,
         kernels_bench,
+        mixed_bench,
         pipeline_balance,
         quant_bench,
         roofline_table,
@@ -132,6 +133,7 @@ def main() -> None:
         "pipeline_balance": pipeline_balance.run,
         "stream": stream_latency.run,
         "quant": quant_bench.run,
+        "mixed": mixed_bench.run,
         "exec": exec_bench.run,
         "step": step_bench.run,
         "server": server_bench.run,

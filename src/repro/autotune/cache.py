@@ -32,7 +32,7 @@ CACHE_VERSION = 1
 #: the only knobs a tuned entry may carry — must stay a subset of the
 #: plan-time knobs ``plan_stack`` accepts (executor validates legality per
 #: backend; this guards against typo'd or future-format cache files)
-KNOB_NAMES = ("chunk_len", "block_b", "fuse_gates", "n_chunks")
+KNOB_NAMES = ("chunk_len", "block_b", "fuse_gates", "n_chunks", "split")
 
 DEFAULT_CACHE_PATH = os.environ.get(
     "REPRO_AUTOTUNE_CACHE", os.path.join("runs", "autotune", "tuned.json")
@@ -76,6 +76,30 @@ def _clean_knobs(knobs: Mapping[str, Any]) -> dict[str, Any]:
     return {k: v for k, v in knobs.items() if v is not None}
 
 
+def _entry_unreachable(key: str, knobs: Mapping[str, Any]) -> bool:
+    """True iff no plan request can ever resolve to this entry's key.
+
+    Mixed-plan entries key on a *per-layer* weight-dtype signature
+    (``wd=int8+int8+fp32+fp32``) whose layer count must match the geometry
+    key's — a stale file from before a depth change would otherwise carry
+    entries every lookup misses forever (the unreachable-entry bug class:
+    a dead entry reads as "tuned" in audits while plans silently run
+    defaults).  Same rule for a recorded ``split`` outside [0, layers]:
+    ``plan_stack`` would ignore it, so the entry can never take effect.
+    """
+    parts = key.split("|")
+    if len(parts) != 4 or not parts[1].startswith("wd="):
+        return False  # unknown key shape: leave it to lookup misses
+    wd, geom = parts[1][3:], parts[2]
+    n_layers = len(geom.split(",")) if geom else 0
+    if "+" in wd and len(wd.split("+")) != n_layers:
+        return True
+    split = knobs.get("split")
+    if split is not None and not 0 <= int(split) <= n_layers:
+        return True
+    return False
+
+
 class TunedPlanCache:
     """The tuned-config store: load, lookup, put, save.
 
@@ -115,6 +139,8 @@ class TunedPlanCache:
                 knobs = _clean_knobs(ent["knobs"])
             except ValueError:
                 continue  # future-format entry: ignore, don't crash
+            if _entry_unreachable(key, knobs):
+                continue  # per-layer signature no longer matches: drop
             ok[key] = {"knobs": knobs, "meta": ent.get("meta", {})}
         return cls(ok, path=path)
 
@@ -192,16 +218,41 @@ def set_cache(cache: TunedPlanCache | None) -> TunedPlanCache | None:
     return old
 
 
-def canonical_weight_dtype(cfgs, weight_dtype: str | None = None) -> str | None:
+def mixed_signature(dtypes: Sequence[str]) -> str:
+    """Canonical per-layer dtype signature, e.g. ``int8+int8+fp32+fp32`` —
+    the ``wd=`` key component mixed-plan entries store and look up under."""
+    return "+".join(dtypes)
+
+
+def canonical_weight_dtype(cfgs, weight_dtype=None) -> str | None:
     """The storage dtype a plan request actually resolves to, exactly like
     ``plan_stack``: explicit argument first, then the cfgs' own
     ``weight_dtype``, then the native storage of the cfg dtype.  Both ends
     of the cache — ``lookup_tuned`` at plan time and the tune CLI at store
     time — key through here, so ``weight_dtype=None`` and its resolved
     spelling (e.g. ``"fp32"``) land on the same entry.
+
+    A per-layer sequence (mixed plans) canonicalizes to the
+    ``mixed_signature`` with each ``None`` entry resolved per-cfg — the
+    request's signature, so heterogeneous sweeps and lookups share keys.
     """
     from repro.core.quant import native_weight_dtype
 
+    def resolve_one(cfg, wd):
+        if wd is not None:
+            return wd
+        wd = getattr(cfg, "weight_dtype", None)
+        if wd is not None:
+            return wd
+        try:
+            return native_weight_dtype(cfg.dtype) or "?"
+        except Exception:
+            return "?"
+
+    if isinstance(weight_dtype, (tuple, list)):
+        return mixed_signature([
+            resolve_one(c, wd) for c, wd in zip(cfgs, weight_dtype)
+        ])
     wd = weight_dtype
     if wd is None and cfgs:
         wd = getattr(cfgs[0], "weight_dtype", None)
@@ -214,7 +265,7 @@ def canonical_weight_dtype(cfgs, weight_dtype: str | None = None) -> str | None:
 
 
 def lookup_tuned(cfgs, impl: str,
-                 weight_dtype: str | None = None) -> dict[str, Any] | None:
+                 weight_dtype=None) -> dict[str, Any] | None:
     """The executor's entry point: tuned knobs for a plan request, or None.
 
     The weight-dtype key is canonicalized via ``canonical_weight_dtype``,

@@ -139,6 +139,44 @@ def attach_costs(records: Sequence[dict]) -> list[dict]:
     return out
 
 
+#: (dims, weight_dtype, batch, t_len) -> compiled costs — the mixed-split
+#: balancer scores O(layers) candidate segments per plan and segments recur
+#: across candidates (every prefix split shares its fp32 tail with the
+#: next), so each distinct segment compiles exactly once per process
+_SEGMENT_COST_MEMO: dict[tuple, dict] = {}
+
+
+def segment_costs(cfgs: Sequence, weight_dtype: str | None, *,
+                  batch: int = 8, t_len: int = 8) -> dict:
+    """Compiled FLOP/byte counts of one homogeneous mixed-plan segment.
+
+    The serving-shaped ``fused_step`` step program — exactly what the
+    segment executes inside a mixed chain — memoized on geometry + storage
+    so the balancer's candidate sweep compiles each distinct segment once.
+    """
+    key = (
+        tuple((c.in_dim, c.hidden) for c in cfgs), weight_dtype,
+        batch, t_len,
+    )
+    if key not in _SEGMENT_COST_MEMO:
+        _SEGMENT_COST_MEMO[key] = config_costs(
+            list(cfgs), "fused_step", batch=batch, t_len=t_len,
+            weight_dtype=weight_dtype,
+        )
+    return _SEGMENT_COST_MEMO[key]
+
+
+def predict_segment_us(costs: dict, fit: "RooflineFit | None" = None) -> float:
+    """Predicted segment time from its counts: the fitted model when one is
+    available (``launch/tune.py --balanced`` passes the fresh fit), else
+    the datasheet roofline floors — deterministic either way."""
+    if fit is not None:
+        return fit.predict_us(costs["flops"], costs["bytes"])
+    return roofline_terms_from_counts(
+        costs["flops"], costs["bytes"]
+    )["t_bound_us"]
+
+
 # ---------------------------------------------------------------------------
 # the fit
 # ---------------------------------------------------------------------------

@@ -15,7 +15,11 @@ knob never sees grid points for it, so the sweep cannot propose a plan
   matmul; never proposed ``True`` for int8 packs (``s_x``/``s_h`` scale
   two different accumulators — the kernel refuses the combination);
 * ``n_chunks``   — wavefront hand-off granularity; only divisors of the
-  case's chunk count are legal.
+  case's chunk count are legal;
+* ``split``      — the mixed backend's int8-early/fp32-late storage split
+  point; interior splits only exist on stacks deeper than one layer, and
+  heterogeneous geometries (the GW autoencoder's (32, 8, 8, 32)) get the
+  full 0..L interior range.
 
 ``None`` on any axis means "the hand-set default" — every grid therefore
 contains the all-``None`` default point, which is what makes the
@@ -39,6 +43,7 @@ class KnobPoint:
     block_b: int | None = None
     fuse_gates: bool | None = None
     n_chunks: int | None = None
+    split: int | None = None
 
     def overrides(self) -> dict[str, Any]:
         """The non-default knobs, as ``plan_stack`` keyword arguments."""
@@ -82,6 +87,14 @@ def _n_chunks_axis(t_len: int | None) -> list[int | None]:
     return [None] + vals
 
 
+def _split_axis(n_layers: int) -> list[int | None]:
+    # every interior split plus both homogeneous ends (0 = all-fp32,
+    # L = all-int8); None = the plan's own default resolution (the cfgs'
+    # per-layer storage).  Single-layer stacks have no interior point but
+    # both ends still distinguish storage.
+    return [None] + list(range(0, n_layers + 1))
+
+
 def knob_space(cfgs: Sequence, impl: str, *,
                weight_dtype: str | None = None, batch: int = 8,
                t_len: int | None = None,
@@ -104,10 +117,24 @@ def knob_space(cfgs: Sequence, impl: str, *,
         axes["block_b"] = _block_b_axis(batch)
     if "fuse_gates" in spec.knobs:
         # int8 packs refuse fused gates (two accumulators, two scales);
-        # propose only the explicit-separate and default spellings there
-        axes["fuse_gates"] = [None, False] if wd == "int8" else [None, False, True]
+        # propose only the explicit-separate and default spellings there.
+        # Mixed plans may contain int8 segments at any proposed split, so
+        # the heterogeneous backend never proposes True either.
+        int8_possible = wd == "int8" or spec.heterogeneous or (
+            isinstance(wd, (tuple, list)) and "int8" in wd
+        )
+        axes["fuse_gates"] = (
+            [None, False] if int8_possible else [None, False, True]
+        )
     if "n_chunks" in spec.knobs:
         axes["n_chunks"] = _n_chunks_axis(t_len)
+    if "split" in spec.knobs:
+        # an explicit weight_dtype request (scalar or per-layer) pins the
+        # assignment; sweeping split on top of it would be rejected at
+        # plan time (the cfgs' own per-layer storage is fine — split wins)
+        axes["split"] = (
+            [None] if weight_dtype is not None else _split_axis(len(cfgs))
+        )
 
     if not axes:
         return [DEFAULT_POINT]

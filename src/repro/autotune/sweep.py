@@ -195,14 +195,19 @@ def smoke_cases() -> tuple[SweepCase, ...]:
     """The standard small sweep grid shared by the CI bench
     (``benchmarks/autotune_bench.py``) and ``launch/tune.py --smoke``:
     GW-small-shaped and 32-wide stacks, chunked-step and whole-wavefront
-    backends, one int8-storage case — every knob axis appears at least
-    once, nothing takes more than seconds to time."""
+    backends, one int8-storage case, and the mixed backend on the GW
+    nominal autoencoder geometry (its ``split`` axis proposes every
+    int8-early/fp32-late storage split, homogeneous ends included) —
+    every knob axis appears at least once, nothing takes more than
+    seconds to time."""
     return (
         sweep_case([(1, 9), (9, 9)], "fused_step", batch=8, t_len=8),
         sweep_case([(1, 9), (9, 9)], "fused_stack", batch=8, t_len=50),
         sweep_case([(1, 32), (32, 32)], "fused_step", batch=8, t_len=8,
                    weight_dtype="int8"),
         sweep_case([(1, 32), (32, 32)], "fused_stack", batch=8, t_len=50),
+        sweep_case([(1, 32), (32, 8), (8, 8), (8, 32)], "mixed",
+                   batch=8, t_len=8),
     )
 
 

@@ -48,6 +48,24 @@ class AutoencoderConfig:
     #: same as ``weight_dtype``) — e.g. int8 encoder, fp32 decoder head.
     weight_dtype: str | None = None
     dec_weight_dtype: str | None = None
+    #: per-LAYER weight storage (one entry per ``hidden`` layer; None entries
+    #: fall back to the segment-level fields above).  More than one distinct
+    #: storage inside a segment needs ``impl="mixed"`` — the heterogeneous
+    #: backend chains homogeneous sub-plans; every other backend packs one
+    #: dtype per segment and refuses at plan time.
+    weight_dtypes: tuple[str | None, ...] | None = None
+    #: in-kernel activation fake-quant on layer hand-offs (paper: 16-bit
+    #: activations, fp32 cell carry); plan-time knob of the fused backends
+    act_bits: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.weight_dtypes is not None and len(self.weight_dtypes) != len(
+            self.hidden
+        ):
+            raise ValueError(
+                f"weight_dtypes needs one entry per hidden layer "
+                f"({len(self.hidden)}); got {len(self.weight_dtypes)}"
+            )
 
     @property
     def boundary(self) -> int:
@@ -68,11 +86,14 @@ class AutoencoderConfig:
             # the first decoder layer consumes the repeated latent
             if i == self.boundary:
                 lx = self.hidden[self.boundary - 1]
+            wd = self.weight_dtype if i < self.boundary else dec_wd
+            if self.weight_dtypes is not None and self.weight_dtypes[i] is not None:
+                wd = self.weight_dtypes[i]
             cfgs.append(
                 LstmConfig(
                     in_dim=lx, hidden=h, dtype=self.dtype,
                     cell_dtype=self.cell_dtype, acts=self.acts,
-                    weight_dtype=self.weight_dtype if i < self.boundary else dec_wd,
+                    weight_dtype=wd,
                 )
             )
             lx = h
@@ -133,7 +154,7 @@ def _segment_executor(
     impl = cfg.impl if impl is None else impl
     return plan_stack(
         cfgs, impl=impl, placement=placement, mesh=mesh,
-        chunk_len=chunk_len, tune=tune,
+        chunk_len=chunk_len, act_bits=cfg.act_bits, tune=tune,
     ).bind(plist)
 
 

@@ -62,6 +62,14 @@ class BackendSpec:
     #: low-latency step kernel (one grid step, in-kernel layer-0 mvm_x),
     #: longer ones fall back to the wavefront kernel
     chunked_step: bool = False
+    #: honours the plan-time ``act_bits`` knob: in-kernel activation
+    #: fake-quant on the layer hand-off (paper: 16-bit activations, 32-bit
+    #: cell).  Only the local fused kernels implement it; other backends
+    #: reject ``act_bits`` at plan time
+    act_quant: bool = False
+    #: executes per-layer heterogeneous sub-plans (the ``mixed`` backend):
+    #: per-layer weight_dtype/geometry, chained through native-layout state
+    heterogeneous: bool = False
     #: plan-time knobs the autotuner may sweep for this backend — the
     #: single source of sweep legality (``autotune.space`` builds grids
     #: from this, ``plan_stack`` rejects explicit knobs outside it):
@@ -139,10 +147,21 @@ def quantized_weight_storage(cfg) -> str | None:
     (Historically lived in ``serve.engine``; kept re-exported there.)
     """
     native = native_weight_dtype(cfg.dtype)
-    for wd in (cfg.weight_dtype, cfg.dec_weight_dtype):
+    per_layer = getattr(cfg, "weight_dtypes", None) or ()
+    for wd in (cfg.weight_dtype, cfg.dec_weight_dtype, *per_layer):
         if wd is not None and wd != native:
             return wd
     return None
+
+
+def heterogeneous_weight_storage(cfg) -> bool:
+    """True when an AutoencoderConfig pins more than one distinct per-layer
+    weight storage — only the ``mixed`` backend can execute that; every
+    homogeneous backend's pack would refuse it."""
+    per_layer = getattr(cfg, "weight_dtypes", None)
+    if not per_layer:
+        return False
+    return len({wd or "native" for wd in per_layer}) > 1
 
 
 def check_weight_storage(wd: str | None, impl: str) -> None:
@@ -155,6 +174,13 @@ def check_weight_storage(wd: str | None, impl: str) -> None:
     """
     if wd is None:
         return
+    if isinstance(wd, (tuple, list)):
+        # per-layer storage request (mixed plans): quantized capability is
+        # needed as soon as ANY layer asks for narrow storage
+        narrow = [w for w in wd if w is not None and w != "fp32"]
+        if not narrow:
+            return
+        wd = narrow[0]
     if not get_backend(impl).quantized:
         legal = ", ".join(
             f"{n!r}" for n, s in BACKENDS.items() if s.quantized
@@ -195,6 +221,13 @@ def resolve_impl(cfg, impl: str | None):
             f"requested impl={impl!r} would swap acts={cfg.acts.name!r} for "
             f"its kernel-safe twin; keeping impl={cfg.impl!r} so scores stay "
             f"consistent with thresholds calibrated on it"
+        )
+        effective = cfg.impl
+    elif heterogeneous_weight_storage(cfg) and not get_backend(impl).heterogeneous:
+        reason = (
+            f"config pins heterogeneous per-layer weight_dtypes, which only "
+            f"the mixed backend executes; keeping impl={cfg.impl!r} over the "
+            f"requested impl={impl!r}"
         )
         effective = cfg.impl
     else:

@@ -34,6 +34,12 @@ Backends (see ``core.backends.BACKENDS``):
                              fused Pallas kernel, ppermute carrying only
                              segment-boundary hidden chunks
     wavefront                XLA-level single-host pipeline (vmap + roll)
+    mixed                    per-layer heterogeneous: maximal homogeneous
+                             runs become ordinary fused_step sub-plans
+                             (per-layer weight_dtype / chunk geometry)
+                             chained through native-layout state hand-off;
+                             tune="balanced" picks the int8/fp32 split that
+                             equalizes roofline-predicted per-segment cost
 
 ``core.lstm.lstm_stack_forward`` survives as a deprecated shim that builds
 a (cached) plan per call, so pre-executor call sites keep working.
@@ -81,8 +87,9 @@ class StackPlan:
     cfgs: tuple[LstmConfig, ...]
     impl: str
     #: resolved weight *storage* ("fp32"|"bf16"|"int8") for packed
-    #: backends; None for layer-by-layer backends (native storage)
-    weight_dtype: str | None = None
+    #: backends; a per-layer tuple for ``impl="mixed"``; None for
+    #: layer-by-layer backends (native storage)
+    weight_dtype: Any = None
     placement: str = "local"
     #: jax Mesh with a "stage" axis (sharded placement only)
     mesh: Any = None
@@ -98,10 +105,22 @@ class StackPlan:
     #: kernel's documented default: fused on compiled TPU, separate dots
     #: in interpret mode and always for int8)
     fuse_gates: bool | None = None
+    #: in-kernel activation fake-quant on the layer hand-off (paper: 16-bit
+    #: activations, fp32 cell); None = full-precision hand-off.  Only legal
+    #: on backends with the ``act_quant`` capability flag
+    act_bits: int | None = None
+    #: ``impl="mixed"`` split knob: layers [0, split) store int8, the rest
+    #: fp32 (the autotune sweep's one-dimensional split axis); None when
+    #: the per-layer dtypes came from an explicit tuple or the balancer
+    split: int | None = None
+    #: ``impl="mixed"`` only: the maximal homogeneous sub-plans (each an
+    #: ordinary fused_step StackPlan) the executor chains through
+    #: native-layout state hand-off
+    segments: tuple = ()
     #: where each resolved knob came from ("explicit" | "tuned" |
-    #: "default") — provenance metadata for operators (--plan-only),
-    #: excluded from equality/hash so tuned and hand-set plans with equal
-    #: knob values share jit traces
+    #: "default" | "balanced") — provenance metadata for operators
+    #: (--plan-only), excluded from equality/hash so tuned and hand-set
+    #: plans with equal knob values share jit traces
     knob_sources: tuple = dataclasses.field(default=(), compare=False)
 
     @property
@@ -116,10 +135,41 @@ class StackPlan:
         cache versus the hand-set defaults.
         """
         sources = dict(self.knob_sources)
-        return {
+        out = {
             k: (getattr(self, k), sources.get(k, "default"))
             for k in self.backend.knobs
         }
+        if self.act_bits is not None:
+            out["act_bits"] = (
+                self.act_bits, sources.get("act_bits", "default")
+            )
+        if self.backend.heterogeneous:
+            # per-layer storage is the mixed backend's defining knob: show
+            # it (and where the split came from) alongside the others
+            out["weight_dtype"] = (
+                self.weight_dtype, sources.get("weight_dtype", "default")
+            )
+        return out
+
+    def layer_assignment(self) -> list[dict[str, Any]]:
+        """Per-layer split of a mixed plan: one row per layer with its
+        resolved dtype, chunk_len and stage (= segment index) — what
+        ``launch/serve.py --plan-only`` prints for heterogeneous plans."""
+        if not self.backend.heterogeneous:
+            raise ValueError(
+                f"layer_assignment() is a mixed-plan surface; "
+                f"impl={self.impl!r} is homogeneous"
+            )
+        rows, layer = [], 0
+        for stage, seg in enumerate(self.segments):
+            for c in seg.cfgs:
+                rows.append({
+                    "layer": layer, "hidden": c.hidden, "stage": stage,
+                    "weight_dtype": seg.weight_dtype,
+                    "chunk_len": seg.chunk_len,
+                })
+                layer += 1
+        return rows
 
     @property
     def n_layers(self) -> int:
@@ -146,6 +196,32 @@ class StackPlan:
                 f"packed weights only apply to packing backends "
                 f"(impl={self.impl!r})"
             )
+        if spec.heterogeneous and self.cfgs:
+            from repro.kernels.lstm_stack.ops import (
+                check_packed_matches_cfgs,
+                pack_stack_cached,
+            )
+
+            # one PackedStack per homogeneous segment — each packed exactly
+            # as a hand-built fused_step plan over that segment would pack
+            if packed is None:
+                packs, i = [], 0
+                for seg in self.segments:
+                    n = seg.n_layers
+                    packs.append(pack_stack_cached(
+                        list(params[i:i + n]), list(seg.cfgs)))
+                    i += n
+                packed = tuple(packs)
+            else:
+                packed = tuple(packed)
+                if len(packed) != len(self.segments):
+                    raise ValueError(
+                        f"mixed plan has {len(self.segments)} segments but "
+                        f"{len(packed)} packs were supplied"
+                    )
+                for seg, pk in zip(self.segments, packed):
+                    check_packed_matches_cfgs(pk, seg.cfgs)
+            return StackExecutor(self, params, packed)
         if spec.packs and self.cfgs:
             from repro.kernels.lstm_stack.ops import (
                 check_packed_matches_cfgs,
@@ -166,10 +242,17 @@ class StackPlan:
             step += f" block_b={self.block_b}"
         if self.fuse_gates is not None:
             step += f" fuse_gates={self.fuse_gates}"
+        if self.act_bits is not None:
+            step += f" act_bits={self.act_bits}"
+        if self.segments:
+            step += f" segments={len(self.segments)}"
+        wd = self.weight_dtype
+        if isinstance(wd, tuple):
+            wd = "+".join(wd)
         return (
             f"impl={self.impl} placement={self.placement} "
             f"layers={self.n_layers} [{dims}] "
-            f"weight_dtype={self.weight_dtype or 'native'}{step}"
+            f"weight_dtype={wd or 'native'}{step}"
         )
 
 
@@ -186,7 +269,7 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
                        weight_dtype: str | None, placement: str,
                        mesh, n_chunks: int | None,
                        chunk_len: int | None, block_b: int | None,
-                       fuse_gates: bool | None,
+                       fuse_gates: bool | None, act_bits: int | None,
                        knob_sources: tuple) -> StackPlan:
     get_backend(impl)  # raises for unknown impl, even on empty segments
     if placement not in ("local", "sharded"):
@@ -249,6 +332,24 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
             f"n_chunks only applies to wavefront-pipelined backends "
             f"(impl='wavefront' or sharded placement); got impl={impl!r}"
         )
+    if act_bits is not None:
+        # numerics knob: never silently dropped — backends that cannot
+        # fake-quant the hand-off in-kernel (sharded, layer-by-layer,
+        # wavefront) refuse at plan time.  Note the sharded degrade above
+        # runs first, so fused_step + placement='sharded' + act_bits lands
+        # here with the sharded backend and raises as required.
+        if not spec.act_quant:
+            raise ValueError(
+                f"act_bits only applies to backends with in-kernel "
+                f"activation quantization (BackendSpec.act_quant: the local "
+                f"fused kernels); got impl={impl!r}"
+            )
+        from .quant import ACT_BITS
+
+        if act_bits not in ACT_BITS:
+            raise ValueError(
+                f"act_bits={act_bits!r} unsupported; choose from {ACT_BITS}"
+            )
 
     # -- step-chunk resolution ---------------------------------------------
     if chunk_len is not None and not spec.chunked_step:
@@ -323,31 +424,224 @@ def _plan_stack_cached(cfgs: tuple[LstmConfig, ...], impl: str,
         cfgs=cfgs, impl=impl, weight_dtype=resolved_wd,
         placement=placement, mesh=mesh, n_chunks=n_chunks,
         chunk_len=chunk_len, block_b=block_b, fuse_gates=fuse_gates,
+        act_bits=act_bits,
         knob_sources=tuple(sorted(sources.items())),
     )
 
 
 #: the knobs ``tune="cached"`` may resolve from the autotune store (must
 #: stay in sync with ``repro.autotune.cache.KNOB_NAMES``)
-_TUNABLE_KNOBS = ("chunk_len", "block_b", "fuse_gates", "n_chunks")
+_TUNABLE_KNOBS = ("chunk_len", "block_b", "fuse_gates", "n_chunks", "split")
+
+
+def _normalize_per_layer(name: str, value, n: int) -> tuple:
+    """Broadcast a scalar knob to per-layer, validate a sequence's length."""
+    if not isinstance(value, (tuple, list)):
+        return (value,) * n
+    value = tuple(value)
+    if len(value) != n:
+        raise ValueError(
+            f"per-layer {name} needs one entry per layer ({n}); got "
+            f"{len(value)}"
+        )
+    return value
+
+
+@functools.lru_cache(maxsize=64)
+def _plan_mixed_cached(cfgs: tuple[LstmConfig, ...], wds: tuple,
+                       chunk_lens: tuple, block_bs: tuple,
+                       fuse_gatess: tuple, act_bits: int | None,
+                       split: int | None,
+                       knob_sources: tuple) -> StackPlan:
+    """Build the mixed plan: segment on per-layer signature, sub-plan each.
+
+    Layers with equal (weight_dtype, chunk_len, block_b, fuse_gates,
+    compute dtype, cell dtype, activations) signature merge into one
+    maximal run; each run becomes an ordinary ``fused_step`` sub-plan via
+    ``_plan_stack_cached`` — so a mixed plan's segments are *identical*
+    (same memo entries) to the plans a caller would build by hand-chaining
+    homogeneous fused_step stacks, which is what makes the executor's
+    bit-equality guarantee hold by construction.
+    """
+    def sig(i: int):
+        c = cfgs[i]
+        return (wds[i], chunk_lens[i], block_bs[i], fuse_gatess[i],
+                c.dtype, c.cell_dtype, c.acts.name)
+
+    bounds, start = [], 0
+    for i in range(1, len(cfgs)):
+        if sig(i) != sig(i - 1):
+            bounds.append((start, i))
+            start = i
+    bounds.append((start, len(cfgs)))
+
+    subs = tuple(
+        _plan_stack_cached(
+            cfgs[a:b], "fused_step", wds[a], "local", None, None,
+            chunk_lens[a], block_bs[a], fuse_gatess[a], act_bits, (),
+        )
+        for a, b in bounds
+    )
+    # the sub-plans carry the resolved storage (native resolution applied);
+    # re-expand to per-layer for the top-level plan's weight_dtype tuple
+    resolved_wds = tuple(
+        sub.weight_dtype for sub in subs for _ in sub.cfgs
+    )
+    new_cfgs = tuple(c for sub in subs for c in sub.cfgs)
+
+    def uniform(values):
+        vals = {v for v in values if v is not None}
+        return vals.pop() if len(vals) == 1 else None
+
+    return StackPlan(
+        cfgs=new_cfgs, impl="mixed", weight_dtype=resolved_wds,
+        placement="local",
+        # conservative top-level chunk_len: chunks at or under it take the
+        # step kernel in EVERY segment (each segment still routes on its own)
+        chunk_len=min(sub.chunk_len for sub in subs),
+        block_b=uniform(block_bs), fuse_gates=uniform(fuse_gatess),
+        act_bits=act_bits, split=split, segments=subs,
+        knob_sources=knob_sources,
+    )
+
+
+def _plan_mixed(cfgs: tuple[LstmConfig, ...], weight_dtype, placement: str,
+                mesh, n_chunks, chunk_len, block_b, fuse_gates,
+                act_bits: int | None, split: int | None,
+                tune: str) -> StackPlan:
+    """Resolve per-layer weight storage for ``impl="mixed"`` and delegate.
+
+    Storage resolution precedence (first match wins, recorded in
+    ``knob_sources``):
+      1. explicit ``split=k`` (int8 layers [0, k), fp32 the rest) or an
+         explicit per-layer ``weight_dtype`` sequence / broadcast scalar
+      2. ``tune="cached"``: a tuned-store entry's ``split``
+      3. ``tune="balanced"``: the roofline-model balancer
+         (``core.stage_balance.choose_mixed_split``)
+      4. each cfg's own ``weight_dtype`` (native resolution)
+    """
+    if not cfgs:
+        return StackPlan(cfgs=(), impl=IDENTITY)
+    if placement != "local" or mesh is not None:
+        raise ValueError(
+            "impl='mixed' is single-host: heterogeneous segments chain "
+            "through local native-layout state hand-off; use "
+            "placement='local' (shard each homogeneous segment instead)"
+        )
+    if n_chunks is not None:
+        raise ValueError(
+            "n_chunks only applies to wavefront-pipelined backends; "
+            "impl='mixed' chains local fused_step segments"
+        )
+    n = len(cfgs)
+    sources = {
+        k: ("explicit" if v is not None else "default")
+        for k, v in (("chunk_len", chunk_len), ("block_b", block_b),
+                     ("fuse_gates", fuse_gates), ("split", split))
+    }
+    if act_bits is not None:
+        sources["act_bits"] = "explicit"
+
+    wds = None
+    if split is not None:
+        if weight_dtype is not None:
+            raise ValueError(
+                "pass either split= or weight_dtype=, not both: split is "
+                "shorthand for the int8-early/fp32-late prefix assignment"
+            )
+        if not 0 <= split <= n:
+            raise ValueError(
+                f"split={split} outside [0, {n}] for a {n}-layer stack"
+            )
+        wds = ("int8",) * split + ("fp32",) * (n - split)
+        sources["weight_dtype"] = "explicit"
+    elif isinstance(weight_dtype, tuple):
+        if len(weight_dtype) != n:
+            raise ValueError(
+                f"per-layer weight_dtype needs one entry per layer ({n}); "
+                f"got {len(weight_dtype)}"
+            )
+        wds = weight_dtype
+        sources["weight_dtype"] = "explicit"
+    elif weight_dtype is not None:
+        wds = (weight_dtype,) * n
+        sources["weight_dtype"] = "explicit"
+
+    if tune == "cached":
+        from repro.autotune.cache import lookup_tuned
+
+        tuned = lookup_tuned(cfgs, "mixed", weight_dtype) or {}
+        for k, v in (("chunk_len", chunk_len), ("block_b", block_b),
+                     ("fuse_gates", fuse_gates)):
+            if v is None and tuned.get(k) is not None:
+                sources[k] = "tuned"
+        chunk_len = chunk_len if chunk_len is not None else tuned.get("chunk_len")
+        block_b = block_b if block_b is not None else tuned.get("block_b")
+        fuse_gates = (
+            fuse_gates if fuse_gates is not None else tuned.get("fuse_gates")
+        )
+        if wds is None and tuned.get("split") is not None:
+            split = int(tuned["split"])
+            if 0 <= split <= n:
+                wds = ("int8",) * split + ("fp32",) * (n - split)
+                sources["split"] = sources["weight_dtype"] = "tuned"
+            else:  # stale entry for a different depth: ignore, keep defaults
+                split = None
+
+    if wds is None:
+        if tune == "balanced":
+            from .stage_balance import choose_mixed_split
+
+            choice = choose_mixed_split(cfgs)
+            wds = tuple(choice.dtypes)
+            split = choice.split
+            sources["split"] = sources["weight_dtype"] = "balanced"
+        else:
+            from repro.kernels.lstm_stack.ops import resolve_weight_dtype
+
+            wds = tuple(resolve_weight_dtype(c) for c in cfgs)
+
+    return _plan_mixed_cached(
+        cfgs, wds,
+        _normalize_per_layer("chunk_len", chunk_len, n),
+        _normalize_per_layer("block_b", block_b, n),
+        _normalize_per_layer("fuse_gates", fuse_gates, n),
+        act_bits, split, tuple(sorted(sources.items())),
+    )
 
 
 def plan_stack(cfgs: Sequence[LstmConfig], impl: str = "split", *,
-               weight_dtype: str | None = None, placement: str = "local",
+               weight_dtype=None, placement: str = "local",
                mesh=None, n_chunks: int | None = None,
-               chunk_len: int | None = None, block_b: int | None = None,
-               fuse_gates: bool | None = None,
+               chunk_len=None, block_b=None,
+               fuse_gates=None, act_bits: int | None = None,
+               split: int | None = None,
                tune: str = "default") -> StackPlan:
     """Resolve an execution plan for a stacked LSTM segment — exactly once.
 
     All impl-dependent legality lives here (plan time), not at call time:
     unknown backends, quantized storage on a non-fused backend, storage
     wider than compute, heterogeneous fused segments, non-divisible
-    sharded stage splits, and a knob on a backend that does not declare it
-    (``chunk_len``/``block_b``/``fuse_gates``/``n_chunks`` — see
+    sharded stage splits, ``act_bits`` on a backend without in-kernel
+    activation quant, and a knob on a backend that does not declare it
+    (``chunk_len``/``block_b``/``fuse_gates``/``n_chunks``/``split`` — see
     ``BackendSpec.knobs``) all raise *now*.  Plans are cached on their
     full argument tuple, so hot paths (including the deprecated
     ``lstm_stack_forward`` shim) re-resolve nothing.
+
+    ``impl="mixed"`` accepts per-layer heterogeneity: ``weight_dtype`` may
+    be a per-layer sequence (as may ``chunk_len``/``block_b``/
+    ``fuse_gates``), ``split=k`` is shorthand for int8 layers [0, k) and
+    fp32 for the rest, and ``tune="balanced"`` asks the fitted roofline
+    model to choose the split that equalizes per-segment predicted cost
+    (``core.stage_balance.choose_mixed_split``).  The plan carries one
+    ordinary ``fused_step`` sub-plan per maximal homogeneous run in
+    ``StackPlan.segments``; execution chains them through native-layout
+    state hand-off, bit-equal to hand-chaining the segments.
+
+    ``act_bits`` turns on in-kernel fake-quant of the layer hand-off
+    activations (the paper fixes activations to 16 bits with an fp32 cell
+    carry); only backends with the ``act_quant`` capability accept it.
 
     ``tune="cached"`` consults the autotune store
     (``repro.autotune.cache``) for measured-best knobs keyed by (geometry,
@@ -356,13 +650,38 @@ def plan_stack(cfgs: Sequence[LstmConfig], impl: str = "split", *,
     to the deterministic hand-set defaults otherwise — a missing or stale
     cache can never change behaviour, only speed.  Explicit knob arguments
     always win (manual pinning).  The resolution is recorded per knob in
-    ``StackPlan.knob_sources`` ("explicit" | "tuned" | "default") so
-    ``--plan-only`` can audit what a serving engine will actually run.
+    ``StackPlan.knob_sources`` ("explicit" | "tuned" | "default" |
+    "balanced") so ``--plan-only`` can audit what a serving engine will
+    actually run.
     """
-    if tune not in ("default", "cached"):
+    if tune not in ("default", "cached", "balanced"):
         raise ValueError(
             f"unknown tune mode {tune!r}; choose 'default' (hand-set knob "
-            "defaults) or 'cached' (consult the autotune store)"
+            "defaults), 'cached' (consult the autotune store) or "
+            "'balanced' (mixed plans: roofline-model split)"
+        )
+    if isinstance(weight_dtype, list):
+        weight_dtype = tuple(weight_dtype)
+    if get_backend(impl).heterogeneous:
+        return _plan_mixed(
+            tuple(cfgs), weight_dtype, placement, mesh, n_chunks,
+            chunk_len, block_b, fuse_gates, act_bits, split, tune,
+        )
+    if any(isinstance(v, (tuple, list))
+           for v in (weight_dtype, chunk_len, block_b, fuse_gates)):
+        raise ValueError(
+            "per-layer knob sequences (weight_dtype/chunk_len/block_b/"
+            f"fuse_gates) require impl='mixed'; got impl={impl!r}"
+        )
+    if split is not None:
+        raise ValueError(
+            f"split= is the mixed backend's per-layer storage knob; got "
+            f"impl={impl!r}"
+        )
+    if tune == "balanced":
+        raise ValueError(
+            "tune='balanced' chooses a per-layer storage split, which only "
+            f"impl='mixed' can execute; got impl={impl!r}"
         )
     knobs = {"chunk_len": chunk_len, "block_b": block_b,
              "fuse_gates": fuse_gates, "n_chunks": n_chunks}
@@ -370,12 +689,16 @@ def plan_stack(cfgs: Sequence[LstmConfig], impl: str = "split", *,
         k: ("explicit" if v is not None else "default")
         for k, v in knobs.items()
     }
+    if act_bits is not None:
+        sources["act_bits"] = "explicit"
     if tune == "cached" and cfgs:
         from repro.autotune.cache import lookup_tuned
 
         tuned = lookup_tuned(cfgs, impl, weight_dtype)
         if tuned:
             for k in _TUNABLE_KNOBS:
+                if k not in knobs:
+                    continue
                 v = tuned.get(k)
                 if v is not None and knobs[k] is None:
                     knobs[k] = v
@@ -383,7 +706,7 @@ def plan_stack(cfgs: Sequence[LstmConfig], impl: str = "split", *,
     return _plan_stack_cached(
         tuple(cfgs), impl, weight_dtype, placement, mesh,
         knobs["n_chunks"], knobs["chunk_len"], knobs["block_b"],
-        knobs["fuse_gates"], tuple(sorted(sources.items())),
+        knobs["fuse_gates"], act_bits, tuple(sorted(sources.items())),
     )
 
 
@@ -393,6 +716,7 @@ def clear_plan_cache() -> None:
     memo, so a new cache entry simply produces a new memo key — but tests
     and long sweeps use it to keep plan identities fresh and bounded."""
     _plan_stack_cached.cache_clear()
+    _plan_mixed_cached.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -407,7 +731,7 @@ class StackExecutor:
     donate state without re-tracing.  Construct via ``StackPlan.bind``.
     """
 
-    __slots__ = ("plan", "params", "packed", "_jit_steps")
+    __slots__ = ("plan", "params", "packed", "_jit_steps", "_subs")
 
     def __init__(self, plan: StackPlan, params: tuple,
                  packed: Any = None) -> None:
@@ -417,6 +741,22 @@ class StackExecutor:
         # bind-time cache for the jitted step callables (see ``step_jit``);
         # never a pytree leaf — rebuilt lazily after unflatten
         self._jit_steps: dict[bool, Any] = {}
+        # lazy per-segment sub-executors (mixed plans only)
+        self._subs: tuple | None = None
+
+    def _segment_executors(self) -> tuple["StackExecutor", ...]:
+        """One ordinary homogeneous executor per mixed-plan segment, over
+        this executor's own param/pack slices (cheap object construction —
+        safe to rebuild after pytree unflatten, including in-trace)."""
+        subs = self._subs
+        if subs is None:
+            built, i = [], 0
+            for sp, pk in zip(self.plan.segments, self.packed or ()):
+                n = sp.n_layers
+                built.append(StackExecutor(sp, self.params[i:i + n], pk))
+                i += n
+            subs = self._subs = tuple(built)
+        return subs
 
     # -- full-sequence execution -------------------------------------------
 
@@ -457,6 +797,8 @@ class StackExecutor:
         plan = self.plan
         if plan.impl == IDENTITY:
             return []
+        if plan.backend.heterogeneous:
+            return tuple(pk.zero_state(batch) for pk in self.packed)
         if plan.backend.state_layout == "packed":
             return self.packed.zero_state(batch)
         return [layer_zero_state(batch, c) for c in plan.cfgs]
@@ -476,6 +818,30 @@ class StackExecutor:
             return spec.step(self, xs, state)
         _, finals = spec.forward(self, xs, state)
         return finals
+
+    def step_with_output(self, xs: jax.Array, state):
+        """``step`` that also returns the last layer's hidden sequence at
+        real width — the segment hand-off the mixed backend chains
+        (``(h_seq (B, T, hidden[-1]), new native state)``).  Same kernels
+        and routing as ``step``, so chaining homogeneous executors through
+        this surface is bit-equal to running them standalone."""
+        self._require_stateful()
+        plan = self.plan
+        if plan.impl == IDENTITY:
+            return xs, state
+        spec = plan.backend
+        if spec.heterogeneous:
+            return _mixed_seq_call(self, xs, state)
+        if spec.state_layout == "packed":
+            if plan.placement == "sharded":
+                h, c = state
+                hs, h_f, c_f = _sharded_call(self, xs, h, c)
+            else:
+                hs, h_f, c_f = _fused_seq_call(self, xs, state)
+            return hs[..., : plan.hidden[-1]], (h_f, c_f)
+        # layer-by-layer backends: portable state IS native state
+        h_seq, finals = spec.forward(self, xs, state)
+        return h_seq, finals
 
     def step_jit(self, donate: bool = True):
         """The executor's own jitted ``step`` — cached at the executor, so a
@@ -512,6 +878,9 @@ class StackExecutor:
         plan = self.plan
         if plan.impl == IDENTITY:
             raise ValueError("identity executor has no hidden state")
+        if plan.backend.heterogeneous:
+            h, _ = state[-1]
+            return h[-1, :, : plan.hidden[-1]]
         if plan.backend.state_layout == "packed":
             h, _ = state
             return h[-1, :, : plan.hidden[-1]]
@@ -524,16 +893,27 @@ class StackExecutor:
         pack from the identity cache (long-lived servers must not leak
         strong refs to dead param leaves)."""
         new = self.plan.bind(params_list)
-        if self.packed is not None and new.packed is not self.packed:
+        if self.packed is not None:
             from repro.kernels.lstm_stack.ops import pack_cache_evict
 
-            pack_cache_evict(self.packed)
+            old = (self.packed if isinstance(self.packed, tuple)
+                   else (self.packed,))
+            cur = (new.packed if isinstance(new.packed, tuple)
+                   else (new.packed,))
+            stale = [p for p in old if all(p is not q for q in cur)]
+            if stale:
+                pack_cache_evict(*stale)
         return new
 
     @property
     def packed_bytes(self) -> int:
-        """Bytes the bound pack occupies (0 for non-packing backends)."""
-        return self.packed.packed_bytes if self.packed is not None else 0
+        """Bytes the bound pack occupies (0 for non-packing backends);
+        mixed executors sum their per-segment packs."""
+        if self.packed is None:
+            return 0
+        if isinstance(self.packed, tuple):
+            return sum(p.packed_bytes for p in self.packed)
+        return self.packed.packed_bytes
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"StackExecutor({self.plan.describe()})"
@@ -570,7 +950,7 @@ def _forward_fused(ex: StackExecutor, xs, state):
     # is the single fused dispatch shared with the deprecated shim
     return lstm_stack_forward_fused(
         list(ex.params), xs, list(ex.plan.cfgs), state, packed=ex.packed,
-        block_b=ex.plan.block_b,
+        block_b=ex.plan.block_b, act_bits=ex.plan.act_bits,
     )
 
 
@@ -608,15 +988,33 @@ def _forward_sharded(ex: StackExecutor, xs, state):
     return hs[..., : packed.hidden[-1]], packed.unpack_state(h_f, c_f)
 
 
-def _step_fused(ex: StackExecutor, xs, state):
+def _fused_seq_call(ex: StackExecutor, xs, state):
+    """The plan-routed local fused kernel call, keeping the hidden sequence:
+    (hs (B, T, W_padded), h_f, c_f).  Chunked-step plans route short chunks
+    to the step kernel exactly as ``_step_chunked`` does — the T comparison
+    is static (shape), so each jit trace contains exactly one kernel."""
+    plan = ex.plan
+    h, c = state
+    if plan.backend.chunked_step and xs.shape[1] <= plan.chunk_len:
+        from repro.kernels.lstm_stack.step import lstm_stack_step_op
+
+        return lstm_stack_step_op(
+            ex.packed.pad_input(xs), ex.packed.stacked, h, c,
+            acts=ex.packed.acts, weight_dtype=ex.packed.weight_dtype,
+            block_b=plan.block_b, fuse_gates=plan.fuse_gates,
+            act_bits=plan.act_bits,
+        )
     from repro.kernels.lstm_stack.ops import lstm_stack_op
 
-    h, c = state
-    _, h_f, c_f = lstm_stack_op(
+    return lstm_stack_op(
         ex.packed.pad_input(xs), ex.packed.stacked, h, c,
         acts=ex.packed.acts, weight_dtype=ex.packed.weight_dtype,
-        block_b=ex.plan.block_b,
+        block_b=plan.block_b, act_bits=plan.act_bits,
     )
+
+
+def _step_fused(ex: StackExecutor, xs, state):
+    _, h_f, c_f = _fused_seq_call(ex, xs, state)
     return h_f, c_f
 
 
@@ -624,18 +1022,9 @@ def _step_chunked(ex: StackExecutor, xs, state):
     """fused_step's hot path: short chunks hit the step kernel (one grid
     step, in-kernel layer-0 mvm_x, no time-major transpose); anything
     longer than the plan's chunk_len falls back to the wavefront kernel.
-    The T comparison is static (shape), so each jit trace contains exactly
-    one kernel — no runtime branch."""
-    if xs.shape[1] > ex.plan.chunk_len:
-        return _step_fused(ex, xs, state)
-    from repro.kernels.lstm_stack.step import lstm_stack_step_op
-
-    h, c = state
-    _, h_f, c_f = lstm_stack_step_op(
-        ex.packed.pad_input(xs), ex.packed.stacked, h, c,
-        acts=ex.packed.acts, weight_dtype=ex.packed.weight_dtype,
-        block_b=ex.plan.block_b, fuse_gates=ex.plan.fuse_gates,
-    )
+    The routing lives in ``_fused_seq_call`` (shared with the mixed
+    backend's segment hand-off)."""
+    _, h_f, c_f = _fused_seq_call(ex, xs, state)
     return h_f, c_f
 
 
@@ -643,6 +1032,36 @@ def _step_sharded(ex: StackExecutor, xs, state):
     h, c = state
     _, h_f, c_f = _sharded_call(ex, xs, h, c)
     return h_f, c_f
+
+
+def _mixed_seq_call(ex: StackExecutor, xs, state):
+    """Chain the mixed plan's segments through native-layout hand-off:
+    each segment's real-width hidden sequence feeds the next segment's
+    ``pad_input``.  Returns (last segment's h_seq, tuple of new per-segment
+    native states)."""
+    h_seq, new = xs, []
+    for sub, st in zip(ex._segment_executors(), state):
+        h_seq, st_new = sub.step_with_output(h_seq, st)
+        new.append(st_new)
+    return h_seq, tuple(new)
+
+
+def _forward_mixed(ex: StackExecutor, xs, state):
+    """Batch path: chain segment ``__call__``s with portable per-layer
+    state slices — identical to hand-chaining the homogeneous segments."""
+    h_seq, finals, i = xs, [], 0
+    for sub in ex._segment_executors():
+        n = sub.plan.n_layers
+        s = None if state is None else list(state[i:i + n])
+        h_seq, f = sub(h_seq, s)
+        finals.extend(f)
+        i += n
+    return h_seq, finals
+
+
+def _step_mixed(ex: StackExecutor, xs, state):
+    _, new = _mixed_seq_call(ex, xs, state)
+    return new
 
 
 def _forward_wavefront(ex: StackExecutor, xs, state):
@@ -676,13 +1095,19 @@ register_backend(BackendSpec(
     name="kernel", kernel_acts=True, forward=_forward_layerwise))
 register_backend(BackendSpec(
     name="fused_stack", packs=True, quantized=True, kernel_acts=True,
-    state_layout="packed", knobs=("block_b",),
+    state_layout="packed", act_quant=True, knobs=("block_b",),
     forward=_forward_fused, step=_step_fused))
 register_backend(BackendSpec(
     name="fused_step", packs=True, quantized=True, kernel_acts=True,
-    state_layout="packed", chunked_step=True,
+    state_layout="packed", chunked_step=True, act_quant=True,
     knobs=("chunk_len", "block_b", "fuse_gates"),
     forward=_forward_fused, step=_step_chunked))
+register_backend(BackendSpec(
+    name="mixed", packs=True, quantized=True, kernel_acts=True,
+    state_layout="packed", chunked_step=True, act_quant=True,
+    heterogeneous=True,
+    knobs=("chunk_len", "block_b", "fuse_gates", "split"),
+    forward=_forward_mixed, step=_step_mixed))
 register_backend(BackendSpec(
     name="fused_stack_sharded", packs=True, quantized=True,
     kernel_acts=True, sharded=True, state_layout="packed",

@@ -58,6 +58,37 @@ def quantize_tree(tree, total_bits: int = 16, frac_bits: int = 8):
     )
 
 
+#: ``act_bits`` plan-knob values the kernels accept (paper: activations are
+#: fixed to 16 bits; 8 is the aggressive point the accuracy study probes).
+ACT_BITS = (8, 16)
+
+
+def make_act_quant(total_bits: int) -> Callable[[jax.Array], jax.Array]:
+    """Activation fake-quant for the layer hand-off, as a plain callable.
+
+    Snaps to the ``fixed_quant`` ``<total_bits, total_bits//2>`` grid —
+    <16, 8> is the paper's activation precision — with the *same* op chain
+    as ``fixed_quant``'s forward pass so the reference path and the Pallas
+    kernels agree bit-for-bit.  Unlike ``fixed_quant`` this carries no
+    ``custom_jvp`` wrapper: Pallas kernels close over it like ``sigma``/
+    ``tanh``, and custom-JVP machinery does not trace inside a kernel body.
+    Inference-only by design (the serve path never differentiates it).
+    """
+    if total_bits not in ACT_BITS:
+        raise ValueError(
+            f"act_bits={total_bits!r} unsupported; choose from {ACT_BITS}"
+        )
+    frac_bits = total_bits // 2
+    scale = float(2**frac_bits)
+    lo = -(2.0 ** (total_bits - 1)) / scale
+    hi = (2.0 ** (total_bits - 1) - 1) / scale
+
+    def act_quant(x: jax.Array) -> jax.Array:
+        return jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+
+    return act_quant
+
+
 # ---------------------------------------------------------------------------
 # storage quantization for packed kernel weights (int8 on a fixed_quant grid)
 # ---------------------------------------------------------------------------

@@ -182,6 +182,130 @@ def plan_pipeline(
     )
 
 
+# ---------------------------------------------------------------------------
+# mixed-precision storage splits (the ``impl="mixed"`` plan balancer)
+# ---------------------------------------------------------------------------
+
+def candidate_splits(
+    n_layers: int, dtypes: tuple[str, str] = ("int8", "fp32")
+) -> tuple[tuple[str, ...], ...]:
+    """All prefix assignments ``dtypes[0]^k + dtypes[1]^(n-k)``, k=0..n.
+
+    The paper's heterogeneous-precision axis collapsed to one dimension:
+    early layers (closest to the raw strain input, widest matmuls on the GW
+    autoencoder) take the narrow storage, late layers keep full precision.
+    Includes both homogeneous ends, so the balancer's choice can degrade
+    gracefully to all-narrow or all-wide when the middle never wins.
+    """
+    if n_layers < 1:
+        raise ValueError(f"n_layers must be >= 1, got {n_layers}")
+    return tuple(
+        (dtypes[0],) * k + (dtypes[1],) * (n_layers - k)
+        for k in range(n_layers + 1)
+    )
+
+
+def segment_runs(dtypes: Sequence[str]) -> list[tuple[int, int]]:
+    """Maximal equal-dtype runs of a per-layer assignment, as half-open
+    ``[(start, end), ...]`` ranges — the segments a mixed plan executes."""
+    bounds, start = [], 0
+    for i in range(1, len(dtypes)):
+        if dtypes[i] != dtypes[i - 1]:
+            bounds.append((start, i))
+            start = i
+    bounds.append((start, len(dtypes)))
+    return bounds
+
+
+@dataclass(frozen=True)
+class MixedSplitChoice:
+    """The balancer's verdict: a per-layer dtype assignment + its scores."""
+
+    dtypes: tuple[str, ...]
+    #: prefix-split shorthand (count of leading narrow layers) when the
+    #: assignment is a prefix split; None for arbitrary assignments
+    split: int | None
+    #: half-open layer ranges of the homogeneous segments
+    segments: tuple[tuple[int, int], ...]
+    #: predicted cost (us) per segment, in chain order
+    segment_us: tuple[float, ...]
+    max_us: float
+    total_us: float
+    #: (dtypes, max_us, total_us) per scored candidate — the audit trail
+    #: ``launch/tune.py --balanced`` prints
+    scored: tuple = ()
+
+
+def _as_prefix_split(dtypes: Sequence[str]) -> int | None:
+    runs = segment_runs(dtypes)
+    if len(runs) == 1:
+        return len(dtypes) if dtypes[0] == "int8" else 0
+    if len(runs) == 2 and dtypes[0] == "int8" and dtypes[-1] == "fp32":
+        return runs[0][1]
+    return None
+
+
+def choose_mixed_split(
+    cfgs: Sequence,
+    *,
+    batch: int = 8,
+    t_len: int = 8,
+    candidates: Sequence[Sequence[str]] | None = None,
+    cost_fn: Callable | None = None,
+    fit=None,
+) -> MixedSplitChoice:
+    """Pick the per-layer storage split equalizing per-stage predicted cost.
+
+    Scores each candidate assignment by segmenting it into maximal
+    homogeneous runs and predicting each segment's serving-shaped step cost
+    with the roofline model (``cost_fn(seg_cfgs, weight_dtype) -> us``;
+    default: compiled FLOP/byte counts via ``autotune.model.segment_costs``
+    fed through the fitted model when ``fit`` is given, else the datasheet
+    roofline floors).  The winner minimizes the max per-segment cost — the
+    pipeline-II criterion of ``partition_layers``, applied to the storage
+    axis — with total predicted cost then candidate order breaking ties,
+    so the choice is deterministic.
+    """
+    cfgs = tuple(cfgs)
+    if not cfgs:
+        raise ValueError("choose_mixed_split needs at least one layer")
+    if candidates is None:
+        candidates = candidate_splits(len(cfgs))
+    if cost_fn is None:
+        def cost_fn(seg_cfgs, wd):  # noqa: F811 - documented default
+            from repro.autotune.model import predict_segment_us, segment_costs
+
+            return predict_segment_us(
+                segment_costs(seg_cfgs, wd, batch=batch, t_len=t_len),
+                fit=fit,
+            )
+
+    best, scored = None, []
+    for cand in candidates:
+        cand = tuple(cand)
+        if len(cand) != len(cfgs):
+            raise ValueError(
+                f"candidate {cand!r} has {len(cand)} entries for "
+                f"{len(cfgs)} layers"
+            )
+        runs = segment_runs(cand)
+        seg_us = tuple(
+            float(cost_fn(cfgs[a:b], cand[a])) for a, b in runs
+        )
+        max_us, total_us = max(seg_us), sum(seg_us)
+        scored.append((cand, max_us, total_us))
+        key = (max_us, total_us)
+        if best is None or key < best[0]:
+            best = (key, cand, runs, seg_us)
+    _, cand, runs, seg_us = best
+    return MixedSplitChoice(
+        dtypes=cand, split=_as_prefix_split(cand),
+        segments=tuple(runs), segment_us=seg_us,
+        max_us=max(seg_us), total_us=sum(seg_us),
+        scored=tuple(scored),
+    )
+
+
 def lstm_layer_cost(
     lx: int, lh: int, batch: int, timesteps: int, bytes_per_el: int = 2
 ) -> StageCost:

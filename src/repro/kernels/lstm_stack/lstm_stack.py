@@ -80,6 +80,7 @@ def _lstm_stack_kernel(
     sigma: Callable,
     tanh: Callable,
     quantized: bool,
+    act_quant: Callable | None,
 ):
     s = pl.program_id(1)
 
@@ -144,7 +145,12 @@ def _lstm_stack_kernel(
             g = tanh(pre[2])
             o = sigma(pre[3])
             c = f * c_scr[layer] + i * g      # fp32 tail (paper: 32-bit cell)
-            h = (o * tanh(c)).astype(h_scr.dtype)
+            h = o * tanh(c)
+            if act_quant is not None:
+                # activation fake-quant on the layer hand-off (paper fixes
+                # activations to 16 bits; the cell carry above stays fp32)
+                h = act_quant(h)
+            h = h.astype(h_scr.dtype)
             c_scr[layer] = c
             h_scr[layer] = h
             if layer == n_layers - 1:
@@ -168,6 +174,7 @@ def lstm_stack(
     block_b: int | None = None,
     sigma: Callable = jax.nn.sigmoid,
     tanh: Callable = jnp.tanh,
+    act_quant: Callable | None = None,
     interpret: bool = False,
     alias_state: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -224,6 +231,7 @@ def lstm_stack(
         sigma=sigma,
         tanh=tanh,
         quantized=quantized,
+        act_quant=act_quant,
     )
     grid = (n_b, n_s)
     t_last = t_len - 1

@@ -44,6 +44,7 @@ from repro.core.quant import (
     EXACT,
     int8_symmetric_quant,
     kernel_safe,
+    make_act_quant,
     native_weight_dtype,
 )
 from repro.kernels.lstm_scan.ops import (
@@ -154,7 +155,10 @@ def check_packed_weight_dtype(stacked: dict, weight_dtype: str, compute_dtype) -
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_b", "acts", "interpret", "alias_state", "weight_dtype"),
+    static_argnames=(
+        "block_b", "acts", "interpret", "alias_state", "weight_dtype",
+        "act_bits",
+    ),
 )
 def lstm_stack_op(
     xs: jax.Array,       # (B, T, W) layer-0 input, pre-padded to the pack width
@@ -167,6 +171,7 @@ def lstm_stack_op(
     interpret: bool | None = None,
     alias_state: bool = True,
     weight_dtype: str = "fp32",
+    act_bits: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (hs_last: (B, T, W), h_final: (L, B, W), c_final fp32)."""
     if interpret is None:
@@ -211,6 +216,7 @@ def lstm_stack_op(
         tanh=acts_k.tanh,
         interpret=interpret,
         alias_state=alias_state,
+        act_quant=make_act_quant(act_bits) if act_bits is not None else None,
     )
     hs = jnp.swapaxes(hs, 0, 1)[:batch]
     return hs, h_f[:, :batch], c_f[:, :batch]
@@ -476,6 +482,7 @@ def lstm_stack_forward_fused(
     *,
     packed: PackedStack | None = None,
     block_b: int | None = None,
+    act_bits: int | None = None,
 ) -> tuple[jax.Array, list[tuple[jax.Array, jax.Array]]]:
     """Backend for core.lstm.lstm_stack_forward(impl="fused_stack").
 
@@ -502,5 +509,6 @@ def lstm_stack_forward_fused(
     hs, h_f, c_f = lstm_stack_op(
         packed.pad_input(xs), packed.stacked, h0, c0, acts=packed.acts,
         weight_dtype=packed.weight_dtype, block_b=block_b,
+        act_bits=act_bits,
     )
     return hs[..., : packed.hidden[-1]], packed.unpack_state(h_f, c_f)

@@ -34,6 +34,7 @@ def lstm_stack_ref(
     scales: jax.Array | None = None,  # (L, 2) or (L, 2, 4) fp32, int8 packs
     sigma: Callable = jax.nn.sigmoid,
     tanh: Callable = jnp.tanh,
+    act_quant: Callable | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     n_layers, width = w_h.shape[0], w_h.shape[1]
     compute = h0.dtype
@@ -59,7 +60,12 @@ def lstm_stack_ref(
             g = tanh(gates[:, 2 * width : 3 * width])
             o = sigma(gates[:, 3 * width : 4 * width])
             c_new = f * c + i * g
-            h_new = (o * tanh(c_new)).astype(h.dtype)
+            h_new = o * tanh(c_new)
+            if act_quant is not None:
+                # mirror the kernels: hand-off fake-quant BEFORE the compute
+                # cast, cell carry untouched (paper: 32-bit cell state)
+                h_new = act_quant(h_new)
+            h_new = h_new.astype(h.dtype)
             return (h_new, c_new), h_new
 
         (h_f, c_f), hs = jax.lax.scan(

@@ -54,7 +54,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quant import EXACT, kernel_safe
+from repro.core.quant import EXACT, kernel_safe, make_act_quant
 from repro.kernels._compat import compiler_params
 from repro.kernels.lstm_scan.ops import _on_cpu, choose_blocking
 
@@ -86,6 +86,7 @@ def _lstm_stack_step_kernel(
     tanh: Callable,
     quantized: bool,
     fuse_gates: bool,
+    act_quant: Callable | None,
 ):
     compute = h0_ref.dtype
 
@@ -169,7 +170,12 @@ def _lstm_stack_step_kernel(
             g_ = tanh(pre[2])
             o = sigma(pre[3])
             c_new = f * c[layer] + i * g_      # fp32 tail (32-bit cell)
-            h_new = (o * tanh(c_new)).astype(compute)
+            h_new = o * tanh(c_new)
+            if act_quant is not None:
+                # hand-off fake-quant, identical placement to the wavefront
+                # kernel (h only — the fp32 cell carry stays full-width)
+                h_new = act_quant(h_new)
+            h_new = h_new.astype(compute)
             c[layer] = c_new
             h[layer] = h_new
         return h, c
@@ -216,6 +222,7 @@ def lstm_stack_step(
     interpret: bool = False,
     alias_state: bool = True,
     fuse_gates: bool = False,
+    act_quant: Callable | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Run a short chunk through the whole stack in one grid step per batch
     block.  Shapes pre-padded by the op wrapper; returns
@@ -270,6 +277,7 @@ def lstm_stack_step(
         tanh=tanh,
         quantized=quantized,
         fuse_gates=fuse_gates,
+        act_quant=act_quant,
     )
     out_shape = [
         jax.ShapeDtypeStruct((batch, t_len, width), h0.dtype),        # hs
@@ -309,7 +317,7 @@ def lstm_stack_step(
     jax.jit,
     static_argnames=(
         "block_b", "acts", "interpret", "alias_state", "weight_dtype",
-        "fuse_gates",
+        "fuse_gates", "act_bits",
     ),
 )
 def lstm_stack_step_op(
@@ -324,6 +332,7 @@ def lstm_stack_step_op(
     alias_state: bool = True,
     weight_dtype: str = "fp32",
     fuse_gates: bool | None = None,
+    act_bits: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Step-path twin of ``lstm_stack_op`` for short chunks.
 
@@ -373,5 +382,6 @@ def lstm_stack_step_op(
         interpret=interpret,
         alias_state=alias_state,
         fuse_gates=fuse_gates,
+        act_quant=make_act_quant(act_bits) if act_bits is not None else None,
     )
     return hs[:batch], h_f[:, :batch], c_f[:, :batch]

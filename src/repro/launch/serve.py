@@ -83,17 +83,24 @@ def main():
                     help="fused-stack weight storage (anomaly mode); int8 "
                          "keeps per-layer dequant scales in SMEM and shrinks "
                          "VMEM-resident weights ~4x")
+    ap.add_argument("--weight-dtypes", default=None, metavar="D0,D1,...",
+                    help="per-layer weight storage (comma list, one entry "
+                         "per LSTM layer, e.g. int8,fp32,fp32,int8); a "
+                         "heterogeneous assignment routes both segments "
+                         "through the mixed backend")
     ap.add_argument("--placement", choices=("local", "sharded"),
                     default="local",
                     help="fused-stack stage placement (anomaly mode): "
                          "'sharded' runs fused sub-stacks on mesh devices "
                          "with ppermute hand-off (fused_stack_sharded)")
-    ap.add_argument("--tune", choices=("default", "cached"),
+    ap.add_argument("--tune", choices=("default", "cached", "balanced"),
                     default="default",
                     help="'cached' resolves plan knobs from the autotune "
                          "store (runs/autotune/tuned.json; populate with "
                          "python -m repro.launch.tune) — --plan-only shows "
-                         "which knobs came from the cache")
+                         "which knobs came from the cache; 'balanced' (mixed "
+                         "backend only) lets the roofline model pick the "
+                         "int8/fp32 split that equalizes per-stage cost")
     ap.add_argument("--chunk-len", type=int, default=None,
                     help="step-kernel threshold: pushes with T <= chunk_len "
                          "run the low-latency step kernel (default: the "
@@ -192,6 +199,16 @@ def serve_anomaly(args):
     cfg = GW_MODELS[args.gw_model]
     if args.weight_dtype is not None:
         cfg = dataclasses.replace(cfg, weight_dtype=args.weight_dtype)
+    if args.weight_dtypes is not None or args.tune == "balanced":
+        # per-layer storage (and the model-chosen split) only execute on
+        # the heterogeneous backend — pin it so resolve_impl keeps it
+        wds = None
+        if args.weight_dtypes is not None:
+            wds = tuple(
+                None if w in ("", "native") else w
+                for w in args.weight_dtypes.split(",")
+            )
+        cfg = dataclasses.replace(cfg, weight_dtypes=wds, impl="mixed")
     params = init_autoencoder(jax.random.PRNGKey(0), cfg)
 
     if args.plan_only:
@@ -205,8 +222,15 @@ def serve_anomaly(args):
     engine = StreamingAnomalyEngine(
         params, cfg, batch=1, placement=args.placement,
         chunk_len=args.chunk_len, tune=args.tune,
+        impl=("mixed" if cfg.impl == "mixed" else "fused_step"),
     )
-    wd = engine._packed_enc.weight_dtype if engine._packed_enc else "n/a"
+    packed = engine._packed_enc
+    if packed is None:
+        wd = "n/a"
+    elif isinstance(packed, tuple):  # mixed: one pack per segment
+        wd = "+".join(p.weight_dtype for p in packed)
+    else:
+        wd = packed.weight_dtype
     print(f"{args.gw_model}: impl={engine.effective_impl} "
           f"(requested fused_step), placement={args.placement}, "
           f"weights={wd}, window={engine.window}, "
@@ -263,6 +287,7 @@ def serve_server(args, params, cfg, ds):
     engine = StreamingAnomalyEngine(
         params, cfg, batch=1, placement=args.placement,
         chunk_len=args.chunk_len, tune=args.tune,
+        impl=("mixed" if cfg.impl == "mixed" else "fused_step"),
     )
     health = None
     if args.sanitize != "off" or args.checkpoint or args.restore:
@@ -377,7 +402,8 @@ def print_plan(args, params, cfg) -> None:
     from repro.core.backends import resolve_impl
     from repro.core.autoencoder import segment_executors
 
-    cfg, effective, reason = resolve_impl(cfg, "fused_step")
+    requested = "mixed" if cfg.impl == "mixed" else "fused_step"
+    cfg, effective, reason = resolve_impl(cfg, requested)
     if reason is not None:
         print(f"note: {reason}")
     exec_enc, exec_dec = segment_executors(
@@ -385,7 +411,7 @@ def print_plan(args, params, cfg) -> None:
         chunk_len=args.chunk_len, tune=args.tune,
     )
     print(f"{args.gw_model}: resolved serving plan "
-          f"(window={cfg.timesteps}, requested fused_step, "
+          f"(window={cfg.timesteps}, requested {requested}, "
           f"tune={args.tune})")
     for name, ex in (("encoder", exec_enc), ("decoder", exec_dec)):
         print(f"  {name}: {ex.plan.describe()} "
@@ -398,6 +424,15 @@ def print_plan(args, params, cfg) -> None:
         ):
             shown = "auto" if value is None else value
             print(f"    {knob:<10} = {shown!s:<6} [{source}]")
+        if ex.plan.backend.heterogeneous:
+            # the mixed plan's defining output: which storage each layer
+            # resolved to, and which chain segment (stage) executes it
+            src = dict(ex.plan.knob_sources).get("weight_dtype", "default")
+            for row in ex.plan.layer_assignment():
+                print(f"    layer {row['layer']} (hidden={row['hidden']:<3})"
+                      f" -> {row['weight_dtype']:<5} "
+                      f"stage={row['stage']} "
+                      f"chunk_len={row['chunk_len']} [{src}]")
 
 
 if __name__ == "__main__":

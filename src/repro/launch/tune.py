@@ -95,6 +95,11 @@ def main(argv=None) -> int:
                     help="tuned-plan cache file to update")
     ap.add_argument("--no-cache", action="store_true",
                     help="measure and report only; leave the cache alone")
+    ap.add_argument("--balanced", action="store_true",
+                    help="after the fit, run the mixed-split balancer on "
+                         "each multi-layer case with the freshly fitted "
+                         "model: per-candidate predicted per-segment cost, "
+                         "and the split plan_stack(tune='balanced') picks")
     args = ap.parse_args(argv)
 
     if args.smoke == (args.dims is not None):
@@ -134,6 +139,33 @@ def main(argv=None) -> int:
     for tag, point, pred, meas, err in fit.per_record:
         print(f"  {tag:<42} {point:<28} model {pred:9.1f}us  "
               f"measured {meas:9.1f}us  ({err:+.1%})")
+
+    if args.balanced:
+        from repro.core.stage_balance import choose_mixed_split, segment_runs
+
+        print("\n== mixed-split balancer (fitted model) ==")
+        for case in cases:
+            cfgs = case.cfgs()
+            if len(cfgs) < 2:
+                continue  # single-layer stacks have no interior split
+            choice = choose_mixed_split(
+                cfgs, batch=case.batch, t_len=case.t_len, fit=fit,
+            )
+            print(f"  {case.tag}:")
+            for cand, max_us, total_us in choice.scored:
+                runs = segment_runs(cand)
+                segs = " | ".join(
+                    f"L{a}..{b - 1}:{cand[a]}" for a, b in runs
+                )
+                mark = " <- chosen" if cand == choice.dtypes else ""
+                print(f"    {'+'.join(cand):<24} max {max_us:8.3f}us "
+                      f"total {total_us:8.3f}us  [{segs}]{mark}")
+            per_seg = ", ".join(
+                f"L{a}..{b - 1}={us:.3f}us"
+                for (a, b), us in zip(choice.segments, choice.segment_us)
+            )
+            print(f"    chosen split={choice.split} "
+                  f"(per-segment predicted: {per_seg})")
 
     if args.no_cache:
         print("\n--no-cache: tuned-plan cache left untouched")

@@ -430,7 +430,17 @@ class StreamingAnomalyEngine:
         state leaves' shapes/dtypes or the meaning of their values."""
         cfg = self.cfg
         packed = self._packed_enc
-        return {
+        if packed is None:
+            wd = "native"
+        elif isinstance(packed, tuple):
+            # mixed plans bind one PackedStack per homogeneous segment; the
+            # per-layer storage signature is what the state values mean
+            wd = "+".join(
+                str(w) for w in self._exec_enc.plan.weight_dtype
+            )
+        else:
+            wd = packed.weight_dtype
+        fp = {
             "hidden": list(cfg.hidden),
             "boundary": int(cfg.boundary),
             "input_dim": int(cfg.input_dim),
@@ -441,10 +451,15 @@ class StreamingAnomalyEngine:
             "acts": cfg.acts.name,
             "carry_state": bool(self.carry_state),
             "state_layout": self._exec_enc.plan.backend.state_layout,
-            "weight_dtype": (
-                packed.weight_dtype if packed is not None else "native"
-            ),
+            "weight_dtype": wd,
         }
+        act_bits = self._exec_enc.plan.act_bits
+        if act_bits is not None:
+            # activation fake-quant changes the numeric meaning of carried
+            # state: a snapshot from a differently-quantized engine must be
+            # rejected, but fp32-path snapshots keep their pre-knob shape
+            fp["act_bits"] = int(act_bits)
+        return fp
 
     def snapshot(self) -> dict:
         """Serialize every stream's resident state to host memory: the

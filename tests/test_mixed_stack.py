@@ -1,0 +1,540 @@
+"""The ``mixed`` heterogeneous backend (ISSUE 10): per-layer storage splits.
+
+The backend's defining contract is *exact* equality with hand-chaining one
+homogeneous ``fused_step`` executor per maximal equal-dtype run — plan,
+pack, batch forward, chunked streaming step, snapshot/restore.  Around that
+core:
+
+* plan-time legality: ``split``/per-layer sequences/``tune="balanced"``/
+  ``act_bits`` are rejected exactly where the capability table says;
+* the roofline balancer (``choose_mixed_split``) minimizes the max
+  per-segment predicted cost, deterministically;
+* the autotune surfaces: the mixed ``split`` knob axis, tuned-cache
+  round-trip under the per-layer dtype signature, and the
+  unreachable-entry drop for stale signatures (PR-9 bug class);
+* the serving engine: mixed fingerprints carry the per-layer signature
+  (and ``act_bits``), and a mixed engine round-trips snapshots bit-equal.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backends import get_backend, resolve_impl
+from repro.core.executor import clear_plan_cache, plan_stack
+from repro.core.lstm import LstmConfig, init_lstm
+from repro.core.quant import make_act_quant
+from repro.core.stage_balance import (
+    candidate_splits,
+    choose_mixed_split,
+    segment_runs,
+)
+
+GW_DIMS = [(1, 32), (32, 8), (8, 8), (8, 32)]
+
+
+def _stack(key, dims):
+    cfgs = [LstmConfig(in_dim=a, hidden=b) for a, b in dims]
+    keys = jax.random.split(key, len(dims))
+    return [init_lstm(k, c) for k, c in zip(keys, cfgs)], cfgs
+
+
+def _chained(cfgs, params, wds, **plan_kw):
+    """One homogeneous fused_step executor per maximal equal-dtype run."""
+    subs = []
+    for a, b in segment_runs(wds):
+        plan = plan_stack(cfgs[a:b], impl="fused_step", weight_dtype=wds[a],
+                          **plan_kw)
+        subs.append(plan.bind(params[a:b]))
+    return subs
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def gw_stack():
+    params, cfgs = _stack(jax.random.PRNGKey(0), GW_DIMS)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 1))
+    return params, cfgs, xs
+
+
+# ---------------------------------------------------------------------------
+# bit-equality vs hand-chained homogeneous segments
+# ---------------------------------------------------------------------------
+
+class TestMixedBitEquality:
+    WDS = ("int8", "bf16", "bf16", "fp32")  # three segments, three storages
+
+    def test_batch_forward_equals_chained(self, gw_stack):
+        params, cfgs, xs = gw_stack
+        mex = plan_stack(cfgs, impl="mixed", weight_dtype=self.WDS).bind(params)
+        subs = _chained(cfgs, params, self.WDS)
+        h = xs
+        for sub in subs:
+            h = sub(h, return_state=False)
+        np.testing.assert_array_equal(
+            np.asarray(mex(xs, return_state=False)), np.asarray(h)
+        )
+
+    def test_forward_finals_equal_chained(self, gw_stack):
+        params, cfgs, xs = gw_stack
+        mex = plan_stack(cfgs, impl="mixed", weight_dtype=self.WDS).bind(params)
+        subs = _chained(cfgs, params, self.WDS)
+        got_h, got_finals = mex(xs, return_state=True)
+        h, finals = xs, []
+        for sub in subs:
+            h, f = sub(h, return_state=True)
+            finals.extend(f)
+        np.testing.assert_array_equal(np.asarray(got_h), np.asarray(h))
+        _leaves_equal(got_finals, finals)
+
+    def test_streaming_chunked_push_equals_chained(self, gw_stack):
+        """Uneven chunked pushes with carried (nonzero) state: the mixed
+        native state is exactly the tuple of per-segment native states."""
+        params, cfgs, xs = gw_stack
+        mex = plan_stack(cfgs, impl="mixed", weight_dtype=self.WDS).bind(params)
+        subs = _chained(cfgs, params, self.WDS)
+        state = mex.zero_state(xs.shape[0])
+        sub_states = [s.zero_state(xs.shape[0]) for s in subs]
+        for lo, hi in ((0, 3), (3, 8)):  # second push starts from nonzero
+            chunk = xs[:, lo:hi]
+            state = mex.step(chunk, state)
+            h = chunk
+            for i, sub in enumerate(subs):
+                h, sub_states[i] = sub.step_with_output(h, sub_states[i])
+        _leaves_equal(tuple(state), tuple(sub_states))
+        np.testing.assert_array_equal(
+            np.asarray(mex.last_hidden(state)),
+            np.asarray(subs[-1].last_hidden(sub_states[-1])),
+        )
+
+    def test_step_then_forward_consistent(self, gw_stack):
+        """K chunked steps ~= one whole-sequence forward (causality; only
+        up to float reassociation — XLA fuses the two programs
+        differently, so this is allclose, not the bit-equal contract)."""
+        params, cfgs, xs = gw_stack
+        mex = plan_stack(cfgs, impl="mixed", weight_dtype=self.WDS).bind(params)
+        state = mex.zero_state(xs.shape[0])
+        for lo, hi in ((0, 4), (4, 8)):
+            state = mex.step(xs[:, lo:hi], state)
+        _, finals = mex(xs, return_state=True)
+        np.testing.assert_allclose(
+            np.asarray(mex.last_hidden(state)),
+            np.asarray(finals[-1][0]), rtol=1e-4, atol=1e-6,
+        )
+
+    def test_update_params_rebinds_all_segments(self, gw_stack):
+        params, cfgs, xs = gw_stack
+        mex = plan_stack(cfgs, impl="mixed", weight_dtype=self.WDS).bind(params)
+        params2, _ = _stack(jax.random.PRNGKey(9), GW_DIMS)
+        mex2 = mex.update_params(params2)
+        subs2 = _chained(cfgs, params2, self.WDS)
+        h = xs
+        for sub in subs2:
+            h = sub(h, return_state=False)
+        np.testing.assert_array_equal(
+            np.asarray(mex2(xs, return_state=False)), np.asarray(h)
+        )
+        assert mex2.packed_bytes == sum(s.packed_bytes for s in subs2)
+
+
+# ---------------------------------------------------------------------------
+# plan-time resolution + legality
+# ---------------------------------------------------------------------------
+
+class TestMixedPlan:
+    def test_split_shorthand(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        plan = plan_stack(cfgs, impl="mixed", split=2)
+        assert plan.weight_dtype == ("int8", "int8", "fp32", "fp32")
+        assert plan.split == 2 and len(plan.segments) == 2
+        assert plan.knob_provenance()["weight_dtype"][1] == "explicit"
+
+    def test_homogeneous_ends(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        assert plan_stack(cfgs, impl="mixed", split=0).weight_dtype == (
+            "fp32",) * 4
+        assert plan_stack(cfgs, impl="mixed", split=4).weight_dtype == (
+            "int8",) * 4
+
+    def test_split_conflicts_with_weight_dtype(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        with pytest.raises(ValueError, match="not both"):
+            plan_stack(cfgs, impl="mixed", split=2, weight_dtype="int8")
+
+    def test_split_out_of_range(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        with pytest.raises(ValueError, match="outside"):
+            plan_stack(cfgs, impl="mixed", split=5)
+
+    def test_per_layer_sequence_wrong_length(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        with pytest.raises(ValueError, match="one entry per layer"):
+            plan_stack(cfgs, impl="mixed", weight_dtype=("int8", "fp32"))
+
+    def test_mixed_knobs_rejected_on_homogeneous_backends(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        with pytest.raises(ValueError, match="mixed"):
+            plan_stack(cfgs, impl="fused_step", split=2)
+        with pytest.raises(ValueError, match="mixed"):
+            plan_stack(cfgs, impl="fused_step",
+                       weight_dtype=("int8",) * 2 + ("fp32",) * 2)
+        with pytest.raises(ValueError, match="mixed"):
+            plan_stack(cfgs, impl="fused_step", tune="balanced")
+
+    def test_mixed_rejects_sharding_and_n_chunks(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        with pytest.raises(ValueError, match="single-host"):
+            plan_stack(cfgs, impl="mixed", placement="sharded")
+        with pytest.raises(ValueError, match="n_chunks"):
+            plan_stack(cfgs, impl="mixed", n_chunks=2)
+
+    def test_layer_assignment_rows(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        plan = plan_stack(cfgs, impl="mixed", split=2)
+        rows = plan.layer_assignment()
+        assert [r["layer"] for r in rows] == [0, 1, 2, 3]
+        assert [r["weight_dtype"] for r in rows] == [
+            "int8", "int8", "fp32", "fp32"]
+        assert [r["stage"] for r in rows] == [0, 0, 1, 1]
+        with pytest.raises(ValueError, match="mixed-plan surface"):
+            plan_stack(cfgs, impl="fused_step").layer_assignment()
+
+    def test_describe_shows_signature(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        d = plan_stack(cfgs, impl="mixed", split=2).describe()
+        assert "int8+int8+fp32+fp32" in d and "segments=2" in d
+
+    def test_plans_are_memoized(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        a = plan_stack(cfgs, impl="mixed", split=2)
+        b = plan_stack(cfgs, impl="mixed", split=2)
+        assert a is b
+
+    def test_segments_are_homogeneous_fused_step_plans(self, gw_stack):
+        """A mixed plan's sub-plans are ordinary homogeneous fused_step
+        plans over the segment slices — bit-equality with hand-chaining
+        holds by construction."""
+        _, cfgs, _ = gw_stack
+        plan = plan_stack(cfgs, impl="mixed", split=2)
+        hand = plan_stack(cfgs[:2], impl="fused_step", weight_dtype="int8")
+        seg = plan.segments[0]
+        assert seg.impl == "fused_step"
+        assert seg.cfgs == hand.cfgs
+        assert seg.weight_dtype == hand.weight_dtype == "int8"
+        assert (seg.chunk_len, seg.block_b, seg.fuse_gates) == (
+            hand.chunk_len, hand.block_b, hand.fuse_gates)
+
+    def test_resolve_impl_keeps_mixed_for_heterogeneous_cfg(self):
+        from repro.core.autoencoder import AutoencoderConfig
+
+        cfg = AutoencoderConfig(
+            hidden=(32, 8, 8, 32), latent_boundary=2, impl="mixed",
+            weight_dtypes=("int8", "fp32", "fp32", "int8"),
+        )
+        cfg2, eff, reason = resolve_impl(cfg, "fused_step")
+        assert eff == "mixed" and "mixed" in reason
+
+    def test_autoencoder_weight_dtypes_length_validated(self):
+        from repro.core.autoencoder import AutoencoderConfig
+
+        with pytest.raises(ValueError, match="one entry per hidden layer"):
+            AutoencoderConfig(hidden=(9, 9), weight_dtypes=("int8",))
+
+
+# ---------------------------------------------------------------------------
+# act_bits: in-kernel activation fake-quant on the layer hand-off
+# ---------------------------------------------------------------------------
+
+class TestActBits:
+    def test_outputs_snap_to_grid(self, gw_stack):
+        """Every hand-off activation lands on the <bits, bits/2> grid."""
+        params, cfgs, xs = gw_stack
+        for bits in (16, 8):
+            ex = plan_stack(cfgs, impl="fused_step", act_bits=bits).bind(params)
+            out = np.asarray(ex(xs, return_state=False))
+            scale = 2.0 ** (bits // 2)
+            np.testing.assert_array_equal(out * scale, np.round(out * scale))
+
+    def test_matches_manual_quant_reference(self, gw_stack):
+        """act_bits through the kernel == make_act_quant applied per step
+        in a pure-python chained reference over single-layer segments."""
+        params, cfgs, xs = gw_stack
+        ex = plan_stack(cfgs, impl="fused_step", act_bits=16).bind(params)
+        got = np.asarray(ex(xs, return_state=False))
+
+        # reference: per-layer fused executors, re-quantizing by hand would
+        # double-apply — instead chain single-layer act_bits plans, which
+        # must compose exactly like the one fused call (causality + the
+        # quantizer being idempotent on its own grid)
+        h = xs
+        for p, c in zip(params, cfgs):
+            sub = plan_stack([c], impl="fused_step", act_bits=16).bind([p])
+            h = sub(h, return_state=False)
+        np.testing.assert_allclose(got, np.asarray(h), rtol=1e-6, atol=1e-6)
+
+    def test_quantizer_is_idempotent(self):
+        q = make_act_quant(16)
+        x = jnp.linspace(-200.0, 200.0, 1001)
+        np.testing.assert_array_equal(np.asarray(q(q(x))), np.asarray(q(x)))
+
+    def test_mixed_threads_act_bits_to_all_segments(self, gw_stack):
+        params, cfgs, xs = gw_stack
+        wds = ("int8", "int8", "fp32", "fp32")
+        mex = plan_stack(cfgs, impl="mixed", weight_dtype=wds,
+                         act_bits=16).bind(params)
+        subs = _chained(cfgs, params, wds, act_bits=16)
+        h = xs
+        for sub in subs:
+            h = sub(h, return_state=False)
+        np.testing.assert_array_equal(
+            np.asarray(mex(xs, return_state=False)), np.asarray(h)
+        )
+        assert all(sp.act_bits == 16 for sp in mex.plan.segments)
+
+    def test_rejected_without_capability(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        for impl in ("naive", "split", "kernel", "wavefront"):
+            assert not get_backend(impl).act_quant
+            with pytest.raises(ValueError, match="act_bits"):
+                plan_stack(cfgs, impl=impl, act_bits=16)
+
+    def test_rejects_unsupported_widths(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        with pytest.raises(ValueError, match="act_bits"):
+            plan_stack(cfgs, impl="fused_step", act_bits=4)
+
+    def test_provenance_includes_act_bits(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        prov = plan_stack(
+            cfgs, impl="fused_step", act_bits=16
+        ).knob_provenance()
+        assert prov["act_bits"] == (16, "explicit")
+
+
+# ---------------------------------------------------------------------------
+# the balancer
+# ---------------------------------------------------------------------------
+
+class TestBalancer:
+    def test_candidate_splits_cover_both_ends(self):
+        cands = candidate_splits(3)
+        assert cands[0] == ("fp32",) * 3 and cands[-1] == ("int8",) * 3
+        assert len(cands) == 4
+
+    def test_segment_runs(self):
+        assert segment_runs(("int8", "int8", "fp32", "fp32")) == [(0, 2), (2, 4)]
+        assert segment_runs(("fp32",) * 3 ) == [(0, 3)]
+
+    def test_minimizes_max_segment_cost(self, gw_stack):
+        """Injected cost model: int8 makes wide layers cheap — the balancer
+        must pick the split equalizing the two stages, not the total-min."""
+        _, cfgs, _ = gw_stack
+
+        def cost_fn(seg_cfgs, wd):
+            per = {32: 8.0, 8: 1.0}
+            k = 0.25 if wd == "int8" else 1.0
+            return k * sum(per[c.hidden] for c in seg_cfgs)
+
+        choice = choose_mixed_split(cfgs, cost_fn=cost_fn)
+        # exhaustive check of the objective over the candidate set
+        best = min(
+            choice.scored, key=lambda s: (s[1], s[2], choice.scored.index(s))
+        )
+        assert choice.max_us == best[1]
+        assert choice.dtypes in [s[0] for s in choice.scored]
+        assert choice.split == sum(d == "int8" for d in choice.dtypes)
+
+    def test_deterministic(self, gw_stack):
+        _, cfgs, _ = gw_stack
+        c1 = choose_mixed_split(cfgs, cost_fn=lambda s, w: float(len(s)))
+        c2 = choose_mixed_split(cfgs, cost_fn=lambda s, w: float(len(s)))
+        assert c1 == c2
+
+    def test_balanced_tune_routes_through_planner(self, gw_stack):
+        _, cfgs, _ = gw_stack
+
+        plan = plan_stack(cfgs, impl="mixed", tune="balanced")
+        prov = plan.knob_provenance()
+        assert prov["weight_dtype"][1] == "balanced"
+        assert plan.split is not None
+        # and the choice agrees with calling the balancer directly
+        assert plan.weight_dtype == choose_mixed_split(cfgs).dtypes
+
+
+# ---------------------------------------------------------------------------
+# autotune surfaces: split axis, tuned cache, unreachable-entry drop
+# ---------------------------------------------------------------------------
+
+class TestAutotuneMixed:
+    def test_knob_space_offers_splits_and_all_legal(self, gw_stack):
+        from repro.autotune.space import check_legal, knob_space
+
+        _, cfgs, _ = gw_stack
+        points = knob_space(cfgs, "mixed", batch=4, t_len=8)
+        splits = {p.split for p in points}
+        assert splits == {None, 0, 1, 2, 3, 4}
+        assert not any(p.fuse_gates is True for p in points)
+        for p in points:
+            check_legal(cfgs, "mixed", p)
+
+    def test_explicit_weight_dtype_suppresses_split_axis(self, gw_stack):
+        from repro.autotune.space import check_legal, knob_space
+
+        _, cfgs, _ = gw_stack
+        points = knob_space(cfgs, "mixed", weight_dtype="int8", batch=4)
+        assert {p.split for p in points} == {None}
+        for p in points:
+            check_legal(cfgs, "mixed", p, weight_dtype="int8")
+
+    def test_tuned_split_round_trip(self, gw_stack):
+        from repro.autotune.cache import (
+            TunedPlanCache,
+            canonical_weight_dtype,
+            set_cache,
+        )
+
+        _, cfgs, _ = gw_stack
+        dims = tuple((c.in_dim, c.hidden) for c in cfgs)
+        cache = TunedPlanCache()
+        cache.put(dims, "mixed", canonical_weight_dtype(cfgs, None),
+                  {"split": 3, "chunk_len": 4})
+        old = set_cache(cache)
+        try:
+            clear_plan_cache()
+            plan = plan_stack(cfgs, impl="mixed", tune="cached")
+            assert plan.weight_dtype == ("int8",) * 3 + ("fp32",)
+            assert plan.chunk_len == 4
+            prov = plan.knob_provenance()
+            assert prov["split"][1] == "tuned"
+            assert prov["weight_dtype"][1] == "tuned"
+            # an explicit split always beats the tuned entry
+            exp = plan_stack(cfgs, impl="mixed", tune="cached", split=1)
+            assert exp.weight_dtype == ("int8",) + ("fp32",) * 3
+        finally:
+            set_cache(old)
+            clear_plan_cache()
+
+    def test_unreachable_entries_dropped_on_load(self, tmp_path):
+        """A stale mixed entry whose per-layer signature no longer matches
+        the geometry depth (or whose split is out of range) reads as
+        'tuned' in audits while every lookup misses — drop it at load."""
+        from repro.autotune.cache import TunedPlanCache, entry_key
+
+        dims = tuple((a, b) for a, b in GW_DIMS)
+        fp = "cpu:cpu:1"
+        stale_sig = entry_key(dims, "mixed", "int8+fp32", fp)  # 2 != 4 layers
+        stale_split = entry_key(dims, "mixed", "fp32", fp)
+        good = entry_key(dims, "mixed", "int8+int8+fp32+fp32", fp)
+        cache = TunedPlanCache({
+            stale_sig: {"knobs": {"chunk_len": 4}, "meta": {}},
+            stale_split: {"knobs": {"split": 9}, "meta": {}},
+            good: {"knobs": {"chunk_len": 4}, "meta": {}},
+        })
+        path = str(tmp_path / "tuned.json")
+        cache.save(path)
+        loaded = TunedPlanCache.load(path)
+        assert set(loaded.entries) == {good}
+
+    def test_knob_names_match_planner(self):
+        from repro.autotune.cache import KNOB_NAMES
+        from repro.core.executor import _TUNABLE_KNOBS
+
+        assert set(KNOB_NAMES) == set(_TUNABLE_KNOBS)
+
+
+# ---------------------------------------------------------------------------
+# serving engine: fingerprints + snapshot round-trip
+# ---------------------------------------------------------------------------
+
+T = 12
+
+
+@pytest.fixture(scope="module")
+def mixed_engine_cfg():
+    from repro.core.autoencoder import AutoencoderConfig, init_autoencoder
+
+    cfg = AutoencoderConfig(
+        hidden=(32, 8, 8, 32), latent_boundary=2, timesteps=T, impl="mixed",
+        weight_dtypes=("int8", "fp32", "fp32", "int8"),
+    )
+    params = init_autoencoder(jax.random.PRNGKey(5), cfg)
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(6), (2, T, 1)))
+    return params, cfg, x
+
+
+class TestMixedEngine:
+    def _engine(self, params, cfg, **kw):
+        from repro.serve.engine import StreamingAnomalyEngine
+
+        return StreamingAnomalyEngine(
+            params, cfg, batch=2, window=T, impl="mixed", **kw
+        )
+
+    def test_fingerprint_carries_signature(self, mixed_engine_cfg):
+        params, cfg, _ = mixed_engine_cfg
+        fp = self._engine(params, cfg).fingerprint()
+        # encoder segment layers 0..1 -> int8+fp32
+        assert fp["weight_dtype"] == "int8+fp32"
+        assert "act_bits" not in fp
+
+    def test_fingerprint_carries_act_bits(self, mixed_engine_cfg):
+        params, cfg, _ = mixed_engine_cfg
+        cfg16 = dataclasses.replace(cfg, act_bits=16)
+        assert self._engine(params, cfg16).fingerprint()["act_bits"] == 16
+
+    def test_snapshot_roundtrip_bitequal(self, mixed_engine_cfg, tmp_path):
+        params, cfg, x = mixed_engine_cfg
+        path = str(tmp_path / "mixed.npz")
+        a = self._engine(params, cfg)
+        a.push(x[:, :5])                      # mid-window through 2 segments
+        a.save_snapshot(path)
+        b = self._engine(params, cfg)
+        b.restore(path)
+        assert b.filled == 5
+        (sa,) = a.push(x[:, 5:])
+        (sb,) = b.push(x[:, 5:])
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+    def test_fingerprint_gates_storage_split(self, mixed_engine_cfg, tmp_path):
+        from repro.serve.health import SnapshotMismatchError
+
+        params, cfg, x = mixed_engine_cfg
+        path = str(tmp_path / "mixed.npz")
+        self._engine(params, cfg).save_snapshot(path)
+        other = dataclasses.replace(
+            cfg, weight_dtypes=("fp32", "fp32", "fp32", "int8")
+        )
+        with pytest.raises(SnapshotMismatchError, match="weight_dtype"):
+            self._engine(params, other).restore(path)
+
+    def test_fingerprint_gates_act_bits(self, mixed_engine_cfg, tmp_path):
+        from repro.serve.health import SnapshotMismatchError
+
+        params, cfg, _ = mixed_engine_cfg
+        path = str(tmp_path / "mixed.npz")
+        self._engine(params, cfg).save_snapshot(path)
+        quant = dataclasses.replace(cfg, act_bits=16)
+        with pytest.raises(SnapshotMismatchError, match="act_bits"):
+            self._engine(params, quant).restore(path)
+
+    def test_chunked_push_matches_oneshot_scores(self, mixed_engine_cfg):
+        params, cfg, x = mixed_engine_cfg
+        a = self._engine(params, cfg)
+        (one,) = a.push(x)
+        b = self._engine(params, cfg)
+        scores = []
+        for lo, hi in ((0, 4), (4, 9), (9, T)):
+            scores += b.push(x[:, lo:hi])
+        (chunked,) = scores
+        np.testing.assert_allclose(
+            np.asarray(one), np.asarray(chunked), rtol=1e-6, atol=1e-7
+        )
